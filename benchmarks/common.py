@@ -1,0 +1,42 @@
+"""Shared benchmark plumbing: runners, CSV writing, result tables."""
+
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+
+
+def write_csv(name: str, rows: list[dict]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".csv")
+    if rows:
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    return path
+
+
+def fmt_table(rows: list[dict], cols: list[str] | None = None) -> str:
+    if not rows:
+        return "(empty)"
+    cols = cols or list(rows[0].keys())
+    widths = {c: max(len(str(c)), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    line = "  ".join(str(c).ljust(widths[c]) for c in cols)
+    out = [line, "-" * len(line)]
+    for r in rows:
+        out.append("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))
+    return "\n".join(out)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.perf_counter() - self.t0

@@ -1,0 +1,38 @@
+"""Paper Fig. 12: performance under constrained prefetch-cache sizes.
+
+Leap's timeliness means prefetched pages are consumed (and eagerly freed)
+quickly, so shrinking the cache to O(1) MB-equivalent slots costs only a few
+percent. Sweep cache capacity; report completion time relative to unlimited.
+"""
+
+from __future__ import annotations
+
+from repro.core import traces
+from repro.core.cache import PageCache
+from repro.core.prefetcher import make_prefetcher
+from repro.core.simulator import simulate
+
+from .common import write_csv
+
+APPS = ("powergraph", "numpy", "voltdb", "memcached")
+SIZES = (8, 16, 64, 4096)       # slots; 4096 ~ "unlimited"
+
+
+def run() -> tuple[list[dict], dict]:
+    rows, derived = [], {}
+    for app in APPS:
+        tr = traces.TRACES[app](n=12000)
+        base_t = None
+        for cap in sorted(SIZES, reverse=True):
+            r = simulate(tr, make_prefetcher("leap"),
+                         PageCache(cap, eviction="eager"), "rdma_lean")
+            if base_t is None:
+                base_t = r.total_time
+            drop = 100 * (r.total_time - base_t) / base_t
+            rows.append({"app": app, "cache_slots": cap,
+                         "completion_ms": round(r.total_time / 1e3, 1),
+                         "drop_vs_unlimited_pct": round(drop, 2)})
+            if cap == min(SIZES):
+                derived[f"{app}_min_cache_drop_pct"] = round(drop, 2)
+    write_csv("fig12_cache_size", rows)
+    return rows, derived

@@ -1,0 +1,89 @@
+"""Per-cell analytic jaxpr stats (no compilation, no device forcing).
+
+Traces the *unsharded* step function of every (arch x shape) cell with
+ShapeDtypeStructs and counts loop-aware FLOPs/bytes (benchmarks.flop_count).
+SPMD splits these ~evenly, so per-chip = global / n_chips. Results land in
+results/jaxpr/<arch>__<shape>.json and are merged by benchmarks.roofline.
+
+Run: PYTHONPATH=src python -m benchmarks.jaxpr_stats [--arch A] [--shape S]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfglib
+from repro.models.model import build_model
+from repro.optim import make_optimizer
+from repro.launch.steps import OPT_FOR_ARCH
+
+from .flop_count import count_fn
+
+OUT_DIR = "results/jaxpr"
+
+
+def cell_stats(arch: str, shape: str) -> dict | None:
+    spec = cfglib.input_specs(arch, shape)
+    if spec["skip"]:
+        return None
+    cfg, sp = spec["cfg"], spec["shape"]
+    model = build_model(cfg)
+    pshapes = jax.eval_shape(lambda k: model.init_params(k)[0],
+                             jax.random.PRNGKey(0))
+    if sp.kind == "train":
+        opt_name = OPT_FOR_ARCH.get(cfglib.canonical(arch), "adamw")
+        opt_init, opt_update = make_optimizer(opt_name, 1e-4)
+        oshapes = jax.eval_shape(opt_init, pshapes)
+
+        def step(params, opt_state, batch, i):
+            loss, grads = jax.value_and_grad(model.train_forward)(params, batch)
+            return opt_update(grads, opt_state, params, i)
+
+        stats = count_fn(step, pshapes, oshapes, spec["batch"],
+                         jax.ShapeDtypeStruct((), jnp.int32))
+    elif sp.kind == "prefill":
+        stats = count_fn(lambda p, b: model.prefill(p, b, sp.seq_len),
+                         pshapes, spec["batch"])
+    else:
+        stats = count_fn(model.decode_step, pshapes,
+                         spec["batch"]["token"], spec["batch"]["state"])
+    stats["arch"], stats["shape"], stats["kind"] = arch, shape, sp.kind
+    return stats
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+    archs = [args.arch] if args.arch else cfglib.ARCHS
+    shapes = [args.shape] if args.shape else list(cfglib.SHAPES)
+    for a in archs:
+        for s in shapes:
+            path = os.path.join(OUT_DIR, f"{a}__{s}.json")
+            if os.path.exists(path) and not args.force:
+                continue
+            try:
+                st = cell_stats(a, s)
+            except Exception as e:
+                st = {"arch": a, "shape": s, "error": repr(e)}
+            if st is None:
+                st = {"arch": a, "shape": s, "skip": True}
+            with open(path, "w") as f:
+                json.dump(st, f)
+            if "flops" in st:
+                print(f"{a:24s} {s:12s} flops={st['flops']:.3e} "
+                      f"dot={st['dot_flops']:.3e}")
+            else:
+                print(f"{a:24s} {s:12s} {st.get('error', 'skip')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,139 @@
+"""Roofline analysis from the dry-run's compiled artifacts (deliverable g).
+
+Reads ``results/dryrun/<arch>__<shape>__<mesh>.json`` and derives, per cell:
+
+  compute_term    = flops_per_chip / PEAK_FLOPS            [s]
+  memory_term     = hbm_bytes_per_chip / HBM_BW            [s]
+  collective_term = sum_op w_op * bytes_op / ICI_BW        [s]
+
+All inputs are *per-chip* quantities (the compiled module is the SPMD
+per-device program): ``cost_analysis()['flops'/'bytes accessed']`` and the
+collective output bytes parsed from the partitioned HLO. Conventions:
+
+* v5e constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI (one
+  link-worth as the conservative per-chip collective bandwidth).
+* per-type weights w_op: all-reduce 2.0 (ring: reduce-scatter+all-gather
+  pass ~2x the payload over a link), all-gather/all-to-all/
+  collective-permute 1.0, reduce-scatter 1.0.
+* CPU-lowering caveat: XLA CPU upcasts bf16 compute to f32, so
+  'bytes accessed' over-counts bf16 traffic by up to 2x. We report the raw
+  value and a bf16-corrected memory term (x0.5) — the truth lies between.
+* MODEL_FLOPS = 6 N_active D (train) / 2 N_active tokens (inference) per
+  the brief; the ratio MODEL_FLOPS / HLO_FLOPS exposes remat/dispatch waste
+  (full remat alone caps train at ~6/8 = 0.75).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import configs as cfglib
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (conservative single-link)
+COLLECTIVE_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0,
+                     "reduce-scatter": 1.0, "all-to-all": 1.0,
+                     "collective-permute": 1.0}
+
+
+def model_flops_per_chip(arch: str, shape: str, n_chips: int) -> float:
+    cfg = cfglib.get_config(arch)
+    sp = cfglib.SHAPES[shape]
+    _, n_active = cfg.param_count()
+    if sp.kind == "train":
+        tokens = sp.global_batch * sp.seq_len
+        total = 6.0 * n_active * tokens
+    elif sp.kind == "prefill":
+        tokens = sp.global_batch * sp.seq_len
+        total = 2.0 * n_active * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n_active * sp.global_batch
+    return total / n_chips
+
+
+def _jaxpr_stats(arch: str, shape: str) -> dict | None:
+    path = os.path.join("results/jaxpr", f"{arch}__{shape}.json")
+    if os.path.exists(path):
+        st = json.load(open(path))
+        if "flops" in st:
+            return st
+    return None
+
+
+def analyze_record(rec: dict) -> dict | None:
+    """One cell's roofline terms.
+
+    FLOPs come from the loop-aware jaxpr counter (XLA cost_analysis counts
+    while bodies once — verified; see flop_count.py). HLO bytes/collectives
+    share that under-count, so both are rescaled by the per-cell factor
+    jaxpr_flops / hlo_flops (boundary collectives like the final grad
+    all-reduce get over-scaled by this — documented approximation; the raw
+    unscaled value is reported alongside).
+    """
+    if "error" in rec or "skip" in rec:
+        return None
+    n = rec["n_chips"]
+    js = _jaxpr_stats(rec["arch"], rec["shape"])
+    if js:
+        flops = js["flops"] / n                   # per chip, loop-aware
+    else:                                          # fallback: HLO (undercounts)
+        flops = rec["cost"]["flops"]
+    coll = rec.get("collectives_loop_aware") or rec.get("collectives", {})
+    coll_bytes = sum(COLLECTIVE_WEIGHT.get(op, 1.0) * d["bytes"]
+                     for op, d in coll.items())
+    # HBM traffic: loop-scaled per-op output bytes from the partitioned HLO;
+    # x2 for reads ~ writes; /2 for the CPU bf16->f32 upcast artifact.
+    hbm = rec.get("hbm_write_bytes", rec["cost"]["bytes_accessed"])
+    compute = flops / PEAK_FLOPS
+    memory = 2 * hbm / 2 / HBM_BW
+    collective = coll_bytes / ICI_BW
+    terms = {"compute": compute, "memory": memory,
+             "collective": collective}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_chip(rec["arch"], rec["shape"], n)
+    step_time = max(terms.values())
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "x".join(str(v) for v in rec["mesh"].values()),
+        "kind": rec["kind"],
+        "compute_s": f"{compute:.3e}",
+        "memory_s": f"{memory:.3e}",
+        "collective_s": f"{collective:.3e}",
+        "dominant": dominant,
+        "model_flops_ratio": round(mf / flops, 3) if flops else 0.0,
+        "roofline_frac": round(compute / step_time, 3) if step_time else 0.0,
+        "step_time_bound_s": f"{step_time:.3e}",
+        "mem_gib": round((rec["memory"]["argument_bytes"]
+                          + rec["memory"]["temp_bytes"]) / 2**30, 2),
+    }
+
+
+def run(dryrun_dir: str = "results/dryrun", mesh_tag: str = "pod1",
+        ) -> tuple[list[dict], dict]:
+    rows = []
+    skips = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir,
+                                              f"*__{mesh_tag}.json"))):
+        rec = json.load(open(path))
+        if "skip" in rec:
+            skips.append(f"{rec['arch']}/{rec['shape']}: {rec['skip']}")
+            continue
+        if "error" in rec:
+            skips.append(f"{rec['arch']}/{rec['shape']}: ERROR {rec['error']}")
+            continue
+        row = analyze_record(rec)
+        if row:
+            rows.append(row)
+    from .common import write_csv
+    write_csv(f"roofline_{mesh_tag}", rows)
+    derived = {"cells_analyzed": len(rows), "cells_skipped": len(skips)}
+    # headline hillclimb candidates
+    if rows:
+        worst = min(rows, key=lambda r: r["roofline_frac"])
+        coll = max(rows, key=lambda r: float(r["collective_s"]))
+        derived["worst_roofline"] = f"{worst['arch']}/{worst['shape']}"
+        derived["most_collective_bound"] = f"{coll['arch']}/{coll['shape']}"
+    return rows, derived

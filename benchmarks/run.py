@@ -1,0 +1,64 @@
+"""Benchmark entry point: one module per paper figure + roofline.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig2,...]``
+Writes CSVs under results/bench/, prints tables + derived headline numbers
+(the quantities EXPERIMENTS.md cites against the paper's claims).
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig2_microbenchmark, fig3_patterns, fig8_slow_storage,
+               fig9_10_prefetchers, fig11_apps, fig12_cache_size,
+               fig13_multiapp, jax_stream, roofline)
+from .common import fmt_table
+
+SUITES = {
+    "fig2_7": fig2_microbenchmark.run,
+    "fig3": fig3_patterns.run,
+    "fig8": fig8_slow_storage.run,
+    "fig9_10": fig9_10_prefetchers.run,
+    "fig11": fig11_apps.run,
+    "fig12": fig12_cache_size.run,
+    "fig13": fig13_multiapp.run,
+    "jax_stream": jax_stream.run,
+    "roofline": roofline.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    failures = []
+    for name, fn in SUITES.items():
+        if only and name not in only:
+            continue
+        print(f"\n=== {name} " + "=" * max(0, 60 - len(name)))
+        t0 = time.time()
+        try:
+            rows, derived = fn()
+        except Exception as e:        # keep the suite running
+            failures.append((name, repr(e)))
+            print(f"FAILED: {e!r}")
+            continue
+        print(fmt_table(rows))
+        if derived:
+            print("\nderived:")
+            for k, v in derived.items():
+                print(f"  {k} = {v}")
+        print(f"[{time.time() - t0:.1f}s]")
+
+    if failures:
+        print("\nFAILURES:", failures)
+        sys.exit(1)
+    print("\nall benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

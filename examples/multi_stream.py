@@ -1,0 +1,41 @@
+"""Paper Fig. 13 analogue: concurrent isolated streams over one shared pool.
+
+Four request streams with different access patterns (sequential, stride,
+phase-shifting, random) run concurrently against a shared disaggregated
+pool; each keeps its own Leap detector + hot buffer (the per-process
+isolation of paper §4.1). The random stream throttles itself while the
+regular streams converge to prefetched hits.
+
+Run: PYTHONPATH=src python examples/multi_stream.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.paging.prefetch_serving import PrefetchedStream, multi_stream_consume
+
+geom = PrefetchedStream(n_pages=1024, n_slots=32, page_elems=8)
+pool = jnp.arange(1024 * 8, dtype=jnp.float32).reshape(1024, 8)
+
+T = 240
+rng = np.random.default_rng(0)
+schedules = np.stack([
+    np.arange(T) % 1024,                          # sequential
+    (np.arange(T) * 5) % 1024,                    # stride-5
+    np.concatenate([np.arange(T // 2) * 2,        # phase shift
+                    8000 - np.arange(T // 2) * 3]) % 1024,
+    rng.integers(0, 1024, T),                     # random (throttles)
+]).astype(np.int32)
+
+state, sums, info = multi_stream_consume(pool, jnp.asarray(schedules), geom)
+names = ["sequential", "stride-5", "phase-shift", "random"]
+for i, n in enumerate(names):
+    hit = float(info["pref_hit"][i, T // 4:].mean())
+    print(f"{n:12s} warm prefetch-hit rate: {hit:.3f}")
+hits = [float(info["pref_hit"][i, T // 4:].mean()) for i in range(4)]
+assert min(hits[:3]) > 0.85 and hits[3] < 0.2
+print("multi_stream OK: regular streams converge, random throttles")

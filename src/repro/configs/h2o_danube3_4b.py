@@ -1,0 +1,21 @@
+"""h2o-danube-3-4b — llama+mistral mix with sliding-window attention.
+
+[arXiv:2401.16818; unverified]. head_dim = 3840/32 = 120 (non-128; the TP
+rules shard the flattened head axis so this stays divisible). SWA window
+4096 (mistral-style rolling buffer) makes this the SWA representative and
+long_500k-capable: decode state is O(window), not O(context).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="h2o-danube-3-4b", family="dense",
+    n_layers=24, d_model=3840, n_heads=32, n_kv_heads=8, d_ff=10240,
+    vocab_size=32000, sliding_window=4096, rope_theta=500_000.0,
+)
+
+SMOKE = ModelConfig(
+    name="h2o-danube-3-4b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, sliding_window=8, dtype="float32",
+)

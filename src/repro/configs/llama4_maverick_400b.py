@@ -1,0 +1,26 @@
+"""llama4-maverick-400b-a17b — MoE 128e top-1, interleaved dense/MoE.
+
+[hf:meta-llama/Llama-4-*; unverified]. With the assigned dims (48L, d=5120,
+ff=8192, 128 experts) an MoE on every layer would be ~780B total; published
+Maverick interleaves MoE every 2nd layer with one shared expert and top-1
+routing, which lands at ~397B total / ~17.6B active — matching the
+400b-a17b name. Derivation: 24 MoE layers x 128 experts x 3*5120*8192
+= 386B routed + shared/dense/attn/embed ~ 11B.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-maverick-400b-a17b", family="moe",
+    n_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, d_ff=8192,
+    vocab_size=202048, rope_theta=500_000.0,
+    moe_every=2, moe_offset=1, n_experts=128, top_k=1, n_shared_experts=1,
+)
+
+SMOKE = ModelConfig(
+    name="llama4-maverick-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, rope_theta=500_000.0,
+    moe_every=2, moe_offset=1, n_experts=4, top_k=1, n_shared_experts=1,
+    capacity_factor=2.0, dtype="float32",
+)

@@ -1,0 +1,22 @@
+"""phi3.5-moe-42b-a6.6b — 16 experts, top-2, MoE on every layer.
+
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]. 32L x 16e x 3*4096*6400 = 40.3B
+routed + attention/embed ~ 1.6B => ~42B total; top-2 active ~ 6.6B.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8, d_ff=6400,
+    vocab_size=32064,
+    moe_every=1, moe_offset=0, n_experts=16, top_k=2,
+)
+
+SMOKE = ModelConfig(
+    name="phi3.5-moe-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512,
+    moe_every=1, moe_offset=0, n_experts=4, top_k=2, capacity_factor=2.0,
+    dtype="float32",
+)

@@ -1,0 +1,22 @@
+"""seamless-m4t-medium — encoder-decoder, audio frontend stubbed.
+
+[arXiv:2308.11596; hf]. 12 encoder + 12 decoder layers, MHA (kv=16),
+d_ff=4096, vocab 256206. The speech frontend is a stub: input_specs provides
+precomputed frame embeddings [B,S,d_model]. Relative position bias replaced
+with rotary (noted in DESIGN.md); FFN is gated (SwiGLU) rather than ReLU.
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec",
+    n_layers=12, n_enc_layers=12, d_model=1024, n_heads=16, n_kv_heads=16,
+    d_ff=4096, vocab_size=256206, vocab_pad=50,   # 256256 = 16-divisible TP
+    norm="layernorm", act="gelu",
+)
+
+SMOKE = ModelConfig(
+    name="seamless-m4t-smoke", family="encdec",
+    n_layers=2, n_enc_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab_size=512, norm="layernorm", act="gelu", dtype="float32",
+)

@@ -1,0 +1,19 @@
+"""stablelm-12b — dense, LayerNorm trunk. [hf:stabilityai; hf].
+
+Published model uses per-head qk-norm and 25% partial rotary; we implement
+full rotary + LayerNorm (deviation noted in DESIGN.md §Arch-applicability).
+"""
+
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="stablelm-12b", family="dense",
+    n_layers=40, d_model=5120, n_heads=32, n_kv_heads=8, d_ff=13824,
+    vocab_size=100352, norm="layernorm",
+)
+
+SMOKE = ModelConfig(
+    name="stablelm-12b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+    vocab_size=512, norm="layernorm", dtype="float32",
+)

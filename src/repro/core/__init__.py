@@ -1,0 +1,30 @@
+"""Leap's core: majority-trend prefetching, eager-eviction cache, two-tier pool.
+
+NumPy references + trace simulator (paper figures) and jittable JAX twins
+(in-step controller + pool) live side by side; property tests pin them equal.
+"""
+
+from .history import AccessHistory, DEFAULT_H_SIZE, init_history, push_history
+from .trend import (DEFAULT_N_SPLIT, boyer_moore, find_trend, find_trend_jax)
+from .window import DEFAULT_PW_MAX, PrefetchWindow, init_window_state
+from .prefetcher import (LeapPrefetcher, NextNLinePrefetcher, NoPrefetcher,
+                         PREFETCHERS, Prefetcher, ReadAheadPrefetcher,
+                         StridePrefetcher, make_prefetcher)
+from .cache import PageCache
+from .metrics import PrefetchStats
+from .simulator import (LATENCY_MODELS, LatencyModel, SimResult,
+                        run_policy_matrix, simulate)
+from .leap_jax import leap_init, leap_step, leap_step_batched
+from .pool import pool_access, pool_init, pool_stats
+from . import traces
+
+__all__ = [
+    "AccessHistory", "DEFAULT_H_SIZE", "DEFAULT_N_SPLIT", "DEFAULT_PW_MAX",
+    "LATENCY_MODELS", "LatencyModel", "LeapPrefetcher", "NextNLinePrefetcher",
+    "NoPrefetcher", "PageCache", "PREFETCHERS", "Prefetcher", "PrefetchStats",
+    "PrefetchWindow", "ReadAheadPrefetcher", "SimResult", "StridePrefetcher",
+    "boyer_moore", "find_trend", "find_trend_jax", "init_history",
+    "init_window_state", "leap_init", "leap_step", "leap_step_batched",
+    "make_prefetcher", "pool_access", "pool_init", "pool_stats",
+    "push_history", "run_policy_matrix", "simulate", "traces",
+]

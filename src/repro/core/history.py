@@ -1,0 +1,106 @@
+"""AccessHistory — per-stream ring buffer of page-access deltas (paper §4.1).
+
+Leap records only the *difference* between consecutive slow-tier page accesses
+(``delta = page_t - page_{t-1}``), not raw addresses: the majority-vote trend
+detector (``repro.core.trend``) operates on deltas, and storing deltas keeps
+the tracker O(H_size) memory per stream.
+
+Two implementations with one semantics:
+
+* :class:`AccessHistory` — plain NumPy/python, used by the trace-driven
+  simulator (``repro.core.simulator``) and as the oracle in property tests.
+* :func:`init_history` / :func:`push_history` — pure-JAX (fixed-shape,
+  jit/vmap-safe) twin used inside ``serve_step``/``train_step``. State is a
+  dict of arrays so it threads through ``lax.scan`` untouched.
+
+The ring buffer is FIFO with a head pointer; ``head`` always points at the
+most recent delta. Until the first access there is no "previous page", so the
+first push records a delta of 0 (matching the paper's example in §4.1 where
+accesses 0x2,0x5,... produce deltas 0,+3,...).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_H_SIZE = 32  # paper §5: AccessHistory buffer size H_size = 32
+
+
+# --------------------------------------------------------------------------
+# NumPy reference
+# --------------------------------------------------------------------------
+class AccessHistory:
+    """FIFO circular buffer of the last ``h_size`` access deltas."""
+
+    def __init__(self, h_size: int = DEFAULT_H_SIZE):
+        if h_size < 2 or (h_size & (h_size - 1)) != 0:
+            raise ValueError(f"h_size must be a power of two >= 2, got {h_size}")
+        self.h_size = h_size
+        self.deltas = np.zeros(h_size, dtype=np.int64)
+        self.head = -1          # index of most recent delta; -1 = empty
+        self.count = 0          # number of valid entries (saturates at h_size)
+        self.last_page = None   # most recently accessed page id
+
+    def push(self, page: int) -> int:
+        """Record an access to ``page``; returns the delta that was stored."""
+        delta = 0 if self.last_page is None else int(page) - int(self.last_page)
+        self.last_page = int(page)
+        self.head = (self.head + 1) % self.h_size
+        self.deltas[self.head] = delta
+        self.count = min(self.count + 1, self.h_size)
+        return delta
+
+    def window(self, w: int) -> np.ndarray:
+        """Most recent ``w`` deltas, newest first: H_head, H_head-1, ..."""
+        w = min(w, self.count)
+        idx = (self.head - np.arange(w)) % self.h_size
+        return self.deltas[idx]
+
+
+# --------------------------------------------------------------------------
+# JAX twin
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class HistorySpec:
+    h_size: int = DEFAULT_H_SIZE
+
+
+def init_history(h_size: int = DEFAULT_H_SIZE, batch: tuple[int, ...] = ()) -> dict:
+    """Fixed-shape history state (optionally batched over leading dims)."""
+    z = lambda shape, dt: jnp.zeros(batch + shape, dt)
+    return {
+        "deltas": z((h_size,), jnp.int32),
+        "head": z((), jnp.int32) - 1,
+        "count": z((), jnp.int32),
+        "last_page": z((), jnp.int32),
+        "has_last": z((), jnp.bool_),
+    }
+
+
+def push_history(state: dict, page: jax.Array) -> tuple[dict, jax.Array]:
+    """JAX twin of :meth:`AccessHistory.push` (unbatched; vmap for streams)."""
+    h_size = state["deltas"].shape[-1]
+    page = page.astype(jnp.int32)
+    delta = jnp.where(state["has_last"], page - state["last_page"], 0)
+    head = jnp.mod(state["head"] + 1, h_size)
+    new = {
+        "deltas": state["deltas"].at[head].set(delta),
+        "head": head,
+        "count": jnp.minimum(state["count"] + 1, h_size),
+        "last_page": page,
+        "has_last": jnp.ones((), jnp.bool_),
+    }
+    return new, delta
+
+
+def history_window_gather(state: dict) -> tuple[jax.Array, jax.Array]:
+    """Return (deltas newest-first over the full ring, validity mask)."""
+    h_size = state["deltas"].shape[-1]
+    idx = jnp.mod(state["head"] - jnp.arange(h_size), h_size)
+    vals = state["deltas"][idx]
+    mask = jnp.arange(h_size) < state["count"]
+    return vals, mask

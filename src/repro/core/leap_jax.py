@@ -1,0 +1,119 @@
+"""Jittable Leap controller — Alg. 1 + Alg. 2 fused, per-stream, batched.
+
+This is the form of the paper's prefetcher that lives *inside* the jitted
+``serve_step``/``train_step``: a fixed-shape state machine over int32 arrays
+that consumes one slow-tier page access per step and emits up to ``PW_max``
+prefetch candidates. Semantics are bit-exact to the NumPy
+:class:`repro.core.prefetcher.LeapPrefetcher` (property-tested in
+``tests/test_leap_jax.py``): history push -> FINDTREND (every fault; the
+tracker maintains the current trend) -> GetPrefetchWindowSize -> DoPrefetch
+with speculative fallback to the last-known trend.
+
+State is a flat dict of arrays so it threads through ``lax.scan`` / pytree
+checkpointing untouched; ``leap_step_batched`` vmaps over a leading stream
+axis (per-request isolation = the paper's per-process isolation, §4.1).
+
+Cost: O(H_size) int32 work per step (H=32 default) — noise next to a model
+step; this is what makes "prefetcher in the hot loop" viable on TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .history import DEFAULT_H_SIZE, init_history, push_history
+from .trend import DEFAULT_N_SPLIT, _masked_boyer_moore
+from .window import DEFAULT_PW_MAX, _round_up_pow2_jax
+
+
+def leap_init(h_size: int = DEFAULT_H_SIZE, batch: tuple[int, ...] = ()) -> dict:
+    """Fresh controller state (optionally batched over leading stream dims)."""
+    z = lambda shape, dt: jnp.zeros(batch + shape, dt)
+    state = init_history(h_size, batch)
+    state.update(
+        pw_prev=z((), jnp.int32),
+        c_hit=z((), jnp.int32),
+        trend=z((), jnp.int32),       # last Δ_maj found by FINDTREND
+        has_trend=z((), jnp.bool_),
+    )
+    return state
+
+
+def _find_trend_from(state: dict, n_split: int) -> tuple[jax.Array, jax.Array]:
+    """FINDTREND ladder over the (already updated) history state."""
+    h_size = state["deltas"].shape[-1]
+    idx = jnp.mod(state["head"] - jnp.arange(h_size), h_size)
+    vals = state["deltas"][idx]                      # newest-first
+    valid = jnp.arange(h_size) < state["count"]
+
+    best_delta = jnp.int32(0)
+    best_found = jnp.zeros((), jnp.bool_)
+    w = max(1, h_size // n_split)
+    while w <= h_size:
+        in_window = (jnp.arange(h_size) < w) & valid
+        cand, found = _masked_boyer_moore(vals, in_window)
+        take = found & ~best_found
+        best_delta = jnp.where(take, cand, best_delta)
+        best_found = best_found | found
+        w *= 2
+    return best_delta, best_found
+
+
+@functools.partial(jax.jit, static_argnames=("n_split", "pw_max"))
+def leap_step(state: dict, page: jax.Array, prefetched_hit: jax.Array,
+              n_split: int = DEFAULT_N_SPLIT, pw_max: int = DEFAULT_PW_MAX,
+              ) -> tuple[dict, jax.Array, jax.Array]:
+    """One fault through the controller.
+
+    Args:
+      state: from :func:`leap_init` (unbatched here; vmap for streams).
+      page: int32 page id of this slow-tier access.
+      prefetched_hit: bool — did this access hit a *prefetched* cache entry.
+
+    Returns ``(new_state, candidates[pw_max], valid[pw_max])`` where
+    ``candidates[k] = page + step*(k+1)`` and ``valid`` masks the first
+    ``PW_size`` of them (all False when prefetching is suspended).
+    """
+    state = dict(state)
+    state["c_hit"] = state["c_hit"] + prefetched_hit.astype(jnp.int32)
+
+    hist = {k: state[k] for k in ("deltas", "head", "count", "last_page", "has_last")}
+    hist, delta = push_history(hist, page)
+    state.update(hist)
+
+    # FINDTREND every fault (tracker maintains the current trend).
+    trend, found = _find_trend_from(state, n_split)
+    cur_trend = jnp.where(found, trend, state["trend"])
+    has_trend = state["has_trend"] | found
+
+    # GetPrefetchWindowSize (Alg. 2 lines 5-16).
+    follows = has_trend & (delta == cur_trend)
+    c_hit, pw_prev = state["c_hit"], state["pw_prev"]
+    cold = jnp.where(follows, 1, 0)
+    grown = jnp.minimum(_round_up_pow2_jax(c_hit + 1), pw_max)
+    grown = jnp.where(grown < pw_prev // 2, pw_prev // 2, grown)
+    pw = jnp.where(c_hit == 0, cold, grown).astype(jnp.int32)
+
+    state["pw_prev"] = pw
+    state["c_hit"] = jnp.zeros_like(c_hit)
+    state["trend"] = cur_trend
+    state["has_trend"] = has_trend
+
+    # DoPrefetch (Alg. 2 lines 19-27): along Δ_maj, else speculative.
+    step = jnp.where(found, trend, cur_trend)
+    can = (pw > 0) & has_trend & (step != 0)
+    ks = jnp.arange(1, pw_max + 1, dtype=jnp.int32)
+    candidates = page.astype(jnp.int32) + step * ks
+    valid = can & (ks <= pw)
+    return state, candidates, valid
+
+
+def leap_step_batched(state: dict, pages: jax.Array, prefetched_hits: jax.Array,
+                      n_split: int = DEFAULT_N_SPLIT, pw_max: int = DEFAULT_PW_MAX,
+                      ) -> tuple[dict, jax.Array, jax.Array]:
+    """Vmapped :func:`leap_step` over a leading [streams] axis."""
+    fn = functools.partial(leap_step, n_split=n_split, pw_max=pw_max)
+    return jax.vmap(fn)(state, pages, prefetched_hits)

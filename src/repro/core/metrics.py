@@ -1,0 +1,72 @@
+"""Prefetcher effectiveness metrics — the paper's three axes (§3.1) + costs.
+
+* **Accuracy**   = prefetch_hits / prefetch_issued  (useful fraction of cache adds)
+* **Coverage**   = prefetch_hits / total_faults     (faults served by prefetch)
+* **Timeliness** = distribution of (first-hit time − prefetch-issue time)
+* **Pollution**  = prefetched pages evicted (or left) without ever being hit
+* **Miss count** = faults that found nothing in the cache (major faults)
+
+Percentile helpers report the p50/p90/p99/avg shapes the paper's figures use.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PrefetchStats:
+    faults: int = 0               # all slow-tier accesses (events)
+    cache_hits: int = 0           # faults that hit the cache (minor faults)
+    misses: int = 0               # faults that missed (major faults)
+    prefetch_issued: int = 0      # pages added to cache via prefetch
+    prefetch_hits: int = 0        # first hits on prefetched entries
+    pollution: int = 0            # prefetched entries never hit
+    timeliness: list = dataclasses.field(default_factory=list)
+    latencies: list = dataclasses.field(default_factory=list)  # per-fault sim latency
+
+    @property
+    def accuracy(self) -> float:
+        return self.prefetch_hits / self.prefetch_issued if self.prefetch_issued else 0.0
+
+    @property
+    def coverage(self) -> float:
+        return self.prefetch_hits / self.faults if self.faults else 0.0
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / self.faults if self.faults else 0.0
+
+    @property
+    def miss_rate(self) -> float:
+        return self.misses / self.faults if self.faults else 0.0
+
+    def latency_percentiles(self, qs=(50, 90, 99)) -> dict:
+        if not self.latencies:
+            return {f"p{q}": 0.0 for q in qs} | {"avg": 0.0}
+        arr = np.asarray(self.latencies)
+        out = {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+        out["avg"] = float(arr.mean())
+        return out
+
+    def timeliness_percentiles(self, qs=(50, 99)) -> dict:
+        if not self.timeliness:
+            return {f"p{q}": 0.0 for q in qs}
+        arr = np.asarray(self.timeliness)
+        return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+
+    def summary(self) -> dict:
+        return {
+            "faults": self.faults,
+            "hit_rate": round(self.hit_rate, 4),
+            "miss_rate": round(self.miss_rate, 4),
+            "accuracy": round(self.accuracy, 4),
+            "coverage": round(self.coverage, 4),
+            "prefetch_issued": self.prefetch_issued,
+            "prefetch_hits": self.prefetch_hits,
+            "pollution": self.pollution,
+            "latency": self.latency_percentiles(),
+            "timeliness": self.timeliness_percentiles(),
+        }

@@ -1,0 +1,265 @@
+"""Two-tier paged pool: slow-tier page array + hot-buffer slot cache (jittable).
+
+The accelerator-side analogue of the kernel page cache that Leap manages
+(paper §2.2/§4.3), with the pool playing "remote memory" and the hot buffer
+playing local DRAM:
+
+* ``pool``: ``[n_pages, ...]`` array holding every page — in distributed use
+  this is sharded across the mesh (the disaggregated tier); here it is the
+  slow side of the two-tier hierarchy.
+* ``hot``:  ``[n_slots, ...]`` small resident buffer the compute step reads.
+* Metadata maps pages<->slots plus Leap's *eager eviction* bookkeeping: a
+  free-slot stack and a FIFO ring of unconsumed prefetched slots
+  (``PrefetchFifoLruList``). On the first hit of a prefetched slot the slot is
+  freed in O(1) (metadata only — the data stays readable until reuse), so
+  allocation never has to scan (paper: -36% page-allocation wait). Under
+  pressure, unconsumed prefetches evict FIFO-first (§4.3).
+* ``eviction='lazy'`` keeps consumed slots resident until pressure forces an
+  LRU argmin scan — the kswapd baseline; benchmarks compare alloc-scan work.
+
+All ops are fixed-shape and jit/scan-safe. The batch of page requests per call
+is a fixed-size vector with a validity mask (misses = demand fetch, plus up to
+``PW_max`` prefetch candidates from :mod:`repro.core.leap_jax`).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NO_PAGE = jnp.int32(-1)
+NO_SLOT = jnp.int32(-1)
+
+
+def pool_init(n_pages: int, n_slots: int) -> dict:
+    """Metadata state for an ``n_pages`` pool cached by ``n_slots`` hot slots."""
+    return {
+        "page_slot": jnp.full((n_pages,), NO_SLOT, jnp.int32),
+        "slot_page": jnp.full((n_slots,), NO_PAGE, jnp.int32),
+        "slot_prefetched": jnp.zeros((n_slots,), jnp.bool_),
+        "slot_consumed": jnp.zeros((n_slots,), jnp.bool_),
+        "slot_last_use": jnp.zeros((n_slots,), jnp.int32),
+        # Free stack: free_stack[:free_top] are free slot ids (LIFO).
+        "free_stack": jnp.arange(n_slots, dtype=jnp.int32)[::-1].copy(),
+        "free_top": jnp.int32(n_slots),
+        # FIFO ring of prefetched-not-yet-consumed slots (eviction order).
+        "fifo": jnp.full((n_slots,), NO_SLOT, jnp.int32),
+        "fifo_head": jnp.int32(0),   # oldest entry index
+        "fifo_count": jnp.int32(0),
+        "clock": jnp.int32(0),
+        # Counters (paper §3.1 metrics, accumulated on-device).
+        "n_hits": jnp.int32(0),
+        "n_misses": jnp.int32(0),
+        "n_prefetch_issued": jnp.int32(0),
+        "n_prefetch_hits": jnp.int32(0),
+        "n_pollution": jnp.int32(0),
+        "n_alloc_scans": jnp.int32(0),
+    }
+
+
+def _free_push(st: dict, slot: jax.Array) -> dict:
+    st = dict(st)
+    st["free_stack"] = st["free_stack"].at[st["free_top"]].set(slot)
+    st["free_top"] = st["free_top"] + 1
+    return st
+
+
+def _fifo_pop_oldest_valid(st: dict) -> tuple[dict, jax.Array]:
+    """Pop the oldest FIFO entry that is still an unconsumed prefetch.
+
+    Entries become stale when their slot was consumed (eager-freed) earlier;
+    staleness is detected via slot_page/slot_prefetched. Bounded scan over the
+    ring (n_slots is small: the hot buffer).
+    """
+    n = st["fifo"].shape[0]
+    # Masked first-live search over ring order: compute each fifo entry's
+    # liveness, take the first live one (stale entries skipped for free).
+    order = jnp.mod(st["fifo_head"] + jnp.arange(n, dtype=jnp.int32), n)
+    slots = st["fifo"][order]
+    safe = jnp.maximum(slots, 0)
+    live = ((slots >= 0)
+            & (st["slot_page"][safe] >= 0)
+            & st["slot_prefetched"][safe]
+            & ~st["slot_consumed"][safe]
+            & (jnp.arange(n) < st["fifo_count"]))
+    any_live = jnp.any(live)
+    first = jnp.argmax(live)                       # first True in ring order
+    victim = jnp.where(any_live, slots[first], NO_SLOT)
+    # Advance head past everything up to and including the victim (stale
+    # entries are discarded for free).
+    advance = jnp.where(any_live, first + 1, st["fifo_count"])
+    st = dict(st)
+    st["fifo_head"] = jnp.mod(st["fifo_head"] + advance, n)
+    st["fifo_count"] = st["fifo_count"] - advance
+    return st, victim
+
+
+def _evict_for_alloc(st: dict, lazy: bool) -> tuple[dict, jax.Array]:
+    """Produce one free slot when the free stack is empty."""
+    if not lazy:
+        st, victim = _fifo_pop_oldest_valid(st)
+        # victim == -1 cannot happen if n_slots >= max in-flight prefetches + 1;
+        # guard anyway by falling back to slot 0.
+        victim = jnp.where(victim >= 0, victim, 0)
+        st = dict(st)
+        st["n_pollution"] = st["n_pollution"] + 1   # evicted before any hit
+        return st, victim
+    # Lazy/kswapd baseline: LRU argmin scan over all occupied slots.
+    st = dict(st)
+    occupied = st["slot_page"] >= 0
+    key = jnp.where(occupied, st["slot_last_use"], jnp.iinfo(jnp.int32).max)
+    victim = jnp.argmin(key).astype(jnp.int32)
+    was_unconsumed_prefetch = (st["slot_prefetched"][victim]
+                               & ~st["slot_consumed"][victim])
+    st["n_pollution"] = st["n_pollution"] + was_unconsumed_prefetch.astype(jnp.int32)
+    st["n_alloc_scans"] = st["n_alloc_scans"] + st["slot_page"].shape[0]
+    return st, victim
+
+
+def _unmap(st: dict, slot: jax.Array) -> dict:
+    st = dict(st)
+    old_page = st["slot_page"][slot]
+    st["page_slot"] = jnp.where(
+        old_page >= 0, st["page_slot"].at[jnp.maximum(old_page, 0)].set(NO_SLOT),
+        st["page_slot"])
+    st["slot_page"] = st["slot_page"].at[slot].set(NO_PAGE)
+    st["slot_prefetched"] = st["slot_prefetched"].at[slot].set(False)
+    st["slot_consumed"] = st["slot_consumed"].at[slot].set(False)
+    return st
+
+
+@functools.partial(jax.jit, static_argnames=("lazy",), donate_argnums=(0, 1))
+def pool_access(st: dict, hot: jax.Array, pool: jax.Array,
+                pages: jax.Array, is_prefetch: jax.Array, valid: jax.Array,
+                lazy: bool = False) -> tuple[dict, jax.Array, jax.Array, dict]:
+    """Service a fixed-size batch of page requests against the hot buffer.
+
+    Args:
+      st:   metadata from :func:`pool_init`.
+      hot:  ``[n_slots, ...]`` hot buffer (donated, updated in place).
+      pool: ``[n_pages, ...]`` slow tier.
+      pages: ``int32[K]`` requested page ids (demand first, then candidates).
+      is_prefetch: ``bool[K]`` — True for prefetch candidates.
+      valid: ``bool[K]`` request mask.
+
+    Returns ``(st, hot, slots, info)``: ``slots[K]`` is where each valid
+    request's data now resides in ``hot``; ``info`` has per-request ``hit``
+    and ``prefetched_hit`` masks.
+
+    Slots eager-freed during this batch (consumed prefetches, demand staging)
+    are *unmapped immediately* but only returned to the free stack at the end
+    of the batch, so their data stays readable until the next call — the
+    caller reads ``hot[slots]`` between calls. Callers should size
+    ``n_slots >= 2*K`` so eviction never races a same-batch allocation.
+    """
+    K = pages.shape[0]
+
+    def step(carry, k):
+        st, hot = carry
+        page = pages[k]
+        req_valid = valid[k]
+        pref = is_prefetch[k]
+        st = dict(st)
+        st["clock"] = st["clock"] + req_valid.astype(jnp.int32)
+
+        slot0 = st["page_slot"][jnp.maximum(page, 0)]
+        in_range = (page >= 0) & (page < st["page_slot"].shape[0])
+        resident = req_valid & in_range & (slot0 >= 0)
+        s_safe = jnp.maximum(slot0, 0)
+        was_pref_hit = (resident & ~pref
+                        & st["slot_prefetched"][s_safe] & ~st["slot_consumed"][s_safe])
+
+        # ---- hit path (demand access only; prefetch of a resident page is a
+        # no-op duplicate) ---------------------------------------------------
+        demand_hit = resident & ~pref
+        st["n_hits"] = st["n_hits"] + demand_hit.astype(jnp.int32)
+        st["n_prefetch_hits"] = st["n_prefetch_hits"] + was_pref_hit.astype(jnp.int32)
+        st["slot_consumed"] = jnp.where(
+            demand_hit, st["slot_consumed"].at[s_safe].set(True), st["slot_consumed"])
+        st["slot_last_use"] = jnp.where(
+            demand_hit, st["slot_last_use"].at[s_safe].set(st["clock"]),
+            st["slot_last_use"])
+        if not lazy:
+            # Eager eviction (§4.3): first hit of a prefetched slot frees it.
+            # Unmap now; the slot id is emitted for a deferred free-stack push.
+            un = _unmap(dict(st), s_safe)
+            st = jax.tree.map(lambda a, b: jnp.where(was_pref_hit, b, a), st, un)
+
+        # ---- miss path: allocate + copy --------------------------------------
+        need_fetch = req_valid & in_range & ~resident
+        have_free = st["free_top"] > 0
+        # (a) from free stack
+        top_slot = st["free_stack"][jnp.maximum(st["free_top"] - 1, 0)]
+        # (b) else evict
+        st_ev, victim = _evict_for_alloc(st, lazy)
+        st_ev = _unmap(st_ev, victim)
+        take_ev = need_fetch & ~have_free
+        st = jax.tree.map(lambda a, b: jnp.where(take_ev, b, a), st, st_ev)
+        slot_new = jnp.where(have_free, top_slot, victim)
+        st["free_top"] = jnp.where(need_fetch & have_free,
+                                   st["free_top"] - 1, st["free_top"])
+
+        # map + copy
+        def mapped(st):
+            st = dict(st)
+            st["page_slot"] = st["page_slot"].at[page].set(slot_new)
+            st["slot_page"] = st["slot_page"].at[slot_new].set(page)
+            st["slot_prefetched"] = st["slot_prefetched"].at[slot_new].set(pref)
+            st["slot_consumed"] = st["slot_consumed"].at[slot_new].set(~pref)
+            st["slot_last_use"] = st["slot_last_use"].at[slot_new].set(st["clock"])
+            # prefetches enter the FIFO eviction ring
+            tail = jnp.mod(st["fifo_head"] + st["fifo_count"], st["fifo"].shape[0])
+            st["fifo"] = jnp.where(pref, st["fifo"].at[tail].set(slot_new), st["fifo"])
+            st["fifo_count"] = st["fifo_count"] + pref.astype(jnp.int32)
+            st["n_prefetch_issued"] = st["n_prefetch_issued"] + pref.astype(jnp.int32)
+            st["n_misses"] = st["n_misses"] + (~pref).astype(jnp.int32)
+            return st
+        st_m = mapped(st)
+        st = jax.tree.map(lambda a, b: jnp.where(need_fetch, b, a), st, st_m)
+        hot = jnp.where(need_fetch,
+                        hot.at[slot_new].set(pool[jnp.maximum(page, 0)]), hot)
+
+        # Demand fetch under eager policy: consumed-on-arrival -> unmap now
+        # (demand pages are never tracked by the cache, §4.3) and return the
+        # staging slot to the free stack at end-of-batch.
+        give_back = need_fetch & ~pref & (not lazy)
+        if not lazy:
+            st_back = _unmap(st, slot_new)
+            st = jax.tree.map(lambda a, b: jnp.where(give_back, b, a), st, st_back)
+
+        freed_slot = jnp.where(was_pref_hit, s_safe,
+                               jnp.where(give_back, slot_new, NO_SLOT))
+        out_slot = jnp.where(resident, slot0, jnp.where(need_fetch, slot_new, NO_SLOT))
+        return (st, hot), (out_slot, resident, was_pref_hit, freed_slot)
+
+    (st, hot), (slots, hits, pref_hits, freed) = jax.lax.scan(
+        step, (st, hot), jnp.arange(K))
+
+    # Deferred free-stack pushes (see docstring).
+    def push_body(i, st):
+        s = freed[i]
+        stp = _free_push(st, jnp.maximum(s, 0))
+        return jax.tree.map(lambda a, b: jnp.where(s >= 0, b, a), st, stp)
+
+    st = jax.lax.fori_loop(0, K, push_body, st)
+    return st, hot, slots, {"hit": hits, "prefetched_hit": pref_hits}
+
+
+def pool_stats(st: dict) -> dict:
+    """Python-side counter summary (paper §3.1)."""
+    g = lambda k: int(st[k])
+    issued, phits = g("n_prefetch_issued"), g("n_prefetch_hits")
+    faults = g("n_hits") + g("n_misses")
+    return {
+        "faults": faults,
+        "hits": g("n_hits"),
+        "misses": g("n_misses"),
+        "prefetch_issued": issued,
+        "prefetch_hits": phits,
+        "pollution": g("n_pollution"),
+        "alloc_scans": g("n_alloc_scans"),
+        "accuracy": phits / issued if issued else 0.0,
+        "coverage": phits / faults if faults else 0.0,
+    }

@@ -1,0 +1,194 @@
+"""Prefetch policies: Leap (paper Alg. 1+2) and the paper's baselines.
+
+All policies implement one interface driven by the trace simulator (and, for
+Leap, mirrored by the jittable twin in ``repro.core.leap_jax``):
+
+    on_fault(page, prefetched_hit) -> list[int]   # pages to prefetch now
+
+The event stream is the sequence of *slow-tier accesses* (page faults in the
+paper's setting; hot-buffer misses at page-granularity in ours). Policies see
+every fault — including minor faults that hit the prefetch cache — exactly as
+Leap's page-access tracker does (§4.1: it logs accesses "after I/O requests or
+page faults", not the full VM footprint).
+
+Baselines (paper §5.2.3):
+
+* :class:`NextNLinePrefetcher` — on a miss, bring the next N sequential pages.
+* :class:`StridePrefetcher` — Baer-Chen-style: confirm a stride from the last
+  two faults; aggressiveness tracks past prefetch accuracy.
+* :class:`ReadAheadPrefetcher` — model of Linux swap read-ahead per the
+  paper's description (§2.3): an *aligned block* containing the faulted page;
+  window doubles on consecutive-page faults / prior hits, otherwise shrinks.
+* :class:`NoPrefetcher` — demand paging only.
+"""
+
+from __future__ import annotations
+
+from .history import AccessHistory, DEFAULT_H_SIZE
+from .trend import find_trend, DEFAULT_N_SPLIT
+from .window import PrefetchWindow, DEFAULT_PW_MAX, round_up_pow2
+
+
+class Prefetcher:
+    """Base class; subclasses override :meth:`on_fault`."""
+
+    name = "none"
+
+    def on_fault(self, page: int, prefetched_hit: bool) -> list[int]:
+        raise NotImplementedError
+
+    def reset(self) -> None:
+        pass
+
+
+class NoPrefetcher(Prefetcher):
+    name = "none"
+
+    def on_fault(self, page: int, prefetched_hit: bool) -> list[int]:
+        return []
+
+
+class LeapPrefetcher(Prefetcher):
+    """Paper Alg. 2 ``DoPrefetch`` on top of Alg. 1 ``FINDTREND``.
+
+    State: AccessHistory (deltas), the adaptive window controller, and the
+    last successfully detected trend (used both for the "follows current
+    trend" test and for *speculative* prefetch when no majority currently
+    exists — Alg. 2 line 25).
+    """
+
+    name = "leap"
+
+    def __init__(self, h_size: int = DEFAULT_H_SIZE, n_split: int = DEFAULT_N_SPLIT,
+                 pw_max: int = DEFAULT_PW_MAX):
+        self.h_size, self.n_split, self.pw_max = h_size, n_split, pw_max
+        self.reset()
+
+    def reset(self) -> None:
+        self.history = AccessHistory(self.h_size)
+        self.window = PrefetchWindow(self.pw_max)
+        self.current_trend: int | None = None   # last Δ_maj found by FINDTREND
+
+    def on_fault(self, page: int, prefetched_hit: bool) -> list[int]:
+        if prefetched_hit:
+            self.window.note_prefetch_hit()
+        delta = self.history.push(page)
+        # FINDTREND runs on every fault: the page-access tracker maintains the
+        # "current trend" that GetPrefetchWindowSize's follows-test refers to
+        # (Alg. 2 line 6). Without this, PW=0 would deadlock bootstrap.
+        trend, found = find_trend(self.history, self.n_split)
+        if found:
+            self.current_trend = trend
+        follows = self.current_trend is not None and delta == self.current_trend
+        pw = self.window.next_size(follows)
+        if pw == 0:
+            return []                             # suspended: demand page only
+        if found:
+            step = trend                          # Alg. 2 line 23: along Δ_maj
+        elif self.current_trend is not None:
+            step = self.current_trend             # speculative (Alg. 2 line 25)
+        else:
+            return []
+        if step == 0:
+            return []                             # repeated page: nothing ahead
+        return [page + step * k for k in range(1, pw + 1)]
+
+
+class NextNLinePrefetcher(Prefetcher):
+    """Bring the next N sequentially-mapped pages on every cache miss."""
+
+    name = "next_n_line"
+
+    def __init__(self, n: int = DEFAULT_PW_MAX):
+        self.n = n
+
+    def on_fault(self, page: int, prefetched_hit: bool) -> list[int]:
+        if prefetched_hit:
+            return []                             # only acts on misses
+        return [page + k for k in range(1, self.n + 1)]
+
+
+class StridePrefetcher(Prefetcher):
+    """Two-fault stride confirmation; degree adapts to prefetch accuracy.
+
+    A stride is confirmed when the last two faults exhibit the same delta.
+    The prefetch degree grows with hits on previously prefetched pages and
+    shrinks otherwise (paper: "aggressiveness of this prefetcher depends on
+    the accuracy of the past prefetch").
+    """
+
+    name = "stride"
+
+    def __init__(self, max_degree: int = DEFAULT_PW_MAX):
+        self.max_degree = max_degree
+        self.reset()
+
+    def reset(self) -> None:
+        self.last_page: int | None = None
+        self.last_delta: int | None = None
+        self.hits_since = 0
+
+    def on_fault(self, page: int, prefetched_hit: bool) -> list[int]:
+        delta = None if self.last_page is None else page - self.last_page
+        confirmed = delta is not None and delta == self.last_delta and delta != 0
+        self.last_page, self.last_delta = page, delta
+        if prefetched_hit:
+            # paper §5.2.3: acts only "upon a cache miss"; hits just feed the
+            # accuracy signal that sets the next degree.
+            self.hits_since += 1
+            return []
+        if not confirmed:
+            self.hits_since = 0
+            return []
+        degree = min(round_up_pow2(self.hits_since + 1), self.max_degree)
+        self.hits_since = 0
+        return [page + delta * k for k in range(1, degree + 1)]
+
+
+class ReadAheadPrefetcher(Prefetcher):
+    """Linux swap read-ahead model (paper §2.3 / §5.2.3).
+
+    Reads an *aligned* block of ``window`` pages containing the faulted page.
+    The window doubles when the last two faults touch consecutive pages or
+    when prior read-ahead got hits, and halves (to a floor of 0) otherwise.
+    """
+
+    name = "read_ahead"
+
+    def __init__(self, ra_max: int = DEFAULT_PW_MAX, ra_init: int = 4):
+        self.ra_max, self.ra_init = ra_max, ra_init
+        self.reset()
+
+    def reset(self) -> None:
+        self.window = 0
+        self.last_page: int | None = None
+        self.hits_since = 0
+
+    def on_fault(self, page: int, prefetched_hit: bool) -> list[int]:
+        if prefetched_hit:
+            self.hits_since += 1
+        sequential = self.last_page is not None and page - self.last_page == 1
+        self.last_page = page
+        if sequential or self.hits_since > 0:
+            self.window = min(max(self.window * 2, self.ra_init), self.ra_max)
+        else:
+            self.window //= 2
+        self.hits_since = 0
+        if self.window < 2:
+            return []
+        start = (page // self.window) * self.window
+        return [p for p in range(start, start + self.window) if p != page]
+
+
+PREFETCHERS = {
+    cls.name: cls
+    for cls in (NoPrefetcher, LeapPrefetcher, NextNLinePrefetcher,
+                StridePrefetcher, ReadAheadPrefetcher)
+}
+
+
+def make_prefetcher(name: str, **kwargs) -> Prefetcher:
+    try:
+        return PREFETCHERS[name](**kwargs)
+    except KeyError:
+        raise ValueError(f"unknown prefetcher {name!r}; have {sorted(PREFETCHERS)}")

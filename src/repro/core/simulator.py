@@ -1,0 +1,143 @@
+"""Trace-driven two-tier memory simulator with a calibrated latency model.
+
+Replays a slow-tier access trace (``repro.core.traces``) against a
+prefetch policy + page cache and reports the paper's metrics. The latency
+constants are taken from the paper's own measurements (Fig. 1/2):
+
+* 4 KB RDMA op            ≈ 4.3 µs   (fabric term, remote memory)
+* 4 KB disk access        ≈ 91.5 µs  (fabric term, HDD)
+* default block-layer path ≈ 34 µs extra, high variance (lognormal here)
+* lean (Leap) data path   ≈ 1.2 µs extra, low variance
+* cache hit               ≈ 0.8 µs  ("almost memory-speed")
+
+plus TPU-flavored presets where the "fabric" is ICI/DCN and a page is a KV
+block (see DESIGN.md §2). Bandwidth contention is modeled with a single
+busy-until FIFO link per stream: prefetches are asynchronous but serialize
+on the link, so over-aggressive policies delay demand fetches — the paper's
+"wasted I/O bandwidth" effect. An access to a still-in-flight page blocks
+only for the residual transfer (partial hit), like Linux's swap cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .cache import PageCache
+from .metrics import PrefetchStats
+from .prefetcher import Prefetcher
+
+
+@dataclasses.dataclass
+class LatencyModel:
+    name: str = "rdma_lean"
+    t_hit: float = 0.8              # cache-hit service time (µs)
+    t_fabric: float = 4.3           # slow-tier fetch: launch + transfer (µs)
+    t_xfer: float = 1.0             # bandwidth (serializing) share of t_fabric
+    t_datapath: float = 1.2         # host data-path overhead mean (µs)
+    datapath_sigma: float = 0.1     # lognormal sigma of the data-path overhead
+    t_scan_unit: float = 0.01       # alloc-stall per scanned cache entry (µs)
+
+    def datapath_cost(self, rng: np.random.Generator) -> float:
+        if self.datapath_sigma <= 0:
+            return self.t_datapath
+        mu = np.log(self.t_datapath) - self.datapath_sigma ** 2 / 2
+        return float(rng.lognormal(mu, self.datapath_sigma))
+
+
+# Paper-calibrated presets (µs, 4KB pages) and TPU-flavored presets
+# (µs, 32KB KV pages: 16 tok × 8 kv-heads × 128 dim × 2B ≈ 32 KB).
+LATENCY_MODELS = {
+    # default Linux block-layer path (Fig. 1: ~34µs overhead, high variance)
+    "disk_block": LatencyModel("disk_block", 0.8, 91.5, 60.0, 34.0, 0.9, 0.01),
+    "rdma_block": LatencyModel("rdma_block", 0.8, 4.3, 1.0, 34.0, 0.9, 0.01),
+    # Leap's lean path (§4.4: block layer bypassed, per-core async queues)
+    "disk_lean": LatencyModel("disk_lean", 0.8, 91.5, 60.0, 1.2, 0.1, 0.01),
+    "rdma_lean": LatencyModel("rdma_lean", 0.8, 4.3, 1.0, 1.2, 0.1, 0.01),
+    # TPU tiers: local HBM hit vs pool page over ICI (~50 GB/s/link) or DCN.
+    "tpu_ici": LatencyModel("tpu_ici", 0.1, 1.64, 0.64, 0.3, 0.1, 0.002),
+    "tpu_dcn": LatencyModel("tpu_dcn", 0.1, 13.1, 10.1, 0.3, 0.1, 0.002),
+}
+
+
+@dataclasses.dataclass
+class SimResult:
+    policy: str
+    model: str
+    stats: PrefetchStats
+    total_time: float              # sim completion time (µs)
+    link_busy: float               # fabric busy time (bandwidth consumed)
+    scanned_entries: int           # kswapd-style scan work (LRU baseline)
+
+    def summary(self) -> dict:
+        s = self.stats.summary()
+        s.update(policy=self.policy, model=self.model,
+                 total_time=round(self.total_time, 1),
+                 link_busy=round(self.link_busy, 1),
+                 scanned_entries=self.scanned_entries)
+        return s
+
+
+def simulate(trace, prefetcher: Prefetcher, cache: PageCache,
+             model: LatencyModel | str = "rdma_lean",
+             think_time: float = 0.0, seed: int = 0) -> SimResult:
+    """Replay ``trace`` through ``prefetcher`` + ``cache`` under ``model``."""
+    if isinstance(model, str):
+        model = LATENCY_MODELS[model]
+    rng = np.random.default_rng(seed)
+    stats = cache.stats
+    now = 0.0
+    link_free = 0.0                # busy-until time of the fabric link
+    link_busy_total = 0.0
+
+    for page in np.asarray(trace, dtype=np.int64):
+        page = int(page)
+        stats.faults += 1
+        hit, pf_hit, wait = cache.lookup(page, now)
+        if hit:
+            stats.cache_hits += 1
+            latency = model.t_hit + wait
+        else:
+            stats.misses += 1
+            # demand fetch: data path + queue behind in-flight transfers
+            start = max(now, link_free)
+            done = start + model.t_xfer
+            link_free = done
+            link_busy_total += model.t_xfer
+            stall_units = cache.insert_demand(page, now, done)
+            latency = (model.datapath_cost(rng)
+                       + (model.t_fabric - model.t_xfer)      # launch/latency part
+                       + (done - now)                          # queue + transfer
+                       + stall_units * model.t_scan_unit)
+        # policy reacts to every fault (§4.1 page-access tracker semantics)
+        for cand in prefetcher.on_fault(page, pf_hit):
+            if cand < 0 or cand in cache:
+                continue
+            start = max(now, link_free)
+            done = start + model.t_xfer
+            if cache.insert_prefetch(cand, now, done):
+                link_free = done                  # async, but consumes the link
+                link_busy_total += model.t_xfer
+        stats.latencies.append(latency)
+        now += latency + think_time
+
+    cache.drain_unconsumed()
+    return SimResult(prefetcher.name, model.name, stats, now, link_busy_total,
+                     cache.scanned_entries)
+
+
+def run_policy_matrix(trace, policies: list[str], cache_capacity: int,
+                      eviction_for: dict | None = None,
+                      model: str = "rdma_lean", **policy_kwargs) -> dict:
+    """Run several policies over one trace; returns {policy: SimResult}."""
+    from .prefetcher import make_prefetcher
+
+    eviction_for = eviction_for or {}
+    out = {}
+    for name in policies:
+        pf = make_prefetcher(name, **policy_kwargs.get(name, {}))
+        ev = eviction_for.get(name, "eager" if name == "leap" else "lru")
+        cache = PageCache(cache_capacity, eviction=ev)
+        out[name] = simulate(trace, pf, cache, model=model)
+    return out

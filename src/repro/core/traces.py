@@ -1,0 +1,190 @@
+"""Synthetic slow-tier access-trace generators mirroring the paper's workloads.
+
+The paper characterizes four applications' remote-page access streams (Fig. 3)
+by the fraction of sequential / stride / other patterns inside fault windows
+of length X ∈ {2,4,8}. We generate parameterized traces that reproduce those
+mixes, plus the microbenchmark patterns of §2.2/§5.1:
+
+* :func:`sequential` / :func:`stride` — the Fig. 2/7 microbenchmarks.
+* :func:`phase_shift` — the worked example of Fig. 5 (trend flips mid-stream).
+* :func:`interleaved` — multiple threads with different strides interleaved
+  (the paper's motivating failure case for strict-pattern detectors, and the
+  reason per-stream isolation matters for Fig. 13).
+* :func:`powergraph_like` — mixed seq/stride/irregular segments (graph
+  processing: long sequential edge scans + strided vertex gathers + random).
+* :func:`numpy_matmul_like` — blocked two-operand matmul paging: mostly
+  sequential with a periodic long back-jump at row boundaries.
+* :func:`voltdb_like` — ~69% irregular, short sequential bursts (OLTP).
+* :func:`memcached_like` — ~96% irregular (the Facebook-workload KV cache).
+
+Every generator returns an ``np.int64`` array of page ids. ``classify_windows``
+reproduces Fig. 3's categorization for validation.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _rng(seed):
+    return np.random.default_rng(seed)
+
+
+# -- microbenchmarks ---------------------------------------------------------
+def sequential(n: int, start: int = 0) -> np.ndarray:
+    return np.arange(start, start + n, dtype=np.int64)
+
+
+def stride(n: int, step: int = 10, start: int = 0) -> np.ndarray:
+    return start + step * np.arange(n, dtype=np.int64)
+
+
+def random_pages(n: int, space: int = 1 << 22, seed: int = 0) -> np.ndarray:
+    return _rng(seed).integers(0, space, size=n, dtype=np.int64)
+
+
+def phase_shift(n: int, deltas=(-3, 2), noise_every: int = 12, seed: int = 0,
+                start: int = 1 << 16) -> np.ndarray:
+    """Trend flips between ``deltas`` phases with sparse one-off noise (Fig. 5)."""
+    rng = _rng(seed)
+    out, page = [], start
+    per_phase = max(4, n // len(deltas))
+    i = 0
+    for d in deltas:
+        for _ in range(per_phase):
+            if i >= n:
+                break
+            out.append(page)
+            page += d
+            if noise_every and i % noise_every == noise_every - 1:
+                out[-1] += int(rng.integers(5, 50))  # transient irregularity
+            i += 1
+    while len(out) < n:
+        out.append(page)
+        page += deltas[-1]
+    return np.asarray(out[:n], dtype=np.int64)
+
+
+def interleaved(n: int, streams: int = 4, step: int = 7, seed: int = 0) -> np.ndarray:
+    """Round-robin interleave of ``streams`` independent strided walkers."""
+    bases = [(k + 1) << 20 for k in range(streams)]
+    pages = []
+    pos = list(bases)
+    for i in range(n):
+        s = i % streams
+        pages.append(pos[s])
+        pos[s] += step
+    return np.asarray(pages, dtype=np.int64)
+
+
+# -- application-like mixes ---------------------------------------------------
+def _segmented(n: int, seed: int, seg_choices, seg_len_range,
+               space: int = 1 << 22, noise: float = 0.0):
+    """Concatenate segments drawn from (kind, param) choices with given probs.
+
+    ``noise`` injects one-off transient irregularities *inside* regular
+    segments (a random page, then the stream resumes) — the multi-threading
+    interruptions of real applications that strict 2-fault detectors trip
+    over and majority voting rides out (paper §2.3/§3.2).
+    """
+    rng = _rng(seed)
+    kinds, probs = zip(*[(c[:2], c[2]) for c in seg_choices])
+    probs = np.asarray(probs) / sum(probs)
+    out = []
+    page = int(rng.integers(0, space))
+
+    def emit(p):
+        if noise and rng.random() < noise:
+            out.append(int(rng.integers(0, space)))   # transient interloper
+        out.append(p)
+
+    while len(out) < n:
+        (kind, param) = kinds[int(rng.choice(len(kinds), p=probs))]
+        seg = int(rng.integers(*seg_len_range))
+        if kind == "seq":
+            for _ in range(seg):
+                emit(page)
+                page += 1
+        elif kind == "stride":
+            st = param if param else int(rng.integers(2, 16))
+            for _ in range(seg):
+                emit(page)
+                page += st
+        else:  # random
+            for _ in range(seg):
+                page = int(rng.integers(0, space))
+                out.append(page)
+        if rng.random() < 0.3:  # occasional working-set jump
+            page = int(rng.integers(0, space))
+    return np.asarray(out[:n], dtype=np.int64)
+
+
+def powergraph_like(n: int = 20000, seed: int = 1) -> np.ndarray:
+    """Graph processing: ~60% sequential, ~20% stride, ~20% irregular at X=2,
+    with multi-threaded one-off interruptions inside regular segments
+    (paper Fig. 3: PowerGraph is mostly sequential at X=2, decaying by X=8)."""
+    return _segmented(n, seed, [("seq", 0, 0.58), ("stride", 0, 0.20),
+                                ("rand", 0, 0.22)], (6, 40), noise=0.08)
+
+
+def numpy_matmul_like(n: int = 20000, rows: int = 64, seed: int = 2) -> np.ndarray:
+    """Blocked matmul paging: sequential row sweeps + back-jumps per row."""
+    rng = _rng(seed)
+    out, page = [], 0
+    b_base = 1 << 21
+    while len(out) < n:
+        for _ in range(rows):          # operand A row (sequential)
+            if rng.random() < 0.03:    # GC / allocator interruption
+                out.append(int(rng.integers(0, 1 << 22)))
+            out.append(page)
+            page += 1
+        bcol = b_base + (len(out) // rows) % 97 * rows
+        for k in range(rows // 4):     # operand B column (strided)
+            out.append(bcol + k * rows)
+    return np.asarray(out[:n], dtype=np.int64)
+
+
+def voltdb_like(n: int = 20000, seed: int = 3) -> np.ndarray:
+    """OLTP: ~69% irregular short transactions + small sequential bursts."""
+    return _segmented(n, seed, [("rand", 0, 0.66), ("seq", 0, 0.26),
+                                ("stride", 0, 0.08)], (2, 12), noise=0.05)
+
+
+def memcached_like(n: int = 20000, seed: int = 4) -> np.ndarray:
+    """KV cache: ~96% random single-page accesses, rare short runs."""
+    return _segmented(n, seed, [("rand", 0, 0.95), ("seq", 0, 0.05)], (1, 6))
+
+
+TRACES = {
+    "sequential": lambda n=20000, **kw: sequential(n),
+    "stride10": lambda n=20000, **kw: stride(n, 10),
+    "phase_shift": phase_shift,
+    "interleaved": interleaved,
+    "powergraph": powergraph_like,
+    "numpy": numpy_matmul_like,
+    "voltdb": voltdb_like,
+    "memcached": memcached_like,
+}
+
+
+# -- Fig. 3 classification -----------------------------------------------------
+def classify_windows(pages: np.ndarray, x: int) -> dict:
+    """Fraction of length-``x`` fault windows that are sequential / stride / other.
+
+    sequential: all x pages consecutive (+1 deltas); stride: all x pages share
+    one non-unit delta from the first page; other: anything else. Matches the
+    paper's Fig. 3 definition.
+    """
+    pages = np.asarray(pages)
+    n = len(pages) - x + 1
+    if n <= 0:
+        return {"sequential": 0.0, "stride": 0.0, "other": 0.0}
+    seq = strd = 0
+    for i in range(n):
+        d = np.diff(pages[i:i + x])
+        if np.all(d == 1):
+            seq += 1
+        elif d.size and np.all(d == d[0]) and d[0] != 0:
+            strd += 1
+    return {"sequential": seq / n, "stride": strd / n,
+            "other": (n - seq - strd) / n}

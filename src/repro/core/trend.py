@@ -1,0 +1,124 @@
+"""FINDTREND — Boyer-Moore majority-vote trend detection (paper Alg. 1, §3.2.1).
+
+Given the AccessHistory of deltas, detect the *majority* delta within the most
+recent window: a delta is the major trend of a window of size ``w`` iff it
+appears at least ``floor(w/2) + 1`` times in it. Detection starts with a small
+window (``H_size / N_split``) anchored at the head and doubles the window until
+a majority is found or the window exceeds the history (paper: robust to up to
+``floor(w/2) - 1`` irregular entries per window).
+
+Implementations:
+
+* :func:`find_trend` — NumPy/python reference, bit-exact to Alg. 1. Used by
+  the simulator and as the property-test oracle.
+* :func:`find_trend_jax` — fixed-shape JAX version. ``H_size`` is static, so
+  the ``log2(N_split …)`` window ladder unrolls at trace time; each rung is a
+  masked Boyer-Moore pass expressed as ``lax.scan`` (O(H) total work, exactly
+  the paper's complexity bound since rungs share a geometric sum ≤ 2·H).
+* :func:`boyer_moore` — the O(w)/O(1) vote+verify primitive.
+
+Both return ``(delta, found)``; ``delta`` is meaningless when ``found`` is
+False (JAX version returns 0 there).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .history import AccessHistory
+
+# Smallest detection window = H_size / N_split. The paper's worked example
+# (H=8, N_split=2) starts at window 4; with our default H_size=32 that same
+# effective minimum window of 4 needs N_split=8. Empirically (benchmarks
+# fig9/10) window-4 adapts 1.1-1.2x faster on mixed traces at equal pollution.
+DEFAULT_N_SPLIT = 8
+
+
+# --------------------------------------------------------------------------
+# Reference
+# --------------------------------------------------------------------------
+def boyer_moore(values) -> tuple[int, bool]:
+    """Boyer-Moore majority vote + verification pass over ``values``.
+
+    Returns (candidate, is_true_majority). O(len) time, O(1) space.
+    """
+    values = np.asarray(values)
+    n = len(values)
+    if n == 0:
+        return 0, False
+    candidate, votes = 0, 0
+    for v in values:
+        if votes == 0:
+            candidate, votes = int(v), 1
+        elif int(v) == candidate:
+            votes += 1
+        else:
+            votes -= 1
+    count = int(np.sum(values == candidate))
+    return candidate, count >= (n // 2) + 1
+
+
+def find_trend(history: AccessHistory, n_split: int = DEFAULT_N_SPLIT) -> tuple[int, bool]:
+    """Alg. 1: doubling-window majority search, newest-first from H_head."""
+    h_size = history.h_size
+    w = max(1, h_size // n_split)
+    while True:
+        window = history.window(w)  # newest-first {H_head, ..., H_head-w+1}
+        delta, found = boyer_moore(window)
+        if found:
+            return delta, True
+        w *= 2
+        if w > h_size:
+            return 0, False
+
+
+# --------------------------------------------------------------------------
+# JAX
+# --------------------------------------------------------------------------
+def _masked_boyer_moore(vals: jax.Array, mask: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Vote + verify over ``vals`` where ``mask`` selects window members."""
+
+    def vote(carry, xm):
+        cand, votes = carry
+        x, m = xm
+        is_zero = votes == 0
+        new_cand = jnp.where(is_zero, x, cand)
+        new_votes = jnp.where(is_zero, 1, jnp.where(x == cand, votes + 1, votes - 1))
+        cand = jnp.where(m, new_cand, cand)
+        votes = jnp.where(m, new_votes, votes)
+        return (cand, votes), None
+
+    (cand, _), _ = jax.lax.scan(vote, (jnp.int32(0), jnp.int32(0)), (vals, mask))
+    n = jnp.sum(mask)
+    count = jnp.sum(jnp.where(mask, vals == cand, False))
+    found = (n > 0) & (count >= (n // 2) + 1)
+    return cand, found
+
+
+@functools.partial(jax.jit, static_argnames=("n_split",))
+def find_trend_jax(state: dict, n_split: int = DEFAULT_N_SPLIT) -> tuple[jax.Array, jax.Array]:
+    """JAX twin of :func:`find_trend` over a jittable history state.
+
+    The window ladder (w, 2w, 4w, ... H) is static, so it unrolls; the first
+    rung with a verified majority wins (selected with ``where`` cascades).
+    """
+    h_size = state["deltas"].shape[-1]
+    idx = jnp.mod(state["head"] - jnp.arange(h_size), h_size)
+    vals = state["deltas"][idx]                      # newest-first
+    valid = jnp.arange(h_size) < state["count"]      # entries that exist
+
+    best_delta = jnp.int32(0)
+    best_found = jnp.zeros((), jnp.bool_)
+    w = max(1, h_size // n_split)
+    while w <= h_size:
+        in_window = (jnp.arange(h_size) < w) & valid
+        cand, found = _masked_boyer_moore(vals, in_window)
+        take = found & ~best_found
+        best_delta = jnp.where(take, cand, best_delta)
+        best_found = best_found | found
+        w *= 2
+    return best_delta, best_found

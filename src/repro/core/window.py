@@ -1,0 +1,91 @@
+"""GetPrefetchWindowSize — adaptive prefetch-window controller (paper Alg. 2).
+
+The window size PW_t for the next prefetch is set from the *utilization* of
+the previous prefetch, measured as C_hit = number of prefetched-cache hits
+since the last prefetch was issued:
+
+* ``C_hit == 0`` — previous prefetch unused. If the faulting page still
+  follows the current trend, stay minimally on (PW=1); otherwise suspend
+  (PW=0) until a new trend appears. No extra pages during irregular phases →
+  bounded cache pollution.
+* ``C_hit > 0`` — grow to ``roundpow2(C_hit + 1)``, capped at ``PW_max``; but
+  never collapse faster than halving ("shrink smoothly", Alg. 2 line 13-14) so
+  one bad round doesn't kill an established pattern.
+
+The controller is a 2-word state machine; NumPy and JAX twins below.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+DEFAULT_PW_MAX = 8  # paper §5: maximum prefetch window size PW_max = 8
+
+
+def round_up_pow2(x: int) -> int:
+    """Smallest power of two >= x (x >= 1)."""
+    return 1 if x <= 1 else 1 << (int(x) - 1).bit_length()
+
+
+# --------------------------------------------------------------------------
+# Reference
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class PrefetchWindow:
+    pw_max: int = DEFAULT_PW_MAX
+    pw_prev: int = 0   # PW_{t-1}
+    c_hit: int = 0     # prefetched-cache hits since last prefetch decision
+
+    def note_prefetch_hit(self) -> None:
+        self.c_hit += 1
+
+    def next_size(self, follows_trend: bool) -> int:
+        """Alg. 2 GetPrefetchWindowSize; mutates controller state."""
+        if self.c_hit == 0:
+            pw = 1 if follows_trend else 0
+        else:
+            pw = min(round_up_pow2(self.c_hit + 1), self.pw_max)
+            if pw < self.pw_prev // 2:     # drastic drop -> shrink smoothly
+                pw = self.pw_prev // 2
+        self.c_hit = 0
+        self.pw_prev = pw
+        return pw
+
+
+# --------------------------------------------------------------------------
+# JAX twin
+# --------------------------------------------------------------------------
+def init_window_state(batch: tuple[int, ...] = ()) -> dict:
+    return {
+        "pw_prev": jnp.zeros(batch, jnp.int32),
+        "c_hit": jnp.zeros(batch, jnp.int32),
+    }
+
+
+def _round_up_pow2_jax(x: jax.Array) -> jax.Array:
+    """Smallest power of two >= x, elementwise, for x >= 1 (int32)."""
+    xm1 = jnp.maximum(x - 1, 0)
+    # bit-smearing trick: propagate the MSB down, then +1
+    y = xm1
+    for shift in (1, 2, 4, 8, 16):
+        y = y | (y >> shift)
+    return jnp.maximum(y + 1, 1)
+
+
+def next_window_size(state: dict, follows_trend: jax.Array, pw_max: int = DEFAULT_PW_MAX
+                     ) -> tuple[dict, jax.Array]:
+    """JAX twin of :meth:`PrefetchWindow.next_size` (unbatched; vmap streams)."""
+    c_hit, pw_prev = state["c_hit"], state["pw_prev"]
+    cold = jnp.where(follows_trend, 1, 0)
+    grown = jnp.minimum(_round_up_pow2_jax(c_hit + 1), pw_max)
+    grown = jnp.where(grown < pw_prev // 2, pw_prev // 2, grown)
+    pw = jnp.where(c_hit == 0, cold, grown).astype(jnp.int32)
+    return {"pw_prev": pw, "c_hit": jnp.zeros_like(c_hit)}, pw
+
+
+def note_prefetch_hits(state: dict, hits: jax.Array) -> dict:
+    """Accumulate prefetched-cache hits observed since last prefetch."""
+    return {"pw_prev": state["pw_prev"], "c_hit": state["c_hit"] + hits.astype(jnp.int32)}

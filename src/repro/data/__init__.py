@@ -1,0 +1,7 @@
+"""Data pipeline: sharded token streams with checkpointable state."""
+
+from .pipeline import (MemmapSource, PrefetchQueue, SyntheticSource,
+                       TokenPipeline, make_pipeline)
+
+__all__ = ["MemmapSource", "PrefetchQueue", "SyntheticSource",
+           "TokenPipeline", "make_pipeline"]

@@ -1,0 +1,9 @@
+"""Distribution: logical-axis sharding rules, activation constraints."""
+
+from .sharding import (RULES_SERVE, RULES_TRAIN, named_sharding_for,
+                       shardings_for_tree, batch_shardings, rules_for)
+from .activations import activation_constraint, set_activation_sharding
+
+__all__ = ["RULES_SERVE", "RULES_TRAIN", "named_sharding_for",
+           "shardings_for_tree", "batch_shardings", "rules_for",
+           "activation_constraint", "set_activation_sharding"]

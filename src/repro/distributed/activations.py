@@ -1,0 +1,82 @@
+"""Activation sharding hook (SP): models call it, launch configures it.
+
+``forward_hidden`` pins the residual stream's sharding at every period
+boundary via :func:`activation_constraint`. By default it is the identity;
+the launcher installs (mesh, spec) so trunk activations shard as
+[batch -> data(+pod), seq -> model, d_model -> replicated]. Without the seq
+shard, an 80-period scan saves ~80 full-seq residuals per chip and the 72B
+train_4k cell blows past HBM (see DESIGN.md §5 napkin math).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def set_activation_sharding(mesh, spec: P | None):
+    """Install (or clear, with spec=None) the trunk activation constraint."""
+    _state.value = None if spec is None else NamedSharding(mesh, spec)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, spec: P | None):
+    prev = getattr(_state, "value", None)
+    set_activation_sharding(mesh, spec)
+    try:
+        yield
+    finally:
+        _state.value = prev
+
+
+def activation_constraint(x: jax.Array) -> jax.Array:
+    """Apply the installed constraint to a [B,S,D] trunk activation."""
+    sh = getattr(_state, "value", None)
+    if sh is None or x.ndim != 3:
+        return x
+    return jax.lax.with_sharding_constraint(x, sh)
+
+
+def set_attn_sharding(fn) -> None:
+    """Install an (q,k,v) -> (q,k,v) resharding hook (perf flag
+    ``attn_reshard``; built mesh-aware by launch.steps)."""
+    _state.attn = fn
+
+
+def attn_constraint(q, k, v):
+    fn = getattr(_state, "attn", None)
+    if fn is None:
+        return q, k, v
+    return fn(q, k, v)
+
+
+def set_matmul_input_sharding(fn) -> None:
+    """Install the pre-matmul activation constraint (perf flag ``mm_gather``):
+    gather the seq dim before weight matmuls so weight gradients reduce over
+    the batch/data axis (reduce-scatter onto FSDP shards) instead of
+    all-reducing full-size over the model axis (H4). SP still applies at
+    period boundaries for the saved residual stream."""
+    _state.mm = fn
+
+
+def matmul_input_constraint(y):
+    fn = getattr(_state, "mm", None)
+    return y if fn is None else fn(y)
+
+
+def set_decode_logits_sharding(fn) -> None:
+    """Install a constraint for decode-attention logits [B,Hkv,G,T] (perf
+    flag ``decode_tsh``): pinning T->model keeps the KV sequence sharded so
+    softmax reduces via small cross-shard (max,sum) all-reduces instead of
+    GSPMD all-gathering the whole KV cache per layer (hypothesis H5)."""
+    _state.decode_logits = fn
+
+
+def decode_logits_constraint(s):
+    fn = getattr(_state, "decode_logits", None)
+    return s if fn is None else fn(s)

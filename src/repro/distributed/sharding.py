@@ -1,0 +1,110 @@
+"""Logical-axis -> mesh-axis sharding rules (TP + FSDP + EP + SP).
+
+Every parameter/state leaf carries a tuple of logical axis names (see
+``repro.models.layers``); this module resolves them against a mesh through a
+rules table. Resolution is defensive in two ways that make one rules table
+serve all ten architectures:
+
+* **divisibility fallback** — if a dim isn't divisible by its mesh axes'
+  product, that dim falls back to replicated (e.g. seamless's vocab 256206
+  on a 16-way model axis, or the long_500k batch of 1 on the data axis).
+* **duplicate-axis drop** — if two dims of one leaf resolve to the same mesh
+  axis, the later dim is replicated (e.g. expert weights [E, D, F]:
+  E->model, D->data, F->model would reuse 'model'; F becomes None). This is
+  what turns the MoE expert stacks into 2-D (EP x FSDP) shards without a
+  special case.
+
+Rule sets: TRAIN = TP over 'model' + FSDP over 'data' (+ pure DP over 'pod'
+— params replicated across pods, gradients all-reduced over DCN); SERVE =
+same weight layout plus decode-state rules (batch over data(+pod), KV
+sequence over model = sequence-parallel decode attention).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> mesh axis (or tuple of axes)
+RULES_TRAIN = {
+    "vocab": "model",
+    "ff": "model",
+    "expert_ff": "data",             # experts take 'model'; ff spreads FSDP-style
+    "heads": "model",
+    "kv_heads": "model",
+    "experts": "model",
+    "inner": "model",
+    "embed": "data",                 # FSDP: weights' d_model dim over data
+    "layers": None,
+    "batch": ("pod", "data"),
+    "act_seq": "model",              # SP: activation seq dim
+    "kv_seq": "model",
+    "kv_heads_s": None,
+    "pages": "data",
+}
+
+RULES_SERVE = dict(RULES_TRAIN)
+
+
+def rules_for(mode: str, multi_pod: bool) -> dict:
+    rules = dict(RULES_TRAIN if mode == "train" else RULES_SERVE)
+    if not multi_pod:
+        rules["batch"] = "data"
+    return rules
+
+
+def _axes_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, str):
+        return mesh.shape[ax]
+    n = 1
+    for a in ax:
+        n *= mesh.shape[a]
+    return n
+
+
+def named_sharding_for(axes: tuple, shape: tuple, mesh: Mesh,
+                       rules: dict) -> NamedSharding:
+    """Resolve one leaf's logical axes to a NamedSharding (with fallbacks)."""
+    used: set[str] = set()
+    parts = []
+    for dim, name in zip(shape, axes):
+        ax = rules.get(name) if name else None
+        if ax is None:
+            parts.append(None)
+            continue
+        ax_t = (ax,) if isinstance(ax, str) else tuple(ax)
+        ax_t = tuple(a for a in ax_t if a not in used)
+        size = _axes_size(mesh, ax_t)
+        if not ax_t or size <= 1 or dim % size != 0:
+            parts.append(None)
+            continue
+        used.update(ax_t)
+        parts.append(ax_t[0] if len(ax_t) == 1 else ax_t)
+    # trailing dims beyond len(axes) stay replicated
+    return NamedSharding(mesh, P(*parts))
+
+
+def shardings_for_tree(spec_tree, shape_tree, mesh: Mesh, rules: dict):
+    """spec_tree: logical-axis tuples; shape_tree: arrays/ShapeDtypeStructs."""
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+    return jax.tree.map(
+        lambda ax, like: named_sharding_for(ax, like.shape, mesh, rules),
+        spec_tree, shape_tree, is_leaf=is_spec)
+
+
+def batch_shardings(batch_specs: dict, mesh: Mesh, rules: dict):
+    """Shardings for train/prefill batches: dim0 = batch, rest replicated.
+
+    positions3 has batch at dim1 ([3,B,S]); handled by name.
+    """
+    def one(name, leaf):
+        if name == "positions3":
+            ax = (None, "batch", None)
+        else:
+            ax = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return named_sharding_for(ax, leaf.shape, mesh, rules)
+
+    return {k: one(k, v) for k, v in batch_specs.items()}

@@ -1,0 +1,120 @@
+"""Pallas TPU flash-attention forward (GQA, causal / sliding-window).
+
+Grid = (B*Hq, Sq/bq, Sk/bk) with the KV dimension innermost: TPU grids
+iterate sequentially, so the (m, l, acc) online-softmax state lives in VMEM
+scratch and persists across the KV sweep for one (head, q-block); the output
+tile is written once on the last KV step. K/V tiles for a q-head map to its
+GQA group's KV head via the BlockSpec index_map — no materialized
+head-broadcast of K/V (that is the kernel-level point: HBM->VMEM traffic is
+per-KV-head, not per-Q-head).
+
+VMEM budget per step (fp32): q/k/v tiles + acc ≈ (3·bk + 2·bq)·dh·4 bytes —
+with bq=bk=512, dh=128 ≈ 1.3 MB, comfortably inside a v5e core's ~16 MB
+VMEM with double buffering. MXU alignment: bq, bk multiples of 128 (the
+wrapper pads dh to 128).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, n_kv_blocks: int,
+                  q_offset: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * sm_scale          # [bq, dh]
+    k = k_ref[0].astype(jnp.float32)                     # [bk, dh]
+    v = v_ref[0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # [bq, bk]
+
+    qpos = (iq * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+            + q_offset)
+    kpos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * corr
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_kv_blocks - 1)
+    def _write():
+        o_ref[0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        q_offset: int = 0, block_q: int = 512,
+                        block_k: int = 512, sm_scale: float | None = None,
+                        interpret: bool = True) -> jax.Array:
+    """q [B,Hq,Sq,dh], k/v [B,Hkv,Sk,dh] -> o [B,Hq,Sq,dh].
+
+    dh must be a multiple of 128 and block sizes must divide Sq/Sk (the
+    ops.py wrapper pads/derives these — sm_scale uses the *unpadded* dh).
+    """
+    B, Hq, Sq, dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    nq, nk = Sq // block_q, Sk // block_k
+    qf = q.reshape(B * Hq, Sq, dh)
+    kf = k.reshape(B * Hkv, Sk, dh)
+    vf = v.reshape(B * Hkv, Sk, dh)
+
+    def q_map(bh, iq, ik):
+        return (bh, iq, 0)
+
+    def kv_map(bh, iq, ik):
+        b, h = bh // Hq, bh % Hq
+        return (b * Hkv + h // G, ik, 0)
+
+    kernel = functools.partial(
+        _flash_kernel, sm_scale=sm_scale or 1.0 / (dh ** 0.5), causal=causal,
+        window=window, block_q=block_q, block_k=block_k, n_kv_blocks=nk,
+        q_offset=q_offset)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * Hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, dh), q_map),
+            pl.BlockSpec((1, block_k, dh), kv_map),
+            pl.BlockSpec((1, block_k, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dh), q_map),
+        out_shape=jax.ShapeDtypeStruct((B * Hq, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, Hq, Sq, dh)

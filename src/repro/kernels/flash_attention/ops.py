@@ -1,0 +1,62 @@
+"""Jit'd public wrapper: layout/padding glue around the Pallas kernel.
+
+Accepts the model-side [B,S,H,dh] layout, pads dh to a multiple of 128 (MXU
+lane width) and S to the block size, dispatches the kernel (interpret=True
+off-TPU), and unpads. ``flash_attention(..., use_kernel=False)`` routes to
+the jnp oracle — the dry-run lowers that path so cost_analysis sees real
+FLOPs instead of an opaque callback.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import flash_attention_ref
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x, 0
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), pad
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "q_offset", "block_q", "block_k", "interpret",
+    "use_kernel"))
+def flash_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    block_q=512, block_k=512, interpret=None,
+                    use_kernel=True):
+    """q [B,Sq,Hq,dh], k/v [B,Sk,Hkv,dh] -> [B,Sq,Hq,dh]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Sq, Hq, dh = q.shape
+    Sk = k.shape[1]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if not use_kernel:
+        return flash_attention_ref(qt, kt, vt, causal=causal, window=window,
+                                   q_offset=q_offset).transpose(0, 2, 1, 3)
+
+    # dh padding: zero-padded q/k leave scores unchanged; padded v columns
+    # produce zero output columns that we slice away.
+    qt, _ = _pad_to(qt, 128, 3)
+    kt, _ = _pad_to(kt, 128, 3)
+    vt, _ = _pad_to(vt, 128, 3)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    while Sq % bq:
+        bq //= 2
+    while Sk % bk:
+        bk //= 2
+    o = flash_attention_fwd(qt, kt, vt, causal=causal, window=window,
+                            q_offset=q_offset, block_q=bq, block_k=bk,
+                            sm_scale=1.0 / (dh ** 0.5), interpret=interpret)
+    return o[..., :dh].transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the flash-attention kernel (exact softmax)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        q_offset: int = 0) -> jax.Array:
+    """Same contract as kernel.flash_attention_fwd ([B,H,S,dh] layout)."""
+    B, Hq, Sq, dh = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kx = jnp.repeat(k, G, axis=1).astype(jnp.float32)
+    vx = jnp.repeat(v, G, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32), kx)
+    s = s / jnp.sqrt(jnp.float32(dh))
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(mask, p, 0.0)          # fully-masked rows -> 0, not NaN
+    return jnp.einsum("bhqs,bhsd->bhqd", p, vx).astype(q.dtype)

@@ -1,0 +1,4 @@
+from .ops import gather_pages
+from .ref import gather_pages_ref
+
+__all__ = ["gather_pages", "gather_pages_ref"]

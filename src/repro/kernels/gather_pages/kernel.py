@@ -1,0 +1,53 @@
+"""Pallas TPU page-gather: Leap's lean data path, kernel form.
+
+The paper's C4 contribution — bypass the block layer's staging/batching and
+stream pages directly with per-core async queues — maps on TPU to a
+scalar-prefetch-driven gather: the page-index list (what Leap's prefetcher
+decided to fetch) is a scalar-prefetch operand, so the BlockSpec index_map
+redirects each grid step's HBM->VMEM DMA straight at the requested page.
+Pallas' pipeline emitter double-buffers those DMAs: page i+1 is in flight
+while page i is written out — the "async RDMA queue" analogue, with zero
+intermediate staging in HBM.
+
+Block = one page (page_elems flattened). VMEM per step = 2 pages in flight
+x page bytes; a 32 KB KV page (16 tok x 8 kv-heads x 128 dim x 2 B) uses
+64 KB — far under v5e's ~16 MB VMEM, so the pipeline stays DMA-bound, which
+is the point (roofline: pure memory term).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gather_kernel(idx_ref, pool_ref, out_ref):
+    # idx_ref is scalar-prefetch (drives the index_map); body is a pure copy.
+    out_ref[...] = pool_ref[...]
+
+
+def gather_pages_fwd(pool: jax.Array, indices: jax.Array, *,
+                     interpret: bool = True) -> jax.Array:
+    """pool [n_pages, E], indices [K] int32 -> out [K, E].
+
+    Out-of-range indices are clamped (callers mask invalid requests; the
+    Leap controller emits candidates that may run off the pool edge).
+    """
+    n_pages, E = pool.shape
+    K = indices.shape[0]
+    idx = jnp.clip(indices, 0, n_pages - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(K,),
+        in_specs=[pl.BlockSpec((1, E), lambda i, idx_ref: (idx_ref[i], 0))],
+        out_specs=pl.BlockSpec((1, E), lambda i, idx_ref: (i, 0)),
+    )
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, E), pool.dtype),
+        interpret=interpret,
+    )(idx, pool)

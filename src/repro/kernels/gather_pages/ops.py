@@ -1,0 +1,28 @@
+"""Jit'd wrapper for the page-gather kernel (arbitrary page payload shape)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import gather_pages_fwd
+from .ref import gather_pages_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def gather_pages(pool: jax.Array, indices: jax.Array, *,
+                 interpret: bool | None = None,
+                 use_kernel: bool = True) -> jax.Array:
+    """pool [n_pages, ...page shape], indices [K] -> [K, ...page shape]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if not use_kernel:
+        return gather_pages_ref(pool.reshape(pool.shape[0], -1),
+                                indices).reshape((indices.shape[0],)
+                                                 + pool.shape[1:])
+    flat = pool.reshape(pool.shape[0], -1)
+    out = gather_pages_fwd(flat, indices.astype(jnp.int32),
+                           interpret=interpret)
+    return out.reshape((indices.shape[0],) + pool.shape[1:])

@@ -1,0 +1,11 @@
+"""Pure-jnp oracle for gather_pages."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gather_pages_ref(pool: jax.Array, indices: jax.Array) -> jax.Array:
+    idx = jnp.clip(indices, 0, pool.shape[0] - 1)
+    return jnp.take(pool, idx, axis=0)

@@ -1,0 +1,113 @@
+"""Pallas TPU paged-attention decode: one query token vs a paged KV pool.
+
+vLLM-style paged KV adapted to TPU: KV lives in a page pool
+[n_pages, page_size, Hkv, dh]; each sequence's logical context is a
+page_table row. The kernel fuses Leap's data path with the consumer: the
+page_table is a scalar-prefetch operand, so each (batch, kv-head, page) grid
+step DMAs exactly the page the table names — gather and attention in one
+pass, no [B, T, ...] contiguous cache ever materializes (that contiguous
+copy is the "block layer" overhead this kernel deletes).
+
+Online softmax state (m, l, acc) for the G grouped q-heads lives in VMEM
+scratch across the page sweep (pages innermost). Padded/unused trailing
+pages are masked by the sequence length (also scalar-prefetched).
+
+VMEM per step: k/v page tiles 2 x page_size x dh x 4 B (+ q tile G x dh) —
+page_size 64, dh 128 ≈ 64 KB: DMA-latency-bound, exactly the regime where
+prefetch-ahead (issuing the next page's DMA early) pays, mirroring the
+paper's timeliness axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *,
+                  sm_scale: float, page_size: int, n_pages_per_seq: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32) * sm_scale       # [G, dh]
+    k = k_ref[0, :, 0].astype(jnp.float32)               # [page_size, dh]
+    v = v_ref[0, :, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))  # [G, page_size]
+
+    tpos = (j * page_size
+            + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1))
+    mask = tpos < len_ref[b]
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(-1, keepdims=True))
+    m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.where(mask, jnp.exp(s - m_safe), 0.0)
+    corr = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - m_safe))
+    l_scr[...] = l_scr[...] * corr + p.sum(-1, keepdims=True)
+    acc_scr[...] = (acc_scr[...] * corr
+                    + jax.lax.dot_general(p, v, (((1,), (0,)), ((), ()))))
+    m_scr[...] = m_new
+
+    @pl.when(j == n_pages_per_seq - 1)
+    def _write():
+        o_ref[0, 0] = (acc_scr[...] / jnp.maximum(l_scr[...], 1e-30)
+                       ).astype(o_ref.dtype)
+
+
+def paged_attention_fwd(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        page_table: jax.Array, lengths: jax.Array, *,
+                        sm_scale: float | None = None,
+                        interpret: bool = True) -> jax.Array:
+    """q [B,Hkv,G,dh]; pools [n_pages,page_size,Hkv,dh];
+    page_table [B,n_pages_per_seq] int32; lengths [B] int32 -> [B,Hkv,G,dh].
+    """
+    B, Hkv, G, dh = q.shape
+    n_pages, page_size = k_pool.shape[0], k_pool.shape[1]
+    npps = page_table.shape[1]
+    pt_flat = jnp.clip(page_table.reshape(-1), 0, n_pages - 1)
+
+    def q_map(b, h, j, pt, ln):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, j, pt, ln):
+        return (pt[b * npps + j], 0, h, 0)
+
+    kernel = functools.partial(
+        _paged_kernel, sm_scale=sm_scale or 1.0 / (dh ** 0.5),
+        page_size=page_size, n_pages_per_seq=npps)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, Hkv, npps),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, dh), q_map),
+            pl.BlockSpec((1, page_size, 1, dh), kv_map),
+            pl.BlockSpec((1, page_size, 1, dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, dh), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, dh), q.dtype),
+        interpret=interpret,
+    )(pt_flat, lengths.astype(jnp.int32), q, k_pool, v_pool)

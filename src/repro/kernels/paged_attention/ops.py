@@ -1,0 +1,28 @@
+"""Jit'd wrapper for paged decode attention ([B,1,Hq,dh] model layout)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import paged_attention_fwd
+from .ref import paged_attention_ref
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "use_kernel"))
+def paged_attention(q, k_pool, v_pool, page_table, lengths, *,
+                    interpret: bool | None = None, use_kernel: bool = True):
+    """q [B,1,Hq,dh] (model layout) -> [B,1,Hq,dh]."""
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, one, Hq, dh = q.shape
+    Hkv = k_pool.shape[2]
+    G = Hq // Hkv
+    qg = q[:, 0].reshape(B, Hkv, G, dh)
+    fn = paged_attention_fwd if use_kernel else paged_attention_ref
+    kw = {"interpret": interpret} if use_kernel else {}
+    o = fn(qg, k_pool, v_pool, page_table.astype(jnp.int32),
+           lengths.astype(jnp.int32), sm_scale=1.0 / (dh ** 0.5), **kw)
+    return o.reshape(B, 1, Hq, dh)

@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for paged decode attention: gather pages, exact softmax."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                        page_table: jax.Array, lengths: jax.Array,
+                        sm_scale: float | None = None) -> jax.Array:
+    """Same contract as kernel.paged_attention_fwd."""
+    B, Hkv, G, dh = q.shape
+    n_pages, page_size = k_pool.shape[0], k_pool.shape[1]
+    pt = jnp.clip(page_table, 0, n_pages - 1)
+    k = k_pool[pt]                                  # [B,npps,page,Hkv,dh]
+    v = v_pool[pt]
+    B_, npps = pt.shape
+    T = npps * page_size
+    k = k.reshape(B, T, Hkv, dh).astype(jnp.float32)
+    v = v.reshape(B, T, Hkv, dh).astype(jnp.float32)
+    scale = sm_scale or 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bhgd,bthd->bhgt", q.astype(jnp.float32), k) * scale
+    mask = jnp.arange(T)[None, :] < lengths[:, None]
+    s = jnp.where(mask[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhgt,bthd->bhgd", p, v).astype(q.dtype)

@@ -1,0 +1,93 @@
+"""Pallas TPU fused selective scan (Mamba S6) — h lives in VMEM.
+
+The §Perf hillclimb on jamba/train_4k refuted "shrink the (Δ,B,C) inputs"
+(H3): the dominant HBM traffic is the per-step state carry
+``h [B,di,N]`` that a jnp ``lax.scan`` writes back every token (~34 GB per
+layer per sweep at 4K seq). This kernel is the structural fix: the time
+dimension is the innermost grid axis, so ``h`` persists in a VMEM scratch
+across the whole sweep and HBM sees only the inputs once and ``y`` once.
+
+Grid = (B, di/bd, S/bt) — time innermost (TPU grids iterate sequentially,
+scratch persists); channel blocks are independent scans (S6's recurrence
+is elementwise over di). VMEM per step: dt/x tiles [bt, bd], b/c tiles
+[bt, N], h [bd, N], y [bt, bd] ≈ (2·bt·bd + 2·bt·N + bd·N)·4 B — with
+bt=bd=128, N=16 ≈ 160 KB, far under ~16 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _sscan_kernel(dt_ref, b_ref, c_ref, x_ref, a_ref, y_ref, h_out_ref,
+                  h_scr, *, block_t: int, n_t_blocks: int):
+    it = pl.program_id(2)
+
+    @pl.when(it == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    dt = dt_ref[0].astype(jnp.float32)          # [bt, bd]
+    bmat = b_ref[0].astype(jnp.float32)         # [bt, N]
+    cmat = c_ref[0].astype(jnp.float32)         # [bt, N]
+    x = x_ref[0].astype(jnp.float32)            # [bt, bd]
+    a = a_ref[...].astype(jnp.float32)          # [bd, N]
+
+    def step(t, h):
+        da = jnp.exp(dt[t][:, None] * a)                     # [bd, N]
+        h = da * h + (dt[t] * x[t])[:, None] * bmat[t][None, :]
+        y_ref[0, t, :] = jnp.sum(h * cmat[t][None, :], axis=1).astype(
+            y_ref.dtype)
+        return h
+
+    h_scr[...] = jax.lax.fori_loop(0, block_t, step, h_scr[...])
+
+    @pl.when(it == n_t_blocks - 1)
+    def _emit_state():
+        h_out_ref[0] = h_scr[...]               # decode carry (prefill)
+
+
+def selective_scan_fwd(dt: jax.Array, b: jax.Array, c: jax.Array,
+                       x: jax.Array, a: jax.Array, *,
+                       block_t: int = 128, block_d: int = 128,
+                       interpret: bool = True):
+    """dt/x [B,S,di], b/c [B,S,N], a [di,N] ->
+    (y [B,S,di], h_final [B,di,N]) with h_0 = 0."""
+    B, S, di = dt.shape
+    N = b.shape[-1]
+    while S % block_t:
+        block_t //= 2
+    while di % block_d:
+        block_d //= 2
+    nt, nd = S // block_t, di // block_d
+
+    kernel = functools.partial(_sscan_kernel, block_t=block_t, n_t_blocks=nt)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, nd, nt),
+        in_specs=[
+            pl.BlockSpec((1, block_t, block_d),
+                         lambda ib, idd, it: (ib, it, idd)),
+            pl.BlockSpec((1, block_t, N), lambda ib, idd, it: (ib, it, 0)),
+            pl.BlockSpec((1, block_t, N), lambda ib, idd, it: (ib, it, 0)),
+            pl.BlockSpec((1, block_t, block_d),
+                         lambda ib, idd, it: (ib, it, idd)),
+            pl.BlockSpec((block_d, N), lambda ib, idd, it: (idd, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, block_d),
+                         lambda ib, idd, it: (ib, it, idd)),
+            pl.BlockSpec((1, block_d, N), lambda ib, idd, it: (ib, idd, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, di), dt.dtype),
+            jax.ShapeDtypeStruct((B, di, N), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
+        interpret=interpret,
+    )(dt, b, c, x, a)

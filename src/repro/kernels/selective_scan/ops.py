@@ -1,0 +1,29 @@
+"""Jit'd wrapper for the fused selective scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from .kernel import selective_scan_fwd
+from .ref import selective_scan_ref
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_d",
+                                             "interpret", "use_kernel",
+                                             "return_state"))
+def selective_scan(dt, b, c, x, a, *, block_t=128, block_d=128,
+                   interpret=None, use_kernel=True, return_state=False):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    if not use_kernel:
+        y = selective_scan_ref(dt, b, c, x, a)
+        if not return_state:
+            return y
+        # oracle state via one extra step of the reference recurrence
+        from .ref import selective_scan_state_ref
+        return y, selective_scan_state_ref(dt, b, c, x, a)
+    y, h = selective_scan_fwd(dt, b, c, x, a, block_t=block_t,
+                              block_d=block_d, interpret=interpret)
+    return (y, h) if return_state else y

@@ -1,0 +1,1 @@
+"""Launch: production mesh, jitted step builders, dry-run, train/serve CLIs."""

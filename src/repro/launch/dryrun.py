@@ -1,0 +1,173 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first — jax pins the device count at first
+init, and the production meshes need 512 placeholder host devices. Tests
+and benchmarks never import this module, so they keep seeing 1 device.
+
+Per cell this script:
+  1. builds the jitted step (repro.launch.steps) with production shardings,
+  2. ``lower(**ShapeDtypeStructs)`` then ``compile()`` — success proves the
+     sharding config is coherent (no mismatched collectives, no OOM at
+     compile),
+  3. records ``memory_analysis()`` (per-chip bytes — proves it fits 16 GB),
+     ``cost_analysis()`` (per-chip FLOPs/bytes for the roofline), and the
+     collective mix parsed from the partitioned HLO,
+  4. writes one JSON per cell under --out (results are cached: cells
+     already present are skipped unless --force).
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2_72b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out results/dryrun]
+"""
+
+import argparse
+import json
+import math
+import re
+import time
+import traceback
+
+import jax
+
+from repro import configs as cfglib
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_cell
+
+COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\b")
+SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-op collective traffic from the *partitioned* (per-device) HLO.
+
+    Counts each collective's output bytes (the per-chip tensor it
+    materializes). The roofline's collective term applies a per-type factor
+    (ring all-reduce moves ~2x) downstream in benchmarks.roofline.
+    """
+    out: dict = {}
+    for line in hlo_text.splitlines():
+        if "=" not in line:
+            continue
+        m = COLLECTIVE_RE.search(line.split("(")[0])
+        if not m:
+            continue
+        op = m.group(1)
+        sm = SHAPE_RE.search(line.split("=", 1)[1])
+        if not sm:
+            continue
+        b = _shape_bytes(sm.group(1), sm.group(2))
+        d = out.setdefault(op, {"count": 0, "bytes": 0})
+        d["count"] += 1
+        d["bytes"] += b
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, multi_pod=multi_pod)
+    rec = {"arch": arch, "shape": shape,
+           "mesh": dict(mesh.shape), "multi_pod": multi_pod,
+           "kind": cell.kind}
+    if cell.skip:
+        rec["skip"] = cell.skip
+        return rec
+    with mesh:
+        lowered = cell.step_fn.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+    ma = compiled.memory_analysis()
+    ca = compiled.cost_analysis() or {}
+    hlo = compiled.as_text()
+    loop_aware = analyze_hlo(hlo)
+    rec.update({
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_nonarg_bytes": ma.temp_size_in_bytes,
+        },
+        "cost": {
+            "flops": ca.get("flops", 0.0),
+            "transcendentals": ca.get("transcendentals", 0.0),
+            "bytes_accessed": ca.get("bytes accessed", 0.0),
+        },
+        "collectives": parse_collectives(hlo),          # naive (unscaled)
+        "collectives_loop_aware": loop_aware["collectives"],
+        "hbm_write_bytes": loop_aware["hbm_write_bytes"],
+        "loop_counts": loop_aware["loop_counts"],
+        "n_chips": math.prod(mesh.shape.values()),
+    })
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    archs = cfglib.ARCHS if (args.all or not args.arch) else [args.arch]
+    shapes = list(cfglib.SHAPES) if (args.all or not args.shape) else [args.shape]
+    for a in archs:
+        for s in shapes:
+            cells.append((a, s))
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for a, s in cells:
+        tag = f"{a}__{s}__{'pod2' if args.multi_pod else 'pod1'}"
+        path = os.path.join(args.out, tag + ".json")
+        if os.path.exists(path) and not args.force:
+            print(f"[cached] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            rec = run_cell(a, s, args.multi_pod)
+        except Exception as e:
+            failures += 1
+            rec = {"arch": a, "shape": s, "multi_pod": args.multi_pod,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+            print(f"  FAILED: {e}")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+        if "memory" in rec:
+            gb = (rec["memory"]["temp_bytes"]
+                  + rec["memory"]["argument_bytes"]) / 2**30
+            print(f"  ok: compile={rec['compile_s']}s "
+                  f"per-chip args+temp={gb:.2f} GiB "
+                  f"flops/chip={rec['cost']['flops']:.3g}")
+    print(f"done; {failures} failures")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

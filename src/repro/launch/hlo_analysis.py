@@ -1,0 +1,210 @@
+"""Loop-aware analysis of partitioned HLO text: collectives + HBM traffic.
+
+XLA prints each computation once, so naive text scans under-count anything
+inside a ``while`` body by its trip count (and the period-scan trunk runs
+n_periods iterations). This module:
+
+1. splits the module into computations,
+2. builds the while-call graph (caller -> body/cond) and extracts each
+   loop's trip count (largest s32 constant in the condition computation —
+   the canonical `compare(iv, constant(N), LT)` pattern GSPMD emits),
+3. propagates execution counts from the entry (entry=1, body = caller x trip),
+4. aggregates, weighted by execution count:
+   * collective bytes by type (output-shape bytes; `-start/-done` pairs are
+     counted once via the start op),
+   * an HBM-traffic estimate: sum of op *output* bytes over all non-trivial
+     ops (post-fusion, so roughly one write per fused op; reads ~= writes is
+     applied as a 2x factor by the roofline, documented there).
+
+These are estimates of a *schedule*, not measurements — but they are
+loop-scaled, fusion-aware, and per-device, which is what the roofline needs.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+# header = "<name> (params...) -> result {" — params may nest tuple types,
+# so only anchor on the leading name + '(' (the line must end with '{').
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-_]+)\s*\(")
+_SHAPE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_WHILE = re.compile(r"\bwhile\(")
+_CALLED = re.compile(r"(condition|body)=%?([\w\.\-_]+)")
+_CONST = re.compile(r"constant\((\d+)\)")
+# first `word(` token on the rhs is the op name (shapes never precede '('
+# directly; tuple shapes open with a bare '(' not preceded by a word char)
+_OPNAME = re.compile(r"([a-z0-9\-]+)\(")
+
+SKIP_OPS = {"parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+            "copy", "copy-start", "copy-done", "after-all", "partition-id",
+            # TPU-target corrections: bare converts are CPU bf16->f32
+            # legalization (the MXU consumes bf16 directly); the `while` op's
+            # own output is the donated/aliased loop state.
+            "convert", "while"}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def split_computations(hlo: str) -> dict[str, list[str]]:
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        if stripped.endswith("{"):
+            m = _COMP_HDR.match(stripped.rstrip("{").strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                continue
+        if stripped == "}":
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def loop_structure(comps: dict[str, list[str]]) -> dict[str, int]:
+    """Execution count per computation (entry-rooted; bodies x trip count)."""
+    # find while ops: caller -> (body, cond); trip from XLA's own
+    # known_trip_count backend_config (fallback: condition constants).
+    edges: list[tuple[str, str, str]] = []
+    trip_of: dict[str, int] = {}
+    for name, lines in comps.items():
+        for line in lines:
+            if "while(" not in line or not _WHILE.search(line):
+                continue
+            called = dict()
+            for kind, target in _CALLED.findall(line):
+                called[kind] = target
+            if "body" not in called:
+                continue
+            edges.append((name, called["body"], called.get("condition", "")))
+            m = _TRIP.search(line)
+            if m:
+                trip_of[called["body"]] = int(m.group(1))
+
+    for _, body, cond in edges:
+        if body in trip_of:
+            continue
+        trip = 1
+        for line in comps.get(cond, []):
+            for c in _CONST.findall(line):
+                trip = max(trip, int(c))
+        trip_of[body] = trip
+
+    entry = None
+    for name in comps:
+        if name.startswith("main") or entry is None:
+            if name.startswith("main"):
+                entry = name
+    counts: dict[str, int] = defaultdict(int)
+    counts[entry] = 1
+    # propagate (few nesting levels; iterate to fixpoint)
+    for _ in range(8):
+        changed = False
+        for caller, body, _ in edges:
+            want = counts[caller] * trip_of.get(body, 1)
+            if want > counts[body]:
+                counts[body] = want
+                changed = True
+        if not changed:
+            break
+    return dict(counts)
+
+
+_CALLS = re.compile(r"calls=%?([\w\.\-_]+)")
+
+
+def _dus_update_bytes(comps: dict[str, list[str]]) -> dict[str, int]:
+    """fused computations containing a dynamic-update-slice -> update bytes.
+
+    In-loop cache/accumulator updates are in-place (XLA aliases the loop
+    carry), so such a fusion's real HBM write is the *update slice*, not
+    the full buffer our output-shape scan would count (a 32K-token KV
+    cache would otherwise be 'written' wholesale every decode step). The
+    CPU backend sometimes wraps the dus in a convert (bf16 legalization),
+    so any fusion *containing* a dus whose operand resolves is treated as
+    in-place — on TPU the convert does not exist and the dus aliases.
+    """
+    out = {}
+    for name, lines in comps.items():
+        for line in lines:
+            ls = line.strip()
+            if "dynamic-update-slice(" not in ls:
+                continue
+            # operands: (buffer, update, idx...) — update is the 2nd
+            ops = ls.split("dynamic-update-slice(", 1)[1]
+            names = re.findall(r"%([\w\.\-_]+)", ops)
+            if len(names) >= 2:
+                upd = names[1]
+                for l2 in lines:
+                    if re.match(rf"\s*(?:ROOT )?%{re.escape(upd)}\s*=\s*", l2):
+                        sm = _SHAPE.search(l2.split("=", 1)[1])
+                        if sm:
+                            out[name] = _shape_bytes(sm.group(1), sm.group(2))
+                        break
+            break
+    return out
+
+
+def analyze_hlo(hlo: str) -> dict:
+    comps = split_computations(hlo)
+    counts = loop_structure(comps)
+    dus_fused = _dus_update_bytes(comps)
+    coll: dict[str, dict] = {}
+    hbm_write_bytes = 0.0
+    for name, lines in comps.items():
+        mult = counts.get(name, 1)
+        for line in lines:
+            if "=" not in line:
+                continue
+            rhs = line.split("=", 1)[1]
+            mop = _OPNAME.search(rhs)
+            if not mop:
+                continue
+            opname = mop.group(1)
+            if opname in SKIP_OPS or opname.endswith("-done"):
+                continue                     # start/done pairs: count start
+            # output bytes = all shapes printed before the op name
+            b = sum(_shape_bytes(dt, dims)
+                    for dt, dims in _SHAPE.findall(rhs[: mop.start()]))
+            if b == 0:
+                continue
+            if opname == "fusion":
+                mc = _CALLS.search(rhs)
+                if mc and mc.group(1) in dus_fused:
+                    b = min(b, dus_fused[mc.group(1)])   # in-place update
+                elif mc and "wrapped_convert" in mc.group(1):
+                    continue                             # CPU legalization
+            elif opname == "dynamic-update-slice":
+                # bare dus: update operand size unknown here; it aliases, so
+                # skip the full-buffer write (update slices are tiny).
+                continue
+            base = opname[:-6] if opname.endswith("-start") else opname
+            if base in COLLECTIVES:
+                # start-form tuple outputs repeat the payload (operand+result)
+                if opname.endswith("-start"):
+                    b //= 2
+                d = coll.setdefault(base, {"count": 0, "bytes": 0.0})
+                d["count"] += mult
+                d["bytes"] += mult * b
+            hbm_write_bytes += mult * b
+    return {"collectives": coll,
+            "hbm_write_bytes": hbm_write_bytes,
+            "n_computations": len(comps),
+            "loop_counts": {k: v for k, v in counts.items() if v > 1}}

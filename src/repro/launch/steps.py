@@ -1,0 +1,222 @@
+"""Jitted step builders: train_step / prefill_step / serve_step per cell.
+
+``build_cell(arch, shape, mesh, multi_pod)`` assembles everything one
+(architecture x input-shape x mesh) dry-run or run needs: the step function,
+its input ShapeDtypeStructs, and in/out shardings resolved through the
+logical-axis rules. Train steps are full fwd+bwd+optimizer-update (AdamW;
+Adafactor for the 400B MoE so optimizer state fits — DESIGN.md §5); serve
+steps are one decode token against the shape's KV context; prefill lowers
+the whole-context forward.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs as cfglib
+from repro.distributed import (batch_shardings, rules_for,
+                               set_activation_sharding, shardings_for_tree)
+from repro.models.model import build_model
+from repro.optim import make_optimizer
+
+# 400B MoE: AdamW moments would blow the 16 GB/chip budget; Adafactor's
+# factored second moment fits (napkin math in DESIGN.md §5).
+OPT_FOR_ARCH = {"llama4_maverick_400b": "adafactor"}
+LR = 1e-4
+
+
+def arch_rule_overrides(arch: str, mode: str, multi_pod: bool) -> dict:
+    """Per-arch sharding deviations from the default TP+FSDP rules.
+
+    xlstm-350m has no useful TP targets (64-wide head blocks) and a heavy
+    per-sequence recurrent state — run it pure-DP: batch over data AND
+    model (256-way), activations unsharded on seq.
+    """
+    if cfglib.canonical(arch) == "xlstm_350m" and mode == "train":
+        bax = ("pod", "data", "model") if multi_pod else ("data", "model")
+        return {"batch": bax, "act_seq": None}
+    # H6 (refuted, see EXPERIMENTS §Perf): dropping SP for the hybrid family
+    # cut jamba's collective term ~10% but grew per-chip memory 27% — net
+    # negative; the binding fix is the fused selective-scan kernel.
+    return {}
+
+
+def _capture_param_specs(model, rng):
+    box = {}
+
+    def f(k):
+        p, s = model.init_params(k)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, rng)
+    return shapes, box["specs"]
+
+
+def opt_state_shardings(opt_name, pspecs, pshapes, mesh, rules):
+    if opt_name == "adamw":
+        m = shardings_for_tree(pspecs, pshapes, mesh, rules)
+        return {"m": m, "v": jax.tree.map(lambda s: s, m)}
+    # adafactor: row drops last dim, col drops second-to-last
+    is_spec = lambda x: isinstance(x, tuple) and all(
+        a is None or isinstance(a, str) for a in x)
+
+    def one(ax, like):
+        from repro.distributed.sharding import named_sharding_for
+        ax = tuple(ax) + (None,) * (len(like.shape) - len(ax))
+        if len(like.shape) >= 2:
+            return {"row": named_sharding_for(ax[:-1], like.shape[:-1], mesh, rules),
+                    "col": named_sharding_for(ax[:-2] + ax[-1:],
+                                              like.shape[:-2] + like.shape[-1:],
+                                              mesh, rules)}
+        return {"v": named_sharding_for(ax, like.shape, mesh, rules)}
+
+    return {"acc": jax.tree.map(one, pspecs, pshapes, is_leaf=is_spec)}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    cfg: Any
+    kind: str                      # train | prefill | decode
+    step_fn: Callable              # jitted
+    args: tuple                    # ShapeDtypeStructs for lower()
+    skip: str | None = None
+
+
+def batch_axes(multi_pod: bool):
+    return ("pod", "data") if multi_pod else "data"
+
+
+def build_cell(arch: str, shape: str, mesh, multi_pod: bool = False,
+               smoke: bool = False, opt_override: str | None = None,
+               extra_rules: dict | None = None) -> Cell:
+    spec = cfglib.input_specs(arch, shape, smoke=smoke)
+    cfg, sp = spec["cfg"], spec["shape"]
+    if spec["skip"]:
+        return Cell(arch, shape, cfg, sp.kind, None, (), skip=spec["skip"])
+    model = build_model(cfg)
+    mode = "train" if sp.kind == "train" else "serve"
+    rules = rules_for(mode, multi_pod)
+    rules.update(arch_rule_overrides(arch, mode, multi_pod))
+    if extra_rules:
+        rules.update(extra_rules)
+    rng = jax.random.PRNGKey(0)
+    pshapes, pspecs = _capture_param_specs(model, rng)
+    psh = shardings_for_tree(pspecs, pshapes, mesh, rules)
+    bax = rules["batch"]
+    # SP constraint for whole-sequence passes; decode steps run unconstrained
+    # ([B,1,D] has nothing to sequence-shard).
+    set_activation_sharding(
+        mesh, P(bax, rules.get("act_seq", "model"), None)
+        if sp.kind in ("train", "prefill") else None)
+
+    # H1 hook (perf flag attn_reshard): head-sharded, sequence-gathered
+    # q/k/v so attention runs TP-style with ONE reshard per layer instead of
+    # per-kv-block collectives. kv_heads fall back to replicated when they
+    # don't divide the model axis (GQA kv=8 on model=16).
+    from repro.distributed.activations import set_attn_sharding
+    from repro.distributed.sharding import named_sharding_for
+
+    def _attn_reshard(q, k, v):
+        qs = named_sharding_for(("batch", None, "heads_dim", None),
+                                q.shape, mesh,
+                                {**rules, "heads_dim": "model"})
+        ks = named_sharding_for(("batch", None, "kv_heads_dim", None),
+                                k.shape, mesh,
+                                {**rules, "kv_heads_dim": "model"})
+        return (jax.lax.with_sharding_constraint(q, qs),
+                jax.lax.with_sharding_constraint(k, ks),
+                jax.lax.with_sharding_constraint(v, ks))
+
+    set_attn_sharding(_attn_reshard if sp.kind in ("train", "prefill")
+                      else None)
+
+    # H4 hook (perf flag mm_gather): pre-matmul activations gathered on seq,
+    # sharded on batch — weight grads then reduce over 'data' onto FSDP
+    # shards instead of full-size ARs over 'model'.
+    from repro.distributed.activations import set_matmul_input_sharding
+
+    def _mm_gather(y):
+        sh = named_sharding_for(("batch", None, None), y.shape, mesh, rules)
+        return jax.lax.with_sharding_constraint(y, sh)
+
+    set_matmul_input_sharding(_mm_gather if sp.kind in ("train", "prefill")
+                              else None)
+
+    # H5 hook (perf flag decode_tsh): decode logits [B,Hkv,G,T] keep T
+    # sharded over 'model' so softmax combines partial (max,sum) instead of
+    # all-gathering KV.
+    from repro.distributed.activations import set_decode_logits_sharding
+
+    def _logits_tsh(s):
+        sh = named_sharding_for(("batch", None, None, "kv_seq"),
+                                s.shape, mesh, rules)
+        return jax.lax.with_sharding_constraint(s, sh)
+
+    set_decode_logits_sharding(_logits_tsh if sp.kind == "decode" else None)
+
+    if sp.kind == "train":
+        opt_name = opt_override or OPT_FOR_ARCH.get(
+            cfglib.canonical(arch), "adamw")
+        opt_init, opt_update = make_optimizer(opt_name, LR)
+        oshapes = jax.eval_shape(opt_init, pshapes)
+        osh = opt_state_shardings(opt_name, pspecs, pshapes, mesh, rules)
+        bsh = batch_shardings(spec["batch"], mesh, rules)
+        rep = NamedSharding(mesh, P())
+
+        def train_step(params, opt_state, batch, step):
+            loss, grads = jax.value_and_grad(model.train_forward)(params, batch)
+            params, opt_state, info = opt_update(grads, opt_state, params, step)
+            return params, opt_state, {"loss": loss, **info}
+
+        fn = jax.jit(train_step,
+                     in_shardings=(psh, osh, bsh, rep),
+                     out_shardings=(psh, osh, None),
+                     donate_argnums=(0, 1))
+        args = (pshapes, oshapes, spec["batch"],
+                jax.ShapeDtypeStruct((), jnp.int32))
+        return Cell(arch, shape, cfg, sp.kind, fn, args)
+
+    if sp.kind == "prefill":
+        bsh = batch_shardings(spec["batch"], mesh, rules)
+
+        def prefill_step(params, batch):
+            return model.prefill(params, batch, sp.seq_len)
+
+        fn = jax.jit(prefill_step, in_shardings=(psh, bsh))
+        return Cell(arch, shape, cfg, sp.kind, fn, (pshapes, spec["batch"]))
+
+    # decode
+    state_specs = model.decode_state_specs()
+    state_shapes = spec["batch"]["state"]
+    ssh = shardings_for_tree(state_specs, state_shapes, mesh, rules)
+    tok_sh = NamedSharding(mesh, P(bax if state_shapes_batch_divisible(
+        state_shapes, mesh, bax) else None))
+
+    def serve_step(params, token, state):
+        logits, state = model.decode_step(params, token, state)
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        return next_tok, state
+
+    fn = jax.jit(serve_step,
+                 in_shardings=(psh, tok_sh, ssh),
+                 out_shardings=(tok_sh, ssh),
+                 donate_argnums=(2,))
+    args = (pshapes, spec["batch"]["token"], state_shapes)
+    return Cell(arch, shape, cfg, sp.kind, fn, args)
+
+
+def state_shapes_batch_divisible(state_shapes, mesh, bax) -> bool:
+    n = (mesh.shape[bax] if isinstance(bax, str)
+         else functools.reduce(lambda a, b: a * mesh.shape[b], bax, 1))
+    leaves = [l for l in jax.tree.leaves(state_shapes) if len(l.shape) >= 2]
+    b = leaves[0].shape[1] if leaves else 1
+    return b % n == 0

@@ -1,0 +1,109 @@
+"""End-to-end training driver with the full substrate stack.
+
+Wires together: model zoo + sharded step (steps.py), synthetic/memmap data
+pipeline, AdamW/Adafactor, async checkpointing with restart-on-failure,
+straggler monitor, watchdog, optional int8 gradient compression stats. On
+real hardware this runs per host under the cluster launcher; on CPU it runs
+the smoke configs end-to-end (examples/train_e2e.py drives it).
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2_5_3b --smoke \
+      --steps 50 --global-batch 8 --seq-len 64 --ckpt-dir /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfglib
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore_checkpoint
+from repro.data import make_pipeline
+from repro.models.model import build_model
+from repro.optim import cosine_warmup, make_optimizer
+from repro.runtime import StepTimeMonitor, Watchdog, run_with_restarts
+from repro.launch.steps import OPT_FOR_ARCH
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_5_3b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=20)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--watchdog-s", type=float, default=300.0)
+    args = ap.parse_args(argv)
+
+    cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
+           else cfglib.get_config(args.arch))
+    model = build_model(cfg)
+    opt_name = OPT_FOR_ARCH.get(cfglib.canonical(args.arch), "adamw")
+    opt_init, opt_update = make_optimizer(
+        opt_name, cosine_warmup(args.lr, 10, args.steps))
+    pipe = make_pipeline(cfg.vocab_size, args.global_batch, args.seq_len)
+
+    @jax.jit
+    def train_step(params, opt_state, batch, step):
+        loss, grads = jax.value_and_grad(model.train_forward)(params, batch)
+        params, opt_state, info = opt_update(grads, opt_state, params, step)
+        return params, opt_state, loss, info["grad_norm"]
+
+    ck = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    monitor = StepTimeMonitor()
+    watchdog = Watchdog(args.watchdog_s).start()
+    history: list[float] = []
+
+    def make_state():
+        params, _ = model.init_params(jax.random.PRNGKey(0))
+        return {"params": params, "opt": opt_init(params)}
+
+    def one(state, step):
+        t0 = time.perf_counter()
+        batch = {k: jnp.asarray(v) for k, v in pipe.peek(step).items()}
+        p, o, loss, gn = train_step(state["params"], state["opt"], batch,
+                                    jnp.int32(step))
+        loss = float(loss)
+        history.append(loss)
+        watchdog.beat()
+        if monitor.record(time.perf_counter() - t0):
+            print(f"[straggler] step {step} took "
+                  f"{time.perf_counter() - t0:.2f}s (ewma {monitor.ewma:.2f})")
+        if step % args.log_every == 0:
+            print(f"step {step:5d} loss {loss:.4f} gnorm {float(gn):.3f}")
+        return {"params": p, "opt": o}
+
+    def save(state, step):
+        if ck:
+            ck.save(step, state, {"data_step": step})
+
+    def restore():
+        if not ck:
+            return None
+        s = latest_step(args.ckpt_dir)
+        if s is None:
+            return None
+        state, extras = restore_checkpoint(args.ckpt_dir, s, make_state())
+        pipe.load_state_dict({"step": extras.get("data_step", s)})
+        return jax.tree.map(jnp.asarray, state), s
+
+    state, restarts = run_with_restarts(make_state, one, save, restore,
+                                        args.steps, args.save_every)
+    if ck:
+        ck.wait()
+    watchdog.stop()
+    print(f"done: final loss {history[-1]:.4f} "
+          f"(restarts={restarts}, stragglers={monitor.flags})")
+    return {"final_loss": history[-1], "history": history,
+            "monitor": monitor.summary()}
+
+
+if __name__ == "__main__":
+    main()

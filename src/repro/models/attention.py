@@ -1,0 +1,195 @@
+"""GQA attention: reference, blocked-flash (pure jnp), sliding-window, decode.
+
+All paths share one contract: ``q [B,Sq,Hq,dh]``, ``k/v [B,Sk,Hkv,dh]`` with
+``Hq = G*Hkv`` (GQA); softmax statistics in float32; outputs in input dtype.
+
+* :func:`full_attention` — materializes [B,Hkv,G,Sq,Sk] scores. Reference
+  oracle for tests and small smoke configs.
+* :func:`blocked_attention` — flash-style online-softmax ``lax.scan`` over KV
+  blocks (memory O(block) instead of O(S²)); the lowering used by train/
+  prefill paths so 32K-seq activations stay bounded. Causal and
+  sliding-window masks are applied per block pair. (The Pallas TPU kernel in
+  ``repro.kernels.flash_attention`` implements the same math with explicit
+  VMEM tiling; this is its lowering-visible twin.)
+* :func:`decode_attention` — one-token query against a [B,T,...] cache with a
+  length mask; T may be mesh-sharded (GSPMD partitions the reductions).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _split_gqa(q: jax.Array, n_kv: int) -> jax.Array:
+    """[B,S,Hq,dh] -> [B,S,Hkv,G,dh]."""
+    B, S, Hq, dh = q.shape
+    return q.reshape(B, S, n_kv, Hq // n_kv, dh)
+
+
+def full_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool = True, window: int = 0,
+                   softcap: float = 0.0, q_offset: int = 0) -> jax.Array:
+    """Reference GQA attention. ``q_offset`` places q rows inside the kv seq."""
+    B, Sq, Hq, dh = q.shape
+    Hkv = k.shape[2]
+    qg = _split_gqa(q, Hkv).astype(jnp.float32)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+    if softcap:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask, scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, dh).astype(q.dtype)
+
+
+def _attention_q_chunk(qg, k, v, q0, *, causal, window, softcap,
+                       block_k, q_offset):
+    """Online-softmax sweep of all KV blocks for one q chunk.
+
+    qg [B,Hkv,G,Cq,dh] (pre-scaled); k/v [B,Sk,Hkv,dh]; q0 = chunk's global
+    start row. Returns [B,Hkv,G,Cq,dh] fp32.
+    """
+    B, Hkv, G, Cq, dh = qg.shape
+    Sk = k.shape[1]
+    n_blocks = Sk // block_k
+    kb = k.reshape(B, n_blocks, block_k, Hkv, dh).swapaxes(0, 1)
+    vb = v.reshape(B, n_blocks, block_k, Hkv, dh).swapaxes(0, 1)
+    qpos = jnp.arange(Cq) + q0 + q_offset
+
+    from repro.perf_flags import enabled
+    mxu = enabled("attn_bf16") and k.dtype != jnp.float32
+
+    def step(carry, xs):
+        m, l, acc = carry
+        kblk, vblk, j = xs
+        if mxu:
+            s = jnp.einsum("bkgqd,bskd->bkgqs", qg.astype(kblk.dtype), kblk,
+                           preferred_element_type=jnp.float32)
+        else:
+            s = jnp.einsum("bkgqd,bskd->bkgqs", qg, kblk.astype(jnp.float32))
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        kpos = j * block_k + jnp.arange(block_k)
+        msk = jnp.ones((Cq, block_k), bool)
+        if causal:
+            msk &= kpos[None, :] <= qpos[:, None]
+        if window:
+            msk &= kpos[None, :] > qpos[:, None] - window
+        s = jnp.where(msk[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(-1))
+        m_safe = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(msk[None, None, None], p, 0.0)
+        corr = jnp.exp(jnp.where(m <= NEG_INF / 2, NEG_INF, m) - m_safe)
+        corr = jnp.where(m <= NEG_INF / 2, 0.0, corr)
+        l_new = l * corr + p.sum(-1)
+        if mxu:
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+        else:
+            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, vblk.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    init = (jnp.full((B, Hkv, G, Cq), NEG_INF, jnp.float32),
+            jnp.zeros((B, Hkv, G, Cq), jnp.float32),
+            jnp.zeros((B, Hkv, G, Cq, dh), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(step, init,
+                                  (kb, vb, jnp.arange(n_blocks)))
+    return acc / jnp.maximum(l, 1e-30)[..., None]
+
+
+def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                      causal: bool = True, window: int = 0,
+                      softcap: float = 0.0, block_q: int = 1024,
+                      block_k: int = 512, q_offset: int = 0) -> jax.Array:
+    """Flash-style attention, memory-safe in *both* directions.
+
+    Structure: outer scan over q chunks whose body (a KV-block online-softmax
+    sweep) is ``jax.checkpoint``-ed. Forward never materializes [Sq,Sk];
+    backward recomputes one q chunk's sweep at a time, so residuals peak at
+    O(Cq·block_k) instead of O(n_kv_blocks · Sq) — without this, scan-AD
+    saves every per-block carry and a 32K-seq layer needs ~100+ GB.
+
+    All KV blocks are visited (masked where inactive); the triangular-pair
+    schedule that skips fully-masked causal blocks is a §Perf iteration.
+    """
+    B, Sq, Hq, dh = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    while Sk % block_k:
+        block_k //= 2
+    while Sq % block_q:
+        block_q //= 2
+    nq = Sq // block_q
+    G = Hq // Hkv
+    qg = _split_gqa(q, Hkv).astype(jnp.float32) / jnp.sqrt(jnp.float32(dh))
+    qg = qg.transpose(0, 2, 3, 1, 4)                 # [B,Hkv,G,Sq,dh]
+    qc = jnp.moveaxis(qg.reshape(B, Hkv, G, nq, block_q, dh), 3, 0)
+
+    @jax.checkpoint
+    def chunk_body(carry, xs):
+        qchunk, i = xs                               # [B,Hkv,G,bq,dh]
+        o = _attention_q_chunk(qchunk, k, v, i * block_q, causal=causal,
+                               window=window, softcap=softcap,
+                               block_k=block_k, q_offset=q_offset)
+        return carry, o
+
+    _, oc = jax.lax.scan(chunk_body, (), (qc, jnp.arange(nq)))
+    out = jnp.moveaxis(oc, 0, 3).reshape(B, Hkv, G, Sq, dh)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, dh)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     length, *, window: int = 0,
+                     softcap: float = 0.0) -> jax.Array:
+    """Single-position attention: q [B,1,Hq,dh] vs cache k/v [B,T,Hkv,dh].
+
+    ``length`` (int or [B] array) masks the valid cache prefix; with
+    ``window``, only the trailing ``window`` positions stay active (the
+    rolling-buffer SWA cache passes its own geometry instead).
+    """
+    B, _, Hq, dh = q.shape
+    T, Hkv = k.shape[1], k.shape[2]
+    from repro.perf_flags import enabled
+    if enabled("attn_bf16"):
+        # H5b: MXU semantics — bf16 operands, fp32 accumulation. Without
+        # this, `.astype(f32)` materializes the whole KV cache in fp32
+        # (2x reads + a full write-back every step).
+        qg = _split_gqa(q, Hkv)[:, 0]
+        s = jnp.einsum("bkgd,btkd->bkgt", qg, k,
+                       preferred_element_type=jnp.float32)
+    else:
+        qg = _split_gqa(q, Hkv)[:, 0].astype(jnp.float32)  # [B,Hkv,G,dh]
+        s = jnp.einsum("bkgd,btkd->bkgt", qg, k.astype(jnp.float32))
+    if enabled("decode_tsh"):
+        from repro.distributed.activations import decode_logits_constraint
+        s = decode_logits_constraint(s)
+    s = s / jnp.sqrt(jnp.float32(dh))
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    tpos = jnp.arange(T)
+    ln = jnp.asarray(length)
+    ln = ln[:, None] if ln.ndim else ln[None, None] * jnp.ones((B, 1), ln.dtype)
+    msk = tpos[None, :] < ln
+    if window:
+        msk &= tpos[None, :] >= ln - window
+    s = jnp.where(msk[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if enabled("attn_bf16"):
+        out = jnp.einsum("bkgt,btkd->bkgd", p.astype(v.dtype), v,
+                         preferred_element_type=jnp.float32)
+    else:
+        out = jnp.einsum("bkgt,btkd->bkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, 1, Hq, dh).astype(q.dtype)

@@ -1,0 +1,231 @@
+"""Encoder-decoder (seamless-m4t backbone): bidirectional encoder + causal
+decoder with cross-attention.
+
+The audio frontend is a stub per the brief: the encoder consumes precomputed
+frame embeddings ``frames [B,Se,D]`` (plus a small input projection). The
+decoder is the standard causal LM with per-layer cross-attention against the
+encoder output; cross-K/V are computed once at prefill and stay static
+through decode. Layers are stacked and scanned like ``transformer.py``
+(period is always 1 for this family).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import blocked_attention, decode_attention, full_attention
+from .config import ModelConfig
+from .layers import (apply_mlp, apply_norm, apply_rotary, chunked_ce_loss,
+                     dense_init, embed_init, mlp_init, norm_init, rope_angles)
+from .transformer import _attn_init, _qkv, lm_head
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+def _xattn_init(rng, cfg: ModelConfig, dtype):
+    """Cross-attention projections (q from decoder, k/v from encoder)."""
+    return _attn_init(rng, cfg, dtype)
+
+
+def _enc_block_init(rng, cfg, dtype):
+    ka, kf = jax.random.split(rng)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    p["attn"], s["attn"] = _attn_init(ka, cfg, dtype)
+    p["norm2"], s["norm2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    p["ff"], s["ff"] = mlp_init(kf, cfg.d_model, cfg.d_ff, dtype)
+    return p, s
+
+
+def _dec_block_init(rng, cfg, dtype):
+    ka, kx, kf = jax.random.split(rng, 3)
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    p["self"], s["self"] = _attn_init(ka, cfg, dtype)
+    p["normx"], s["normx"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    p["cross"], s["cross"] = _xattn_init(kx, cfg, dtype)
+    p["norm2"], s["norm2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    p["ff"], s["ff"] = mlp_init(kf, cfg.d_model, cfg.d_ff, dtype)
+    return p, s
+
+
+def _stack_init(key, n, one_init):
+    keys = jax.random.split(key, n)
+    stacked = jax.vmap(lambda k: one_init(k)[0])(keys)
+    spec = jax.tree.map(lambda ax: ("layers",) + tuple(ax),
+                        one_init(keys[0])[1],
+                        is_leaf=lambda x: isinstance(x, tuple))
+    return stacked, spec
+
+
+def init_params(rng, cfg: ModelConfig) -> tuple[dict, dict]:
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(rng, 6)
+    params: dict = {}
+    specs: dict = {}
+    params["in_proj"], specs["in_proj"] = dense_init(
+        ks[0], cfg.d_model, cfg.d_model, ("embed", "embed"), dtype)
+    params["enc"], specs["enc"] = _stack_init(
+        ks[1], cfg.n_enc_layers, lambda k: _enc_block_init(k, cfg, dtype))
+    params["enc_norm"], specs["enc_norm"] = norm_init(cfg.d_model, cfg.norm, dtype)
+    params["embed"], specs["embed"] = embed_init(ks[2], cfg.padded_vocab,
+                                                 cfg.d_model, dtype)
+    params["dec"], specs["dec"] = _stack_init(
+        ks[3], cfg.n_layers, lambda k: _dec_block_init(k, cfg, dtype))
+    params["final_norm"], specs["final_norm"] = norm_init(cfg.d_model, cfg.norm,
+                                                          dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"], specs["lm_head"] = dense_init(
+            ks[4], cfg.d_model, cfg.padded_vocab, ("embed", "vocab"), dtype)
+    return params, specs
+
+
+# --------------------------------------------------------------------------
+# encoder
+# --------------------------------------------------------------------------
+def encode(params, cfg: ModelConfig, frames) -> jax.Array:
+    """frames [B,Se,D] (stub frontend output) -> encoder hidden [B,Se,D]."""
+    x = frames.astype(jnp.dtype(cfg.dtype)) @ params["in_proj"]
+    Se = x.shape[1]
+    angles = rope_angles(jnp.arange(Se), cfg.head_dim, cfg.rope_theta)
+
+    from repro.distributed.activations import activation_constraint
+
+    def block(x, p):
+        y = apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+        q, k, v = _qkv(p["attn"], cfg, y, angles)
+        o = blocked_attention(q, k, v, causal=False)
+        x = x + o.reshape(*x.shape[:2], -1) @ p["attn"]["wo"]
+        y2 = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        return activation_constraint(x + apply_mlp(p["ff"], y2, cfg.act)), None
+
+    body = jax.checkpoint(block) if cfg.remat else block
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return apply_norm(params["enc_norm"], x, cfg.norm, cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# decoder
+# --------------------------------------------------------------------------
+def _cross_kv(p, cfg: ModelConfig, enc_out):
+    B, Se, _ = enc_out.shape
+    h = cfg.head_dim
+    k = (enc_out @ p["wk"] + (p["bk"] if "bk" in p else 0)).reshape(
+        B, Se, cfg.n_kv_heads, h)
+    v = (enc_out @ p["wv"] + (p["bv"] if "bv" in p else 0)).reshape(
+        B, Se, cfg.n_kv_heads, h)
+    return k, v
+
+
+def _dec_block(p, cfg, x, enc_out, angles, collect):
+    y = apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+    q, k, v = _qkv(p["self"], cfg, y, angles)
+    o = blocked_attention(q, k, v, causal=True)
+    x = x + o.reshape(*x.shape[:2], -1) @ p["self"]["wo"]
+    yx = apply_norm(p["normx"], x, cfg.norm, cfg.norm_eps)
+    B, Sd, _ = x.shape
+    h = cfg.head_dim
+    qx = (yx @ p["cross"]["wq"] + (p["cross"].get("bq", 0))).reshape(
+        B, Sd, cfg.n_heads, h)
+    kx, vx = _cross_kv(p["cross"], cfg, enc_out)
+    ox = full_attention(qx, kx, vx, causal=False)
+    x = x + ox.reshape(B, Sd, -1) @ p["cross"]["wo"]
+    y2 = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+    x = x + apply_mlp(p["ff"], y2, cfg.act)
+    st = {"k": k, "v": v} if collect else None
+    return x, st
+
+
+def decode_hidden(params, cfg: ModelConfig, tokens, enc_out, collect=False):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    Sd = tokens.shape[1]
+    angles = rope_angles(jnp.arange(Sd), cfg.head_dim, cfg.rope_theta)
+
+    from repro.distributed.activations import activation_constraint
+
+    def block(x, p):
+        x, st = _dec_block(p, cfg, x, enc_out, angles, collect)
+        return activation_constraint(x), st
+
+    body = jax.checkpoint(block) if cfg.remat else block
+    x, kvs = jax.lax.scan(body, x, params["dec"])
+    return apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps), kvs
+
+
+def train_forward(params, cfg: ModelConfig, batch) -> jax.Array:
+    enc_out = encode(params, cfg, batch["frames"])
+    h, _ = decode_hidden(params, cfg, batch["tokens"], enc_out)
+    return chunked_ce_loss(h, lm_head(params, cfg), batch["targets"],
+                           batch["mask"])
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+def decode_state_specs(cfg: ModelConfig) -> dict:
+    kv = {"k": ("layers", "batch", "kv_seq", "kv_heads_s", None),
+          "v": ("layers", "batch", "kv_seq", "kv_heads_s", None)}
+    return {"self_kv": dict(kv), "cross_kv": dict(kv), "pos": ()}
+
+
+def init_decode_state(cfg: ModelConfig, batch_size: int, max_len: int,
+                      enc_len: int) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    L = cfg.n_layers
+    kv = lambda T: {"k": jnp.zeros((L, batch_size, T, cfg.n_kv_heads,
+                                    cfg.head_dim), dtype),
+                    "v": jnp.zeros((L, batch_size, T, cfg.n_kv_heads,
+                                    cfg.head_dim), dtype)}
+    return {"self_kv": kv(max_len), "cross_kv": kv(enc_len),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg: ModelConfig, frames, tokens, max_len: int):
+    """Encode + decoder prefill -> (last logits, decode state)."""
+    B, Sd = tokens.shape
+    enc_out = encode(params, cfg, frames)
+    h, kvs = decode_hidden(params, cfg, tokens, enc_out, collect=True)
+    state = init_decode_state(cfg, B, max_len, frames.shape[1])
+    state["self_kv"] = {
+        "k": state["self_kv"]["k"].at[:, :, :Sd].set(kvs["k"]),
+        "v": state["self_kv"]["v"].at[:, :, :Sd].set(kvs["v"])}
+    cross = jax.vmap(lambda p: _cross_kv(p["cross"], cfg, enc_out))(
+        params["dec"])
+    state["cross_kv"] = {"k": cross[0], "v": cross[1]}
+    state["pos"] = jnp.int32(Sd)
+    logits = (h[:, -1] @ lm_head(params, cfg)).astype(jnp.float32)
+    return logits, state
+
+
+def decode_step(params, cfg: ModelConfig, token, state):
+    """token [B] -> (logits [B,V], state). Cross-KV static, self-KV appended."""
+    pos = state["pos"]
+    x = params["embed"][token[:, None]].astype(jnp.dtype(cfg.dtype))
+    angles = rope_angles(pos[None], cfg.head_dim, cfg.rope_theta)
+
+    def block(x, xs):
+        p, skv, xkv = xs
+        y = apply_norm(p["norm1"], x, cfg.norm, cfg.norm_eps)
+        q, k, v = _qkv(p["self"], cfg, y, angles)
+        kc = jax.lax.dynamic_update_slice(skv["k"], k, (0, pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(skv["v"], v, (0, pos, 0, 0))
+        o = decode_attention(q, kc, vc, pos + 1)
+        x = x + o.reshape(*x.shape[:2], -1) @ p["self"]["wo"]
+        yx = apply_norm(p["normx"], x, cfg.norm, cfg.norm_eps)
+        B = x.shape[0]
+        qx = (yx @ p["cross"]["wq"] + (p["cross"].get("bq", 0))).reshape(
+            B, 1, cfg.n_heads, cfg.head_dim)
+        ox = decode_attention(qx, xkv["k"], xkv["v"], xkv["k"].shape[1])
+        x = x + ox.reshape(B, 1, -1) @ p["cross"]["wo"]
+        y2 = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
+        x = x + apply_mlp(p["ff"], y2, cfg.act)
+        return x, {"k": kc, "v": vc}
+
+    x, new_skv = jax.lax.scan(block, x, (params["dec"], state["self_kv"],
+                                         state["cross_kv"]))
+    h = apply_norm(params["final_norm"], x[:, 0], cfg.norm, cfg.norm_eps)
+    logits = (h @ lm_head(params, cfg)).astype(jnp.float32)
+    return logits, {"self_kv": new_skv, "cross_kv": state["cross_kv"],
+                    "pos": pos + 1}

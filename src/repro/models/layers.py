@@ -1,0 +1,154 @@
+"""Shared layers: norms, embeddings, RoPE / M-RoPE, SwiGLU MLP, chunked CE.
+
+Every ``*_init`` returns ``(params, specs)`` — two pytrees of identical
+structure; spec leaves are tuples of *logical* axis names that
+``repro.distributed.sharding`` later maps onto mesh axes (TP/FSDP/EP rules).
+Logical vocabulary: ``embed`` (d_model), ``vocab``, ``heads`` (flattened
+n_heads*d_head — kept flat so TP divides even when the head count doesn't),
+``kv_heads``, ``ff``, ``experts``, ``inner`` (mamba/xlstm inner width),
+``layers`` (the stacked period-scan axis, always unsharded).
+
+Compute dtype discipline: matmuls run in the config dtype (bf16 on TPU);
+norms, softmax, rotary, and losses compute in float32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# param init helpers
+# --------------------------------------------------------------------------
+def dense_init(rng, d_in: int, d_out: int, axes: tuple, dtype,
+               scale: float | None = None):
+    """Truncated-normal 2D weight with fan-in scaling."""
+    scale = (1.0 / np.sqrt(d_in)) if scale is None else scale
+    w = (jax.random.truncated_normal(rng, -2.0, 2.0, (d_in, d_out), jnp.float32)
+         * scale).astype(dtype)
+    return w, axes
+
+
+def embed_init(rng, vocab: int, d: int, dtype):
+    w = (jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+    return w, ("vocab", "embed")
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+def norm_init(d: int, kind: str, dtype):
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), dtype)}, {"scale": ("embed",)}
+    return ({"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)},
+            {"scale": ("embed",), "bias": ("embed",)})
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    else:
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y + p["bias"].astype(jnp.float32)
+    return (y * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (RoPE + qwen2-vl M-RoPE)
+# --------------------------------------------------------------------------
+def rope_angles(positions: jax.Array, head_dim: int, theta: float) -> jax.Array:
+    """positions [...,] -> angles [..., head_dim//2] (float32)."""
+    half = head_dim // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    return positions.astype(jnp.float32)[..., None] * freqs
+
+
+def apply_rotary(x: jax.Array, angles: jax.Array) -> jax.Array:
+    """x [..., h, d]; angles broadcastable to [..., 1, d//2]. Pairs (i, i+d/2)."""
+    d = x.shape[-1]
+    x1, x2 = x[..., : d // 2], x[..., d // 2:]
+    c, s = jnp.cos(angles), jnp.sin(angles)
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * c - xf2 * s, xf2 * c + xf1 * s], -1).astype(x.dtype)
+
+
+def mrope_angles(positions3: jax.Array, head_dim: int, theta: float,
+                 sections: tuple[int, int, int]) -> jax.Array:
+    """M-RoPE (qwen2-vl): positions3 [3, ...] (t,h,w ids) -> angles [..., d//2].
+
+    The d//2 frequency slots are split into ``sections`` (t, h, w); each slice
+    rotates by its own coordinate. Text tokens carry t==h==w, which makes
+    M-RoPE coincide with 1-D RoPE there — the property tests pin this.
+    """
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    sel = np.repeat(np.arange(3), np.asarray(sections))          # [half] -> which coord
+    # gather per-slot coordinate: positions3 [3, ...] -> [..., half]
+    coord = jnp.moveaxis(positions3, 0, -1).astype(jnp.float32)   # [..., 3]
+    per_slot = coord[..., sel]                                    # [..., half]
+    return per_slot * freqs
+
+
+# --------------------------------------------------------------------------
+# MLP (SwiGLU / GeGLU)
+# --------------------------------------------------------------------------
+def mlp_init(rng, d: int, ff: int, dtype):
+    kg, ku, kd = jax.random.split(rng, 3)
+    wg, ag = dense_init(kg, d, ff, ("embed", "ff"), dtype)
+    wu, au = dense_init(ku, d, ff, ("embed", "ff"), dtype)
+    wd, ad = dense_init(kd, ff, d, ("ff", "embed"), dtype)
+    return ({"wg": wg, "wu": wu, "wd": wd},
+            {"wg": ag, "wu": au, "wd": ad})
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    f = jax.nn.silu if act == "silu" else jax.nn.gelu
+    g = f(x @ p["wg"]) * (x @ p["wu"])
+    return g @ p["wd"]
+
+
+# --------------------------------------------------------------------------
+# chunked cross-entropy (vocab-sharded LM head, bounded logits footprint)
+# --------------------------------------------------------------------------
+def chunked_ce_loss(hidden: jax.Array, w_out: jax.Array, targets: jax.Array,
+                    mask: jax.Array, n_chunks: int = 0) -> jax.Array:
+    """Mean CE over [B,S] targets without materializing [B,S,V] logits.
+
+    Scans over S in ``n_chunks`` chunks; each chunk's [B,C,V] logits live only
+    inside one scan step (remat recomputes them in backward). V can be
+    mesh-sharded ("vocab" -> model); the log-sum-exp reduces over it with the
+    collectives GSPMD inserts. ``n_chunks=0`` auto-sizes so a chunk's fp32
+    logits stay ~<= 2^28 elements globally (~64 MB/chip when V shards 16-way).
+    """
+    B, S, D = hidden.shape
+    V = w_out.shape[1]
+    if n_chunks <= 0:
+        # More chunks shrink live logits, but the scan accumulates (and
+        # under GSPMD all-reduces) the w_out gradient EVERY chunk — 512
+        # chunks cost 512 weight-grad reductions (H4 finding). 32 caps that
+        # while keeping per-chunk logits ~B*S*V/32 elements.
+        n_chunks = max(8, min(32, (B * S * V + (1 << 28) - 1) >> 28))
+    n_chunks = min(n_chunks, S)
+    while S % n_chunks:
+        n_chunks -= 1
+    hs = hidden.reshape(B, n_chunks, S // n_chunks, D).swapaxes(0, 1)
+    ts = targets.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+    ms = mask.reshape(B, n_chunks, S // n_chunks).swapaxes(0, 1)
+
+    def chunk(carry, xs):
+        h, t, m = xs
+        logits = (h @ w_out).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, t[..., None], -1)[..., 0]
+        nll = (lse - gold) * m
+        return (carry[0] + nll.sum(), carry[1] + m.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(chunk, (jnp.float32(0), jnp.float32(0)),
+                                 (hs, ts, ms))
+    return tot / jnp.maximum(cnt, 1.0)

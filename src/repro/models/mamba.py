@@ -1,0 +1,178 @@
+"""Mamba (S6) selective state-space block — train scan + O(1) decode step.
+
+Faithful S6 structure (Gu & Dao 2023): in_proj -> (x, z); causal depthwise
+conv; data-dependent (Δ, B, C) projections; selective scan
+``h_t = exp(Δ_t A) h_{t-1} + Δ_t B_t x_t``, ``y_t = C_t h_t + D x_t``; gated
+output ``y·silu(z)``; out_proj. The training path is a ``lax.scan`` over the
+sequence (single compact HLO loop; the chunked associative-scan variant is a
+§Perf candidate). Decode carries ``(conv_state, h)`` — O(1) per token, which
+is what makes the hybrid archs long_500k-capable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+
+def mamba_dims(d_model: int, expand: int, d_state: int):
+    di = expand * d_model
+    dt_rank = -(-d_model // 16)
+    return di, dt_rank, d_state
+
+
+def _pick_chunk(S: int, target: int = 128) -> int:
+    """Largest divisor of S that is <= target (chunked-scan granularity)."""
+    c = min(S, target)
+    while S % c:
+        c -= 1
+    return c
+
+
+def mamba_init(rng, d_model: int, expand: int, d_state: int, d_conv: int, dtype):
+    di, dt_rank, N = mamba_dims(d_model, expand, d_state)
+    ks = jax.random.split(rng, 6)
+    w_in, a_in = dense_init(ks[0], d_model, 2 * di, ("embed", "inner"), dtype)
+    w_xdbc, a_xdbc = dense_init(ks[1], di, dt_rank + 2 * N, ("inner", None), dtype)
+    w_dt, a_dt = dense_init(ks[2], dt_rank, di, (None, "inner"), dtype)
+    w_out, a_out = dense_init(ks[3], di, d_model, ("inner", "embed"), dtype)
+    conv = (jax.random.normal(ks[4], (d_conv, di), jnp.float32)
+            / jnp.sqrt(jnp.float32(d_conv))).astype(dtype)
+    # S4D-real init for A; dt bias init so softplus(dt) spans (1e-3, 1e-1)
+    a_log = jnp.log(jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :],
+                             (di, 1)))
+    dt_bias = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[5], (di,), jnp.float32,
+                                   jnp.log(1e-3), jnp.log(1e-1)))))
+    p = {"w_in": w_in, "w_xdbc": w_xdbc, "w_dt": w_dt, "w_out": w_out,
+         "conv": conv, "a_log": a_log.astype(jnp.float32),
+         "dt_bias": dt_bias.astype(jnp.float32),
+         "d_skip": jnp.ones((di,), jnp.float32)}
+    s = {"w_in": a_in, "w_xdbc": a_xdbc, "w_dt": a_dt, "w_out": a_out,
+         "conv": (None, "inner"), "a_log": ("inner", None),
+         "dt_bias": ("inner",), "d_skip": ("inner",)}
+    return p, s
+
+
+def _dbc(p, xc, dt_rank, N):
+    """conv'd activations -> (Δ [.. di], B [.. N], C [.. N]) in fp32."""
+    dbc = (xc @ p["w_xdbc"]).astype(jnp.float32)
+    dt_lowrank, b, c = jnp.split(dbc, [dt_rank, dt_rank + N], axis=-1)
+    dt = jax.nn.softplus(dt_lowrank @ p["w_dt"].astype(jnp.float32)
+                         + p["dt_bias"])
+    return dt, b, c
+
+
+def apply_mamba(p: dict, x: jax.Array, d_state: int,
+                return_state: bool = False):
+    """Train/prefill path: x [B,S,D] -> y [B,S,D] (scan over S).
+
+    With ``return_state`` also returns the decode carry {conv, h} at step S.
+    """
+    B, S, D = x.shape
+    di = p["w_in"].shape[1] // 2
+    dt_rank = p["w_dt"].shape[0]
+    N = d_state
+
+    xz = x @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                     # [B,S,di]
+    # causal depthwise conv over S
+    K = p["conv"].shape[0]
+    xpad = jnp.pad(xi, ((0, 0), (K - 1, 0), (0, 0)))
+    xc = sum(xpad[:, k:k + S] * p["conv"][k] for k in range(K))
+    xc = jax.nn.silu(xc)
+
+    from repro.perf_flags import enabled
+    if enabled("sscan_kernel"):
+        # Fused Pallas selective scan (forward-only: prefill/serving). The
+        # per-step h carry stays in VMEM — see kernels/selective_scan.
+        from repro.kernels.selective_scan import selective_scan
+        dt, bb, cc = _dbc(p, xc, dt_rank, N)
+        a = -jnp.exp(p["a_log"])
+        out = selective_scan(dt, bb, cc, xc.astype(jnp.float32), a,
+                             return_state=return_state)
+        y_s, h_fin = out if return_state else (out, None)
+        y = y_s + xc.astype(jnp.float32) * p["d_skip"]
+        y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+        res = y @ p["w_out"]
+        if not return_state:
+            return res
+        conv_tail = xpad[:, S:S + K - 1] if K > 1 else xi[:, :0]
+        return res, {"conv": conv_tail.astype(p["conv"].dtype), "h": h_fin}
+
+    a = -jnp.exp(p["a_log"])                              # [di,N]
+
+    # Chunked selective scan: outer scan over chunks saves only boundary
+    # states; the rematted inner scan's per-step residuals ([B,di,N] each)
+    # materialize one chunk at a time during backward. Without this, scan-AD
+    # stores S per-step carries (TB-scale at 32K seq).
+    C = _pick_chunk(S)
+    ch = lambda t: jnp.moveaxis(t.reshape(B, S // C, C, *t.shape[2:]), 1, 0)
+    from repro.perf_flags import enabled
+    dbc_in_chunk = enabled("mamba_dbc")
+    if dbc_in_chunk:
+        # H3: derive (Δ,B,C) per chunk inside the rematted body — avoids
+        # materializing [B,S,di] fp32 projections for the whole sequence.
+        xs_c = (ch(xc),)
+    else:
+        dt, b, c = _dbc(p, xc, dt_rank, N)                # [B,S,di],[B,S,N]x2
+        xs_c = (ch(dt), ch(b), ch(c), ch(xc.astype(jnp.float32)))
+
+    @jax.checkpoint
+    def chunk(h, xs):
+        if dbc_in_chunk:
+            (xc_k,) = xs                                  # [B,C,di]
+            dt_k, b_k, c_k = _dbc(p, xc_k, dt_rank, N)
+            x_k = xc_k.astype(jnp.float32)
+        else:
+            dt_k, b_k, c_k, x_k = xs                      # [B,C,...]
+
+        def step(h, t):
+            da = jnp.exp(dt_k[:, t][..., None] * a)       # [B,di,N]
+            dbx = dt_k[:, t][..., None] * b_k[:, t][:, None, :] * x_k[:, t][..., None]
+            h = da * h + dbx
+            y = jnp.einsum("bdn,bn->bd", h, c_k[:, t])
+            return h, y
+
+        h, ys = jax.lax.scan(step, h, jnp.arange(C))
+        return h, ys.swapaxes(0, 1)                       # [B,C,di]
+
+    h0 = jnp.zeros((B, di, N), jnp.float32)
+    h_fin, ys = jax.lax.scan(chunk, h0, xs_c)
+    y = (jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+         + xc.astype(jnp.float32) * p["d_skip"])
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["w_out"]
+    if not return_state:
+        return out
+    conv_tail = xpad[:, S:S + K - 1] if K > 1 else xi[:, :0]
+    return out, {"conv": conv_tail.astype(p["conv"].dtype), "h": h_fin}
+
+
+def mamba_state_init(batch: int, p: dict, d_state: int) -> dict:
+    di = p["w_in"].shape[1] // 2
+    K = p["conv"].shape[0]
+    return {"conv": jnp.zeros((batch, K - 1, di), p["conv"].dtype),
+            "h": jnp.zeros((batch, di, d_state), jnp.float32)}
+
+
+def mamba_decode_step(p: dict, x: jax.Array, state: dict, d_state: int
+                      ) -> tuple[jax.Array, dict]:
+    """x [B,1,D] one token; state from :func:`mamba_state_init`."""
+    B = x.shape[0]
+    dt_rank = p["w_dt"].shape[0]
+    N = d_state
+    xz = x[:, 0] @ p["w_in"]
+    xi, z = jnp.split(xz, 2, axis=-1)                     # [B,di]
+    hist = jnp.concatenate([state["conv"], xi[:, None]], 1)   # [B,K,di]
+    xc = jnp.einsum("bkd,kd->bd", hist, p["conv"])
+    xc = jax.nn.silu(xc)
+    dt, b, c = _dbc(p, xc, dt_rank, N)
+    a = -jnp.exp(p["a_log"])
+    da = jnp.exp(dt[..., None] * a)
+    h = da * state["h"] + dt[..., None] * b[:, None, :] * xc.astype(jnp.float32)[..., None]
+    y = jnp.einsum("bdn,bn->bd", h, c) + xc.astype(jnp.float32) * p["d_skip"]
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    return (y @ p["w_out"])[:, None], {"conv": hist[:, 1:], "h": h}

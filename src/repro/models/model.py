@@ -1,0 +1,48 @@
+"""build_model — one step-function surface per architecture family."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from .config import ModelConfig
+from . import encdec, transformer
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    """Bound functional surface: everything launch/serve/tests consume."""
+    cfg: ModelConfig
+    init_params: Callable
+    train_forward: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_decode_state: Callable
+    decode_state_specs: Callable | None = None
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    cfg.validate()
+    if cfg.family == "encdec":
+        return Model(
+            cfg=cfg,
+            init_params=lambda rng: encdec.init_params(rng, cfg),
+            train_forward=lambda p, b: encdec.train_forward(p, cfg, b),
+            prefill=lambda p, b, max_len: encdec.prefill(
+                p, cfg, b["frames"], b["tokens"], max_len),
+            decode_step=lambda p, tok, st: encdec.decode_step(p, cfg, tok, st),
+            init_decode_state=lambda bs, max_len, enc_len=0: (
+                encdec.init_decode_state(cfg, bs, max_len, enc_len or max_len)),
+            decode_state_specs=lambda: encdec.decode_state_specs(cfg),
+        )
+    return Model(
+        cfg=cfg,
+        init_params=lambda rng: transformer.init_params(rng, cfg),
+        train_forward=lambda p, b: transformer.train_forward(p, cfg, b),
+        prefill=lambda p, b, max_len: transformer.prefill(
+            p, cfg, b["tokens"], max_len, b),
+        decode_step=lambda p, tok, st: transformer.decode_step(p, cfg, tok, st),
+        init_decode_state=lambda bs, max_len, enc_len=0: (
+            transformer.init_decode_state(cfg, bs, max_len)),
+        decode_state_specs=lambda: transformer.decode_state_specs(cfg),
+    )

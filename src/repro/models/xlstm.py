@@ -1,0 +1,245 @@
+"""xLSTM blocks — mLSTM (matrix memory) and sLSTM (scalar memory, block-diag R).
+
+Follows Beck et al. 2024 (arXiv:2405.04517). Both cells use exponential
+gating with the max-stabilizer state ``m`` so the recurrences stay finite:
+
+  m_t = max(f̃_t + m_{t-1}, ĩ_t);  i = exp(ĩ - m_t);  f = exp(f̃ + m_{t-1} - m_t)
+
+* mLSTM: per-head matrix memory ``C [dk,dv]``; q/k from a causal-conv path,
+  v from the residual path; retrieval ``h = C·q / max(|n·q|, 1)``. Fully
+  parallelizable in theory (chunkwise form is the §Perf candidate); the
+  training path here is a compact ``lax.scan``.
+* sLSTM: per-channel scalar memory with block-diagonal (per-head) recurrent
+  weights — the part of xLSTM that is *inherently* sequential.
+
+Both expose O(1)-state decode steps, which is why the `ssm` family runs the
+``long_500k`` shape that full-attention archs skip.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .mamba import _pick_chunk
+
+
+# --------------------------------------------------------------------------
+# mLSTM
+# --------------------------------------------------------------------------
+def mlstm_init(rng, d: int, n_heads: int, proj_factor: float, d_conv: int, dtype):
+    di = int(proj_factor * d)
+    dh = di // n_heads
+    ks = jax.random.split(rng, 7)
+    w_up, a_up = dense_init(ks[0], d, 2 * di, ("embed", "inner"), dtype)
+    # q/k/v are block-diagonal per head (xLSTM paper's BlockDiagonal linear)
+    bd = lambda k: ((jax.random.normal(k, (n_heads, dh, dh), jnp.float32)
+                     / jnp.sqrt(jnp.float32(dh))).astype(dtype),
+                    ("heads", None, None))
+    (w_q, a_q), (w_k, a_k), (w_v, a_v) = bd(ks[1]), bd(ks[2]), bd(ks[3])
+    w_if, a_if = dense_init(ks[4], di, 2 * n_heads, ("inner", None), dtype)
+    w_o, a_o = dense_init(ks[5], di, di, ("inner", "inner"), dtype)
+    w_dn, a_dn = dense_init(ks[6], di, d, ("inner", "embed"), dtype)
+    conv = (jnp.zeros((d_conv, di), jnp.float32)
+            .at[-1].set(1.0)).astype(dtype)               # identity-ish init
+    p = {"w_up": w_up, "w_q": w_q, "w_k": w_k, "w_v": w_v, "w_if": w_if,
+         "w_o": w_o, "w_dn": w_dn, "conv": conv,
+         "f_bias": jnp.full((n_heads,), 3.0, jnp.float32),
+         "i_bias": jnp.zeros((n_heads,), jnp.float32),
+         "skip": jnp.ones((di,), jnp.float32)}
+    s = {"w_up": a_up, "w_q": a_q, "w_k": a_k, "w_v": a_v, "w_if": a_if,
+         "w_o": a_o, "w_dn": a_dn, "conv": (None, "inner"),
+         "f_bias": (None,), "i_bias": (None,), "skip": ("inner",)}
+    return p, s
+
+
+def _mlstm_gates(p, xc, H):
+    raw = (xc @ p["w_if"]).astype(jnp.float32)            # [..., 2H]
+    i_raw, f_raw = jnp.split(raw, 2, -1)
+    return i_raw + p["i_bias"], f_raw + p["f_bias"]
+
+
+def _mlstm_qkv(p, xc, xv, H):
+    dh = p["w_q"].shape[-1]
+    sh = xc.shape[:-1]
+    xch = xc.reshape(*sh, H, dh)
+    xvh = xv.reshape(*sh, H, dh)
+    q = jnp.einsum("...hk,hkv->...hv", xch, p["w_q"])
+    k = jnp.einsum("...hk,hkv->...hv", xch, p["w_k"]) / jnp.sqrt(jnp.float32(dh))
+    v = jnp.einsum("...hk,hkv->...hv", xvh, p["w_v"])
+    return q, k, v
+
+
+def apply_mlstm(p: dict, x: jax.Array, n_heads: int, d_conv: int,
+                return_state: bool = False):
+    """Train/prefill: x [B,S,D] -> [B,S,D], scan over S.
+
+    With ``return_state`` also returns the decode carry {conv, C, n, m}.
+    """
+    B, S, D = x.shape
+    H = n_heads
+    up = x @ p["w_up"]
+    a, gate = jnp.split(up, 2, -1)                        # [B,S,di] each
+    K = p["conv"].shape[0]
+    apad = jnp.pad(a, ((0, 0), (K - 1, 0), (0, 0)))
+    xc = jax.nn.silu(sum(apad[:, k:k + S] * p["conv"][k] for k in range(K)))
+    q, k, v = _mlstm_qkv(p, xc, a, H)
+    i_raw, f_raw = _mlstm_gates(p, xc, H)                 # [B,S,H]
+    o = jax.nn.sigmoid((xc @ p["w_o"]).astype(jnp.float32))
+    di = q.shape[-2] * q.shape[-1]
+    dh = di // H
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+
+    # Chunked scan (see mamba.py): boundary-only saves + rematted chunks so
+    # backward materializes the [B,H,dh,dh] matrix-memory residuals per
+    # chunk, not per step.
+    Ck = _pick_chunk(S)
+    nch = S // Ck
+    cast = lambda t: jnp.moveaxis(t.reshape(B, nch, Ck, *t.shape[2:]), 1, 0)
+    q_c, k_c, v_c = cast(qf), cast(kf), cast(vf)
+    i_c, f_c = cast(i_raw), cast(f_raw)
+
+    @jax.checkpoint
+    def chunk(carry, xs):
+        qk, kk, vk, ik, fk = xs
+
+        def step(carry, t):
+            C, n, m = carry
+            it, ft = ik[:, t], fk[:, t]
+            m_new = jnp.maximum(ft + m, it)
+            i_g = jnp.exp(it - m_new)
+            f_g = jnp.exp(ft + m - m_new)
+            kv = jnp.einsum("bhk,bhv->bhkv", kk[:, t], vk[:, t])
+            C = f_g[..., None, None] * C + i_g[..., None, None] * kv
+            n = f_g[..., None] * n + i_g[..., None] * kk[:, t]
+            num = jnp.einsum("bhkv,bhk->bhv", C, qk[:, t])
+            den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qk[:, t])), 1.0)
+            return (C, n, m_new), num / den[..., None]
+
+        carry, ys = jax.lax.scan(step, carry, jnp.arange(Ck))
+        return carry, ys.swapaxes(0, 1)                   # [B,Ck,H,dh]
+
+    init = (jnp.zeros((B, H, dh, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.zeros((B, H), jnp.float32))
+    (C_f, n_f, m_f), hs = jax.lax.scan(chunk, init, (q_c, k_c, v_c, i_c, f_c))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, di)          # [B,S,di]
+    h = o * h + xc.astype(jnp.float32) * p["skip"]
+    y = (h * jax.nn.silu(gate.astype(jnp.float32))).astype(x.dtype)
+    out = y @ p["w_dn"]
+    if not return_state:
+        return out
+    conv_tail = apad[:, S:S + K - 1] if K > 1 else a[:, :0]
+    return out, {"conv": conv_tail.astype(p["conv"].dtype),
+                 "C": C_f, "n": n_f, "m": m_f}
+
+
+def mlstm_state_init(batch: int, p: dict, n_heads: int) -> dict:
+    dh = p["w_q"].shape[-1]
+    di = dh * n_heads
+    K = p["conv"].shape[0]
+    return {"conv": jnp.zeros((batch, K - 1, di), p["conv"].dtype),
+            "C": jnp.zeros((batch, n_heads, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, n_heads, dh), jnp.float32),
+            "m": jnp.zeros((batch, n_heads), jnp.float32)}
+
+
+def mlstm_decode_step(p: dict, x: jax.Array, state: dict, n_heads: int
+                      ) -> tuple[jax.Array, dict]:
+    B = x.shape[0]
+    H = n_heads
+    up = x[:, 0] @ p["w_up"]
+    a, gate = jnp.split(up, 2, -1)
+    hist = jnp.concatenate([state["conv"], a[:, None]], 1)
+    xc = jax.nn.silu(jnp.einsum("bkd,kd->bd", hist, p["conv"]))
+    q, k, v = _mlstm_qkv(p, xc, a, H)
+    i_raw, f_raw = _mlstm_gates(p, xc, H)
+    o = jax.nn.sigmoid((xc @ p["w_o"]).astype(jnp.float32))
+    qf, kf, vf = (t.astype(jnp.float32) for t in (q, k, v))
+    m_new = jnp.maximum(f_raw + state["m"], i_raw)
+    i_g, f_g = jnp.exp(i_raw - m_new), jnp.exp(f_raw + state["m"] - m_new)
+    C = (f_g[..., None, None] * state["C"]
+         + i_g[..., None, None] * jnp.einsum("bhk,bhv->bhkv", kf, vf))
+    n = f_g[..., None] * state["n"] + i_g[..., None] * kf
+    num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), 1.0)
+    h = (num / den[..., None]).reshape(B, -1)
+    h = o * h + xc.astype(jnp.float32) * p["skip"]
+    y = (h * jax.nn.silu(gate.astype(jnp.float32))).astype(x.dtype)
+    return (y @ p["w_dn"])[:, None], {"conv": hist[:, 1:], "C": C, "n": n,
+                                      "m": m_new}
+
+
+# --------------------------------------------------------------------------
+# sLSTM
+# --------------------------------------------------------------------------
+def slstm_init(rng, d: int, n_heads: int, dtype):
+    dh = d // n_heads
+    ks = jax.random.split(rng, 3)
+    w, aw = dense_init(ks[0], d, 4 * d, ("embed", None), dtype)
+    r = (jax.random.normal(ks[1], (4, n_heads, dh, dh), jnp.float32)
+         / jnp.sqrt(jnp.float32(dh))).astype(dtype)
+    w_dn, a_dn = dense_init(ks[2], d, d, ("embed", "embed"), dtype)
+    p = {"w": w, "r": r, "w_dn": w_dn,
+         "bias": jnp.concatenate([jnp.zeros((2 * d,)),
+                                  jnp.full((d,), 3.0),      # forget bias
+                                  jnp.zeros((d,))]).astype(jnp.float32)}
+    s = {"w": aw, "r": (None, None, None, None), "w_dn": a_dn, "bias": (None,)}
+    return p, s
+
+
+def _slstm_step(p, xw_t, carry, H):
+    """One recurrence step. xw_t [B,4D] precomputed input contribution."""
+    h, c, n, m = carry                                    # [B,D] x3, [B,D]
+    B, Dm = h.shape
+    dh = Dm // H
+    hh = h.reshape(B, H, dh)
+    rec = jnp.einsum("bhk,ghkv->gbhv", hh.astype(p["r"].dtype), p["r"])
+    rec = rec.reshape(4, B, Dm).transpose(1, 0, 2).reshape(B, 4 * Dm)
+    raw = (xw_t + rec).astype(jnp.float32) + p["bias"]
+    z_r, i_r, f_r, o_r = jnp.split(raw, 4, -1)
+    m_new = jnp.maximum(f_r + m, i_r)
+    i_g, f_g = jnp.exp(i_r - m_new), jnp.exp(f_r + m - m_new)
+    c_new = f_g * c + i_g * jnp.tanh(z_r)
+    n_new = f_g * n + i_g
+    h_new = jax.nn.sigmoid(o_r) * c_new / jnp.maximum(n_new, 1.0)
+    return h_new, c_new, n_new, m_new
+
+
+def apply_slstm(p: dict, x: jax.Array, n_heads: int,
+                return_state: bool = False):
+    """Train/prefill: x [B,S,D] -> [B,S,D] (inherently sequential scan)."""
+    B, S, D = x.shape
+    xw = x @ p["w"]                                       # [B,S,4D]
+    Ck = _pick_chunk(S)
+    xw_c = jnp.moveaxis(xw.reshape(B, S // Ck, Ck, 4 * D), 1, 0)
+
+    @jax.checkpoint
+    def chunk(carry, xw_k):
+        def step(carry, t):
+            carry = _slstm_step(p, xw_k[:, t], carry, n_heads)
+            return carry, carry[0]
+        carry, hs = jax.lax.scan(step, carry, jnp.arange(Ck))
+        return carry, hs.swapaxes(0, 1)
+
+    init = tuple(jnp.zeros((B, D), jnp.float32) for _ in range(4))
+    fin, hs = jax.lax.scan(chunk, init, xw_c)
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    out = h @ p["w_dn"]
+    if not return_state:
+        return out
+    return out, dict(zip(("h", "c", "n", "m"), fin))
+
+
+def slstm_state_init(batch: int, d: int) -> dict:
+    return {k: jnp.zeros((batch, d), jnp.float32) for k in ("h", "c", "n", "m")}
+
+
+def slstm_decode_step(p: dict, x: jax.Array, state: dict, n_heads: int
+                      ) -> tuple[jax.Array, dict]:
+    xw = x[:, 0] @ p["w"]
+    carry = (state["h"], state["c"], state["n"], state["m"])
+    h, c, n, m = _slstm_step(p, xw, carry, n_heads)
+    y = h.astype(x.dtype) @ p["w_dn"]
+    return y[:, None], {"h": h, "c": c, "n": n, "m": m}

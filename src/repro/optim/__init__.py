@@ -1,0 +1,22 @@
+"""Optimizers from scratch on pytrees: AdamW, Adafactor, schedules, clipping.
+
+AdamW keeps fp32 moments (+ optional fp32 master copy of bf16 params);
+Adafactor keeps a factored second moment — the 400B MoE config uses it so
+optimizer state fits the 16 GB/chip budget (see DESIGN.md §5).
+"""
+
+from .adamw import adamw
+from .adafactor import adafactor
+from .schedules import cosine_warmup, linear_warmup
+from .common import clip_by_global_norm, global_norm
+
+OPTIMIZERS = {"adamw": adamw, "adafactor": adafactor}
+
+
+def make_optimizer(name: str, lr, **kw):
+    return OPTIMIZERS[name](lr, **kw)
+
+
+__all__ = ["adamw", "adafactor", "cosine_warmup", "linear_warmup",
+           "clip_by_global_norm", "global_norm", "make_optimizer",
+           "OPTIMIZERS"]

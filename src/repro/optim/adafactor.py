@@ -1,0 +1,68 @@
+"""Adafactor (factored second moment, no momentum by default).
+
+State per 2-D+ leaf is one row + one column accumulator instead of a full
+second moment — ~N/d memory. This is what makes the 400B llama4 config's
+optimizer state fit 256 chips (DESIGN.md §5 napkin math).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import clip_by_global_norm, resolve_lr
+
+
+def adafactor(lr, decay: float = 0.8, eps: float = 1e-30,
+              clip_norm: float = 1.0, min_dim_factored: int = 2):
+    def factored(p):
+        return p.ndim >= min_dim_factored
+
+    def init_fn(params):
+        def one(p):
+            if factored(p):
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                         jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"acc": jax.tree.map(one, params)}
+
+    def update_fn(grads, state, params, step):
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = jnp.float32(0)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = resolve_lr(lr, step)
+
+        def upd(g, acc, p):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if factored(p):
+                row = beta * acc["row"] + (1 - beta) * g2.mean(-1)
+                col = beta * acc["col"] + (1 - beta) * g2.mean(-2)
+                rfac = row / jnp.maximum(row.mean(-1, keepdims=True), eps)
+                denom = jnp.sqrt(rfac[..., None] * col[..., None, :])
+                u = g / jnp.maximum(denom, 1e-12)
+                new_acc = {"row": row, "col": col}
+            else:
+                v = beta * acc["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(jnp.maximum(v, eps))
+                new_acc = {"v": v}
+            # relative step size (update clipping at RMS 1)
+            rms = jnp.sqrt(jnp.mean(u * u))
+            u = u / jnp.maximum(1.0, rms)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), new_acc
+
+        # flatten/unflatten against the params treedef (see adamw.py note);
+        # each leaf's acc dict arrives whole via flatten_up_to.
+        pl, treedef = jax.tree.flatten(params)
+        gl = treedef.flatten_up_to(grads)
+        al = treedef.flatten_up_to(state["acc"])
+        outs = [upd(g, a, p) for g, a, p in zip(gl, al, pl)]
+        new_p = treedef.unflatten([o[0] for o in outs])
+        new_acc = treedef.unflatten([o[1] for o in outs])
+        return new_p, {"acc": new_acc}, {"grad_norm": gnorm}
+
+    return init_fn, update_fn

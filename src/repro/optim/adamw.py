@@ -1,0 +1,56 @@
+"""AdamW with fp32 moments and decoupled weight decay (pytree-native).
+
+Returns ``(init_fn, update_fn)``:
+  state = init_fn(params)                    # m, v fp32; step counter
+  params, state = update_fn(grads, state, params, step)
+Weight decay skips 1-D leaves (norm scales, biases) — standard practice.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import clip_by_global_norm, resolve_lr
+
+
+def adamw(lr, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: float = 1.0):
+    def init_fn(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(f32, params),
+                "v": jax.tree.map(f32, params)}
+
+    def update_fn(grads, state, params, step):
+        if clip_norm:
+            grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        else:
+            gnorm = jnp.float32(0)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = resolve_lr(lr, step)
+        bc1 = 1.0 - b1 ** t
+        bc2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p.ndim > 1:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr_t * u).astype(p.dtype), m, v
+
+        # flatten/unflatten (not tree.map over result tuples): params trees
+        # legitimately contain tuples (period stacks), so tuple-is-leaf
+        # tricks would truncate the tree.
+        pl, treedef = jax.tree.flatten(params)
+        gl = treedef.flatten_up_to(grads)
+        ml = treedef.flatten_up_to(state["m"])
+        vl = treedef.flatten_up_to(state["v"])
+        outs = [upd(g, m, v, p) for g, m, v, p in zip(gl, ml, vl, pl)]
+        new_p = treedef.unflatten([o[0] for o in outs])
+        new_m = treedef.unflatten([o[1] for o in outs])
+        new_v = treedef.unflatten([o[2] for o in outs])
+        return new_p, {"m": new_m, "v": new_v}, {"grad_norm": gnorm}
+
+    return init_fn, update_fn

@@ -1,0 +1,24 @@
+"""LR schedules as step -> lr callables (traceable)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(peak: float, warmup_steps: int):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        return peak * jnp.minimum(1.0, (s + 1) / max(1, warmup_steps))
+    return lr
+
+
+def cosine_warmup(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = (s + 1) / max(1, warmup_steps)
+        frac = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                        0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return peak * jnp.minimum(warm, cos)
+    return lr

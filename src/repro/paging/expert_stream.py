@@ -1,0 +1,56 @@
+"""MoE expert paging: Leap over the router's expert-id access stream.
+
+For MoE archs the "page" is an expert's weight block living in the
+disaggregated tier (EP-sharded or host-offloaded); the access stream is the
+sequence of expert ids the router emits. Skewed/correlated routing (common
+in practice) gives the stream structure Leap can exploit; uniform-random
+routing is the Memcached case where Leap's contribution is *throttling* —
+it stops prefetching instead of thrashing the buffer (paper §5.3.4).
+
+``ExpertPrefetcher`` tracks one stream per (layer, slot) — the per-process
+isolation of §4.1 — and exposes hit/pollution counters per stream.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.leap_jax import leap_init, leap_step_batched
+from repro.paging.prefetch_serving import PrefetchedStream, stream_init, stream_step
+
+
+@dataclasses.dataclass(frozen=True)
+class ExpertPrefetcher:
+    """Leap-managed hot buffer of expert weight blocks."""
+    n_experts: int
+    n_hot: int                   # experts resident at once
+    block_elems: int             # flattened expert weight block size
+    pw_max: int = 2              # experts are big; keep the window tight
+
+    def geom(self) -> PrefetchedStream:
+        return PrefetchedStream(n_pages=self.n_experts, n_slots=self.n_hot,
+                                page_elems=self.block_elems,
+                                pw_max=self.pw_max)
+
+    def init(self, dtype=jnp.float32) -> dict:
+        return stream_init(self.geom(), dtype)
+
+    def fetch(self, state: dict, expert_weights: jax.Array,
+              expert_id: jax.Array):
+        """Serve one routed expert id; returns (state, block, info)."""
+        return stream_step(state, expert_weights, expert_id, self.geom())
+
+    def consume_route_trace(self, state: dict, expert_weights: jax.Array,
+                            ids: jax.Array):
+        """Scan a [T] expert-id trace (one layer's routing over steps)."""
+        geom = self.geom()
+
+        def body(st, e):
+            st, _, info = stream_step(st, expert_weights, e, geom)
+            return st, (info["hit"], info["pref_hit"])
+
+        state, (hits, pref) = jax.lax.scan(body, state, ids)
+        return state, {"hit": hits, "pref_hit": pref}

@@ -1,0 +1,103 @@
+"""Paged KV cache: pool + page table + append + attention.
+
+Layout per layer stack: ``k_pool/v_pool [n_pages, page_size, Hkv, dh]`` with
+the page dim shardable over the mesh — pages of a sequence's context live
+round-robin across chips, which *is* the disaggregated memory pool of the
+paper (each chip contributes "remote memory" for everyone else's sequences).
+``page_table [B, n_pages_per_seq]`` maps logical to physical pages.
+
+Two allocators:
+* :func:`linear_page_table` — static round-robin layout for fixed-shape
+  serving (dry-run / benchmarks): physical page = b * npps + j, interleaved
+  so consecutive logical pages land on different shards.
+* :class:`PageAllocator` — host-side free-list for the dynamic serving loop
+  (continuous batching): O(1) alloc/free per page, no device sync.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.paged_attention import paged_attention
+
+
+def init_paged_kv(n_layers: int, n_pages: int, page_size: int, n_kv_heads: int,
+                  head_dim: int, dtype=jnp.bfloat16) -> dict:
+    sh = (n_layers, n_pages, page_size, n_kv_heads, head_dim)
+    return {"k": jnp.zeros(sh, dtype), "v": jnp.zeros(sh, dtype)}
+
+
+def kv_pool_specs(n_layers: int) -> dict:
+    """Logical axes: page dim sharded (the disaggregated tier)."""
+    ax = ("layers", "pages", None, "kv_heads_s", None)
+    return {"k": ax, "v": ax}
+
+
+def linear_page_table(batch: int, n_pages_per_seq: int,
+                      stride: int = 1) -> jax.Array:
+    """Static allocation: seq b's logical page j -> b*npps + j (strided)."""
+    base = jnp.arange(batch)[:, None] * n_pages_per_seq
+    return (base + jnp.arange(n_pages_per_seq)[None, :] * stride
+            % n_pages_per_seq).astype(jnp.int32)
+
+
+def append_kv(pool: dict, layer: jax.Array, k_new: jax.Array, v_new: jax.Array,
+              page_table: jax.Array, pos: jax.Array) -> dict:
+    """Write one token's K/V for every sequence at position ``pos``.
+
+    k_new/v_new [B, Hkv, dh]; pool leaves [L, n_pages, page, Hkv, dh].
+    """
+    page_size = pool["k"].shape[2]
+    B = k_new.shape[0]
+    logical = pos // page_size
+    offset = pos % page_size
+    phys = page_table[jnp.arange(B), logical]            # [B]
+
+    def write(buf, new):
+        return buf.at[layer, phys, offset].set(new.astype(buf.dtype))
+
+    return {"k": write(pool["k"], k_new), "v": write(pool["v"], v_new)}
+
+
+def paged_decode_attention(q: jax.Array, pool: dict, layer: jax.Array,
+                           page_table: jax.Array, lengths: jax.Array, *,
+                           use_kernel: bool = False) -> jax.Array:
+    """q [B,1,Hq,dh] against layer ``layer`` of the paged pool."""
+    k_pool = pool["k"][layer]
+    v_pool = pool["v"][layer]
+    return paged_attention(q, k_pool, v_pool, page_table, lengths,
+                           use_kernel=use_kernel)
+
+
+@dataclasses.dataclass
+class PageAllocator:
+    """Host-side page free-list (control plane for continuous batching)."""
+
+    n_pages: int
+
+    def __post_init__(self):
+        self.free = list(range(self.n_pages - 1, -1, -1))
+        self.owned: dict[int, list[int]] = {}
+
+    def alloc_seq(self, seq_id: int, n: int) -> list[int]:
+        if len(self.free) < n:
+            raise MemoryError(f"pool exhausted: need {n}, have {len(self.free)}")
+        pages = [self.free.pop() for _ in range(n)]
+        self.owned.setdefault(seq_id, []).extend(pages)
+        return pages
+
+    def extend_seq(self, seq_id: int, n: int = 1) -> list[int]:
+        return self.alloc_seq(seq_id, n)
+
+    def free_seq(self, seq_id: int) -> int:
+        pages = self.owned.pop(seq_id, [])
+        self.free.extend(reversed(pages))
+        return len(pages)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - len(self.free)

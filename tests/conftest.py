@@ -1,0 +1,28 @@
+import os
+import sys
+
+# Tests must see the real device count (1 CPU) — the 512-device forcing is
+# exclusively the dry-run's (repro.launch.dryrun sets it before jax import).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# repo root (for `import benchmarks`) and src (for `import repro`)
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for p in (_ROOT, os.path.join(_ROOT, "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
+
+import jax
+import numpy as np
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,156 @@
+"""Measurement tooling: loop-aware jaxpr FLOP counter + HLO analysis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from benchmarks.flop_count import count_fn
+from repro.launch.hlo_analysis import (analyze_hlo, loop_structure,
+                                       split_computations)
+
+
+class TestFlopCount:
+    def test_plain_matmul(self):
+        M = 64
+        st = count_fn(lambda a, b: a @ b,
+                      jax.ShapeDtypeStruct((M, M), jnp.float32),
+                      jax.ShapeDtypeStruct((M, M), jnp.float32))
+        assert st["dot_flops"] == 2 * M ** 3
+
+    def test_scan_scales_by_length(self):
+        M, L = 32, 7
+
+        def f(x, ws):
+            y, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
+            return y
+
+        st = count_fn(f, jax.ShapeDtypeStruct((M, M), jnp.float32),
+                      jax.ShapeDtypeStruct((L, M, M), jnp.float32))
+        assert st["dot_flops"] == L * 2 * M ** 3
+
+    def test_nested_scan(self):
+        M, L1, L2 = 16, 3, 5
+
+        def inner(x, ws):
+            y, _ = jax.lax.scan(lambda c, w: (c @ w, None), x, ws)
+            return y
+
+        def outer(x, ws):
+            y, _ = jax.lax.scan(lambda c, w: (inner(c, w), None), x, ws)
+            return y
+
+        st = count_fn(outer, jax.ShapeDtypeStruct((M, M), jnp.float32),
+                      jax.ShapeDtypeStruct((L1, L2, M, M), jnp.float32))
+        assert st["dot_flops"] == L1 * L2 * 2 * M ** 3
+
+    def test_remat_counts_once_forward(self):
+        M = 32
+
+        @jax.checkpoint
+        def f(a, b):
+            return a @ b
+
+        st = count_fn(f, jax.ShapeDtypeStruct((M, M), jnp.float32),
+                      jax.ShapeDtypeStruct((M, M), jnp.float32))
+        assert st["dot_flops"] == 2 * M ** 3
+
+    def test_model_train_step_close_to_analytic(self):
+        """smoke config: counted dot flops within 35% of 8·N·D (remat)."""
+        from repro.configs import get_smoke_config
+        from repro.models.model import build_model
+        cfg = get_smoke_config("qwen2_5_3b")
+        model = build_model(cfg)
+        pshapes = jax.eval_shape(lambda k: model.init_params(k)[0],
+                                 jax.random.PRNGKey(0))
+        B, S = 2, 32
+        batch = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "targets": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                 "mask": jax.ShapeDtypeStruct((B, S), jnp.float32)}
+        st = count_fn(lambda p, b: jax.value_and_grad(model.train_forward)(
+            p, b)[0], pshapes, batch)
+        n, _ = cfg.param_count()
+        analytic = 8 * n * B * S          # fwd+bwd+remat ≈ 8·N·D
+        assert 0.4 * analytic < st["dot_flops"] < 2.5 * analytic
+
+
+HLO_SAMPLE = """
+HloModule test
+
+%body.1 (arg: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %ag = f32[8,8]{1,0} all-gather(%x), channel_id=1
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ag)
+}
+
+%cond.1 (arg: (s32[], f32[8,8])) -> pred[] {
+  %p2 = (s32[], f32[8,8]) parameter(0)
+  %c = s32[] constant(5)
+  ROOT %cmp = pred[] compare(%i2, %c), direction=LT
+}
+
+ENTRY %main.1 (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8]{1,0} parameter(0)
+  %w = (s32[], f32[8,8]) while(%init), condition=%cond.1, body=%body.1, backend_config={"known_trip_count":{"n":"5"}}
+  %ar = f32[8,8]{1,0} all-reduce(%y), channel_id=2
+  ROOT %r = f32[8,8]{1,0} add(%q, %z)
+}
+"""
+
+
+class TestHloAnalysis:
+    def test_split_and_loops(self):
+        comps = split_computations(HLO_SAMPLE)
+        assert {"body.1", "cond.1", "main.1"} <= set(comps)
+        counts = loop_structure(comps)
+        assert counts["body.1"] == 5
+
+    def test_collectives_loop_scaled(self):
+        res = analyze_hlo(HLO_SAMPLE)
+        # in-loop all-gather x5, entry all-reduce x1
+        assert res["collectives"]["all-gather"]["count"] == 5
+        assert res["collectives"]["all-gather"]["bytes"] == 5 * 8 * 8 * 4
+        assert res["collectives"]["all-reduce"]["count"] == 1
+
+    def test_converts_skipped(self):
+        hlo = HLO_SAMPLE.replace(
+            "%ar = f32[8,8]{1,0} all-reduce(%y), channel_id=2",
+            "%cv = f32[8,8]{1,0} convert(%y)")
+        res = analyze_hlo(hlo)
+        assert "all-reduce" not in res["collectives"]
+
+
+class TestSelectiveScanKernel:
+    @pytest.mark.parametrize("B,S,di,N,bt,bd", [
+        (1, 16, 8, 4, 4, 4), (2, 32, 16, 8, 8, 8), (1, 24, 8, 16, 8, 8),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_oracle(self, B, S, di, N, bt, bd, dtype):
+        from repro.kernels import selective_scan
+        ks = jax.random.split(jax.random.PRNGKey(0), 5)
+        dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, di))).astype(dtype)
+        b = jax.random.normal(ks[1], (B, S, N), dtype)
+        c = jax.random.normal(ks[2], (B, S, N), dtype)
+        x = jax.random.normal(ks[3], (B, S, di), dtype)
+        a = -jnp.exp(jax.random.normal(ks[4], (di, N))).astype(dtype)
+        y1 = selective_scan(dt, b, c, x, a, block_t=bt, block_d=bd,
+                            interpret=True)
+        y2 = selective_scan(dt, b, c, x, a, use_kernel=False)
+        tol = 5e-2 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(np.asarray(y1, np.float32),
+                                   np.asarray(y2, np.float32),
+                                   atol=tol, rtol=tol)
+
+
+class TestMambaKernelPath:
+    def test_sscan_kernel_flag_matches_scan_path(self, monkeypatch):
+        import os
+        from repro.models.mamba import apply_mamba, mamba_init
+        p, _ = mamba_init(jax.random.PRNGKey(0), 16, 2, 8, 4, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 16))
+        y1, st1 = apply_mamba(p, x, 8, True)
+        monkeypatch.setenv("REPRO_OPT", "sscan_kernel")
+        y2, st2 = apply_mamba(p, x, 8, True)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)
+        np.testing.assert_allclose(np.asarray(st1["h"]), np.asarray(st2["h"]),
+                                   atol=1e-4)

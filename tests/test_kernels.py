@@ -1,0 +1,119 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (interpret=True on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.gather_pages import gather_pages, gather_pages_ref
+from repro.kernels.paged_attention import paged_attention
+
+
+def _tol(dtype):
+    return 2e-2 if dtype == jnp.bfloat16 else 2e-5
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("B,Sq,Sk,Hq,Hkv,dh", [
+        (1, 32, 32, 4, 4, 32),        # MHA
+        (2, 64, 64, 8, 2, 64),        # GQA 4:1
+        (1, 16, 48, 4, 1, 32),        # MQA, Sq != Sk
+        (1, 64, 64, 4, 2, 120),       # non-128 head dim (danube)
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shapes_dtypes_vs_oracle(self, B, Sq, Sk, Hq, Hkv, dh, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        q = jax.random.normal(ks[0], (B, Sq, Hq, dh), dtype)
+        k = jax.random.normal(ks[1], (B, Sk, Hkv, dh), dtype)
+        v = jax.random.normal(ks[2], (B, Sk, Hkv, dh), dtype)
+        a = flash_attention(q, k, v, block_q=16, block_k=16, interpret=True)
+        b = flash_attention(q, k, v, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=_tol(dtype), rtol=_tol(dtype))
+
+    @pytest.mark.parametrize("causal,window", [(True, 0), (True, 8),
+                                               (False, 0)])
+    def test_masks(self, causal, window):
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (1, 32, 2, 32))
+        k = jax.random.normal(ks[1], (1, 32, 2, 32))
+        v = jax.random.normal(ks[2], (1, 32, 2, 32))
+        a = flash_attention(q, k, v, causal=causal, window=window,
+                            block_q=8, block_k=8, interpret=True)
+        b = flash_attention(q, k, v, causal=causal, window=window,
+                            use_kernel=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+    def test_q_offset_decode_tail(self):
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        q = jax.random.normal(ks[0], (1, 8, 2, 32))
+        k = jax.random.normal(ks[1], (1, 64, 2, 32))
+        v = jax.random.normal(ks[2], (1, 64, 2, 32))
+        a = flash_attention(q, k, v, q_offset=56, block_q=8, block_k=16,
+                            interpret=True)
+        b = flash_attention(q, k, v, q_offset=56, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+class TestGatherPages:
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+    def test_exact_gather(self, dtype):
+        pool = jnp.arange(32 * 6, dtype=jnp.float32).reshape(32, 6).astype(dtype)
+        idx = jnp.array([0, 31, 7, 7, 13], jnp.int32)
+        out = gather_pages(pool, idx, interpret=True)
+        assert (np.asarray(out) == np.asarray(pool)[np.asarray(idx)]).all()
+
+    def test_clamps_out_of_range(self):
+        pool = jnp.arange(16.0).reshape(8, 2)
+        out = gather_pages(pool, jnp.array([-5, 100], jnp.int32),
+                           interpret=True)
+        assert (np.asarray(out[0]) == np.asarray(pool[0])).all()
+        assert (np.asarray(out[1]) == np.asarray(pool[7])).all()
+
+    def test_multidim_pages(self):
+        pool = jax.random.normal(jax.random.PRNGKey(0), (16, 4, 2, 8))
+        idx = jnp.array([3, 0, 15], jnp.int32)
+        out = gather_pages(pool, idx, interpret=True)
+        np.testing.assert_allclose(np.asarray(out),
+                                   np.asarray(pool)[np.asarray(idx)])
+
+
+class TestPagedAttention:
+    @pytest.mark.parametrize("B,Hq,Hkv,dh,ps,npps", [
+        (2, 8, 2, 64, 16, 4),
+        (1, 4, 4, 32, 8, 8),
+        (3, 4, 1, 128, 32, 2),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_vs_oracle(self, B, Hq, Hkv, dh, ps, npps, dtype):
+        npages = npps * B + 4
+        ks = jax.random.split(jax.random.PRNGKey(0), 4)
+        q = jax.random.normal(ks[0], (B, 1, Hq, dh), dtype)
+        kp = jax.random.normal(ks[1], (npages, ps, Hkv, dh), dtype)
+        vp = jax.random.normal(ks[2], (npages, ps, Hkv, dh), dtype)
+        pt = jax.random.randint(ks[3], (B, npps), 0, npages)
+        ln = jnp.asarray(np.random.default_rng(0).integers(1, ps * npps + 1,
+                                                           B), jnp.int32)
+        a = paged_attention(q, kp, vp, pt, ln, interpret=True)
+        b = paged_attention(q, kp, vp, pt, ln, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=_tol(dtype), rtol=_tol(dtype))
+
+    def test_matches_dense_decode_attention(self):
+        """Paged == contiguous decode attention when pages are linear."""
+        from repro.models.attention import decode_attention
+        B, Hq, Hkv, dh, ps, npps = 2, 4, 2, 32, 8, 4
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (B, 1, Hq, dh))
+        kd = jax.random.normal(ks[1], (B, ps * npps, Hkv, dh))
+        vd = jax.random.normal(ks[2], (B, ps * npps, Hkv, dh))
+        kp = kd.reshape(B * npps, ps, Hkv, dh)
+        vp = vd.reshape(B * npps, ps, Hkv, dh)
+        pt = jnp.arange(B * npps, dtype=jnp.int32).reshape(B, npps)
+        ln = jnp.array([20, 32], jnp.int32)
+        a = paged_attention(q, kp, vp, pt, ln, interpret=True)
+        b = decode_attention(q, kd, vd, ln)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

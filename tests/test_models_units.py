@@ -1,0 +1,160 @@
+"""Model-layer unit tests: attention paths, rotary, MoE, chunked CE, scans."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.attention import (blocked_attention, decode_attention,
+                                    full_attention)
+from repro.models.layers import (apply_rotary, chunked_ce_loss, mrope_angles,
+                                 rope_angles)
+from repro.models.moe import apply_moe, apply_moe_dense_ref, moe_init
+
+
+class TestAttention:
+    def _qkv(self, B=2, Sq=32, Sk=32, Hq=4, Hkv=2, dh=16, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+        return (jax.random.normal(ks[0], (B, Sq, Hq, dh)),
+                jax.random.normal(ks[1], (B, Sk, Hkv, dh)),
+                jax.random.normal(ks[2], (B, Sk, Hkv, dh)))
+
+    @pytest.mark.parametrize("window", [0, 8])
+    @pytest.mark.parametrize("bq,bk", [(8, 8), (16, 4), (32, 32)])
+    def test_blocked_equals_full(self, window, bq, bk):
+        q, k, v = self._qkv()
+        a = full_attention(q, k, v, causal=True, window=window)
+        b = blocked_attention(q, k, v, causal=True, window=window,
+                              block_q=bq, block_k=bk)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+    def test_blocked_gradients_finite(self):
+        q, k, v = self._qkv()
+
+        def loss(q):
+            return blocked_attention(q, k, v, block_q=8, block_k=8).sum()
+
+        g = jax.grad(loss)(q)
+        assert bool(jnp.isfinite(g).all())
+
+    def test_decode_matches_last_row(self):
+        q, k, v = self._qkv()
+        f = full_attention(q, k, v, causal=True)[:, -1:]
+        d = decode_attention(q[:, -1:], k, v, length=k.shape[1])
+        np.testing.assert_allclose(np.asarray(d), np.asarray(f), atol=2e-5)
+
+    def test_softcap(self):
+        q, k, v = self._qkv()
+        a = full_attention(q, k, v, softcap=20.0)
+        b = blocked_attention(q, k, v, softcap=20.0, block_q=8, block_k=8)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+class TestRotary:
+    def test_mrope_degenerates_to_rope_on_text(self):
+        S, dh = 16, 32
+        pos = jnp.arange(S)
+        p3 = jnp.broadcast_to(pos, (3, 2, S))
+        a = rope_angles(pos, dh, 1e4)
+        m = mrope_angles(p3, dh, 1e4, (4, 6, 6))
+        np.testing.assert_allclose(np.asarray(m[0]), np.asarray(a), atol=1e-6)
+
+    def test_rotary_preserves_norm(self):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 4, 32))
+        ang = rope_angles(jnp.arange(8), 32, 1e4)
+        y = apply_rotary(x, ang[None, :, None, :])
+        np.testing.assert_allclose(np.linalg.norm(np.asarray(y), axis=-1),
+                                   np.linalg.norm(np.asarray(x), axis=-1),
+                                   rtol=1e-5)
+
+    def test_rotary_relative_property(self):
+        """<R(p)q, R(p+d)k> depends only on d (per 2-dim pair sumed)."""
+        dh = 16
+        q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, dh))
+        k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, dh))
+        def dot_at(p):
+            aq = rope_angles(jnp.array([p]), dh, 1e4)
+            ak = rope_angles(jnp.array([p + 5]), dh, 1e4)
+            qr = apply_rotary(q, aq[None, :, None, :])
+            kr = apply_rotary(k, ak[None, :, None, :])
+            return float(jnp.sum(qr * kr))
+        assert dot_at(0) == pytest.approx(dot_at(37), rel=1e-4)
+
+
+class TestMoE:
+    def test_grouped_matches_dense_ref_when_capacity_ample(self):
+        p, _ = moe_init(jax.random.PRNGKey(0), 16, 32, 4, 0, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+        y, aux = apply_moe(p, x, 2, capacity_factor=8.0)
+        yr = apply_moe_dense_ref(p, x, 2)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=1e-5)
+        assert float(aux) > 0
+
+    def test_capacity_drops_bounded(self):
+        """With cf=1.0 some tokens drop; output stays finite & bounded."""
+        p, _ = moe_init(jax.random.PRNGKey(0), 16, 32, 8, 0, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, 16))
+        y, _ = apply_moe(p, x, 1, capacity_factor=1.0)
+        yr = apply_moe_dense_ref(p, x, 1)
+        assert bool(jnp.isfinite(y).all())
+        assert float(jnp.abs(y).max()) <= float(jnp.abs(yr).max()) * 2 + 1
+
+    def test_shared_expert_added(self):
+        p, _ = moe_init(jax.random.PRNGKey(0), 16, 32, 4, 1, jnp.float32)
+        assert "shared" in p
+        x = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 16))
+        y, _ = apply_moe(p, x, 1, capacity_factor=4.0)
+        assert bool(jnp.isfinite(y).all())
+
+
+class TestChunkedCE:
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(1, 3), st.sampled_from([8, 12, 16]),
+           st.sampled_from([1, 4, 8]))
+    def test_matches_naive(self, B, S, n_chunks):
+        D, V = 8, 11
+        ks = jax.random.split(jax.random.PRNGKey(0), 3)
+        h = jax.random.normal(ks[0], (B, S, D))
+        w = jax.random.normal(ks[1], (D, V))
+        t = jax.random.randint(ks[2], (B, S), 0, V)
+        mask = (jnp.arange(S)[None] < S - 2).astype(jnp.float32) * jnp.ones((B, 1))
+        got = chunked_ce_loss(h, w, t, mask, n_chunks)
+        logits = (h @ w).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, t[..., None], -1)[..., 0]
+        want = ((lse - gold) * mask).sum() / mask.sum()
+        assert float(got) == pytest.approx(float(want), rel=1e-5)
+
+
+class TestRecurrentChunking:
+    """Chunked scan == unchunked semantics (mamba/xlstm train paths)."""
+
+    def test_mamba_chunk_invariance(self):
+        from repro.models.mamba import apply_mamba, mamba_init, _pick_chunk
+        p, _ = mamba_init(jax.random.PRNGKey(0), 16, 2, 8, 4, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 16))
+        y1 = apply_mamba(p, x, 8)
+        # different chunking via monkeypatched chunk picker
+        import repro.models.mamba as M
+        orig = M._pick_chunk
+        M._pick_chunk = lambda S, target=128: 4
+        try:
+            y2 = apply_mamba(p, x, 8)
+        finally:
+            M._pick_chunk = orig
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)
+
+    def test_mlstm_chunk_invariance(self):
+        from repro.models.xlstm import apply_mlstm, mlstm_init
+        import repro.models.mamba as M
+        p, _ = mlstm_init(jax.random.PRNGKey(0), 16, 4, 2.0, 4, jnp.float32)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 24, 16))
+        y1 = apply_mlstm(p, x, 4, 4)
+        orig = M._pick_chunk
+        M._pick_chunk = lambda S, target=128: 6
+        try:
+            y2 = apply_mlstm(p, x, 4, 4)
+        finally:
+            M._pick_chunk = orig
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-5)

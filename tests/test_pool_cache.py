@@ -1,0 +1,108 @@
+"""Hot-buffer pool (jittable) + PageCache (simulator) semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import PageCache
+from repro.core.pool import pool_access, pool_init, pool_stats
+
+
+def _serve(stp, hot, pool, pages, is_pf, lazy=False):
+    pages = jnp.asarray(pages, jnp.int32)
+    is_pf = jnp.asarray(is_pf)
+    valid = jnp.ones(pages.shape, bool)
+    return pool_access(stp, hot, pool, pages, is_pf, valid, lazy=lazy)
+
+
+class TestPool:
+    def setup_method(self):
+        self.pool = jnp.arange(64 * 4, dtype=jnp.float32).reshape(64, 4)
+
+    def test_data_correctness_demand(self):
+        st = pool_init(64, 8)
+        hot = jnp.zeros((8, 4))
+        st, hot, slots, info = _serve(st, hot, self.pool, [5, 9, 5, 9],
+                                      [False, False, False, False])
+        for i, p in enumerate([5, 9, 5, 9]):
+            assert (hot[slots[i]] == self.pool[p]).all()
+
+    def test_prefetch_then_hit_eager_frees(self):
+        st = pool_init(64, 8)
+        hot = jnp.zeros((8, 4))
+        st, hot, _, _ = _serve(st, hot, self.pool, [1, 2, 3], [False, True, True])
+        st, hot, slots, info = _serve(st, hot, self.pool, [2, 3], [False, False])
+        assert bool(info["prefetched_hit"][0]) and bool(info["prefetched_hit"][1])
+        s = pool_stats(st)
+        assert s["prefetch_hits"] == 2 and s["pollution"] == 0
+        # eager eviction: slots returned; page no longer resident
+        assert int(st["page_slot"][2]) == -1 and int(st["page_slot"][3]) == -1
+
+    def test_fifo_eviction_counts_pollution(self):
+        st = pool_init(64, 4)
+        hot = jnp.zeros((4, 4))
+        for base in range(0, 12, 2):
+            st, hot, _, _ = _serve(st, hot, self.pool,
+                                   [base, base + 1], [True, True])
+        s = pool_stats(st)
+        assert s["prefetch_issued"] == 12
+        assert s["pollution"] == 12 - 4       # only n_slots can remain
+
+    def test_lazy_mode_scans(self):
+        st = pool_init(64, 4)
+        hot = jnp.zeros((4, 4))
+        for p in range(8):
+            st, hot, _, _ = _serve(st, hot, self.pool, [p], [False], lazy=True)
+        s = pool_stats(st)
+        assert s["alloc_scans"] > 0           # kswapd-style LRU scanning
+
+    def test_eager_mode_never_scans(self):
+        st = pool_init(64, 4)
+        hot = jnp.zeros((4, 4))
+        for p in range(16):
+            st, hot, _, _ = _serve(st, hot, self.pool, [p], [False])
+        assert pool_stats(st)["alloc_scans"] == 0
+
+    def test_out_of_range_requests_ignored(self):
+        st = pool_init(64, 8)
+        hot = jnp.zeros((8, 4))
+        st, hot, slots, info = _serve(st, hot, self.pool, [70, -3, 5],
+                                      [True, True, False])
+        s = pool_stats(st)
+        assert s["prefetch_issued"] == 0 and s["misses"] == 1
+
+
+class TestPageCache:
+    def test_eager_frees_on_hit(self):
+        c = PageCache(8, eviction="eager")
+        c.insert_prefetch(5, now=0.0, ready_t=1.0)
+        hit, pf, wait = c.lookup(5, now=2.0)
+        assert hit and pf and 5 not in c
+        assert c.stats.prefetch_hits == 1
+
+    def test_partial_hit_waits_residual(self):
+        c = PageCache(8, eviction="eager")
+        c.insert_prefetch(5, now=0.0, ready_t=4.0)
+        hit, pf, wait = c.lookup(5, now=1.0)
+        assert hit and wait == pytest.approx(3.0)
+
+    def test_lru_scan_stall_charged(self):
+        c = PageCache(4, eviction="lru", high_watermark=2.0)  # no bg scan
+        for p in range(4):
+            c.insert_demand(p, now=float(p), ready_t=float(p))
+        stall = c.insert_demand(9, now=5.0, ready_t=5.0)
+        assert stall > 0 and c.scanned_entries > 0
+
+    def test_timeliness_recorded(self):
+        c = PageCache(8, eviction="eager")
+        c.insert_prefetch(1, now=0.0, ready_t=0.5)
+        c.lookup(1, now=3.0)
+        assert c.stats.timeliness == [pytest.approx(3.0)]
+
+    def test_drain_counts_unconsumed(self):
+        c = PageCache(8, eviction="eager")
+        c.insert_prefetch(1, 0.0, 0.0)
+        c.insert_prefetch(2, 0.0, 0.0)
+        c.lookup(1, 1.0)
+        c.drain_unconsumed()
+        assert c.stats.pollution == 1

@@ -1,0 +1,104 @@
+"""Prefetch policies on canonical traces: paper §2.2/§5.2 behaviors."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import traces
+from repro.core.cache import PageCache
+from repro.core.prefetcher import (LeapPrefetcher, NextNLinePrefetcher,
+                                   ReadAheadPrefetcher, StridePrefetcher,
+                                   make_prefetcher)
+from repro.core.simulator import run_policy_matrix, simulate
+
+
+def _run(trace, name, capacity=64, **kw):
+    pf = make_prefetcher(name, **kw)
+    ev = "eager" if name == "leap" else "lru"
+    cache = PageCache(capacity, eviction=ev)
+    return simulate(trace, pf, cache, model="rdma_lean")
+
+
+class TestSequential:
+    def test_all_policies_cover_sequential(self):
+        tr = traces.sequential(2000)
+        for name in ("leap", "next_n_line", "stride", "read_ahead"):
+            r = _run(tr, name)
+            assert r.stats.hit_rate > 0.85, (name, r.stats.hit_rate)
+
+
+class TestStride:
+    """Fig. 2/7: stride access defeats sequential prefetchers, not Leap."""
+
+    def test_leap_and_stride_cover(self):
+        tr = traces.stride(2000, 10)
+        assert _run(tr, "leap").stats.hit_rate > 0.95
+        # stride acts on misses only (paper §5.2.3): steady state d/(d+1)
+        assert _run(tr, "stride").stats.hit_rate > 0.85
+
+    def test_nextline_readahead_fail(self):
+        tr = traces.stride(2000, 10)
+        assert _run(tr, "next_n_line").stats.hit_rate < 0.05
+        assert _run(tr, "read_ahead").stats.hit_rate < 0.05
+
+    def test_leap_median_latency_near_hit_time(self):
+        tr = traces.stride(2000, 10)
+        r = _run(tr, "leap")
+        assert r.stats.latency_percentiles()["p50"] <= 1.5  # ~t_hit
+
+    def test_negative_stride(self):
+        tr = traces.stride(1000, -7, start=1 << 20)
+        assert _run(tr, "leap").stats.hit_rate > 0.95
+
+
+class TestIrregular:
+    def test_leap_throttles_on_random(self):
+        """Memcached case (§5.3.4): detect randomness, stop prefetching."""
+        tr = traces.random_pages(2000, seed=1)
+        r = _run(tr, "leap")
+        assert r.stats.prefetch_issued < 0.1 * len(tr)
+
+    def test_nextnline_pollutes_on_random(self):
+        tr = traces.random_pages(2000, seed=1)
+        r = _run(tr, "next_n_line")
+        assert r.stats.pollution > 10 * _run(tr, "leap").stats.pollution
+
+
+class TestAdaptation:
+    def test_phase_shift_recovers(self):
+        """Fig. 5: trend flip is re-detected and coverage recovers."""
+        tr = traces.phase_shift(2000, deltas=(-3, 2), noise_every=0)
+        r = _run(tr, "leap")
+        assert r.stats.hit_rate > 0.9
+
+    def test_interleaved_streams_confuse_shared_detector(self):
+        """Motivation for per-process isolation (§4.1): one shared detector
+        on interleaved strides performs much worse than isolated ones."""
+        tr = traces.interleaved(2000, streams=4, step=7)
+        shared = _run(tr, "leap").stats.hit_rate
+        per = []
+        for s in range(4):
+            sub = tr[s::4]
+            per.append(_run(sub, "leap").stats.hit_rate)
+        assert np.mean(per) > shared + 0.2
+
+
+class TestLeapInvariants:
+    @settings(max_examples=20, deadline=None)
+    @given(st.lists(st.integers(0, 1 << 12), min_size=10, max_size=300))
+    def test_candidates_follow_contract(self, pages):
+        pf = LeapPrefetcher(pw_max=8)
+        for p in pages:
+            cands = pf.on_fault(p, False)
+            assert len(cands) <= 8
+            if cands:
+                step = cands[0] - p
+                assert step != 0
+                assert cands == [p + step * (i + 1) for i in range(len(cands))]
+
+    def test_reset(self):
+        pf = LeapPrefetcher()
+        for p in range(100):
+            pf.on_fault(p, p > 0)
+        pf.reset()
+        assert pf.current_trend is None and pf.on_fault(5, False) == []

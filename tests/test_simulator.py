@@ -1,0 +1,87 @@
+"""Trace simulator invariants + latency-model calibration checks."""
+
+import numpy as np
+import pytest
+
+from repro.core import traces
+from repro.core.cache import PageCache
+from repro.core.prefetcher import make_prefetcher
+from repro.core.simulator import LATENCY_MODELS, run_policy_matrix, simulate
+
+
+def test_hit_plus_miss_equals_faults():
+    tr = traces.powergraph_like(3000)
+    res = run_policy_matrix(tr, ["leap", "read_ahead"], cache_capacity=64)
+    for r in res.values():
+        assert r.stats.cache_hits + r.stats.misses == r.stats.faults
+
+
+def test_lean_path_beats_block_path():
+    """Paper Fig. 1/2: ~34us block-layer overhead (mean; high-variance
+    lognormal, so the median sits lower) vs ~1.2us lean path."""
+    tr = traces.stride(2000, 10)
+    lean = simulate(tr, make_prefetcher("none"), PageCache(64), "rdma_lean")
+    block = simulate(tr, make_prefetcher("none"), PageCache(64), "rdma_block")
+    assert block.stats.latency_percentiles()["p50"] > \
+        4 * lean.stats.latency_percentiles()["p50"]
+    assert block.stats.latency_percentiles()["avg"] > \
+        6 * lean.stats.latency_percentiles()["avg"]
+
+
+def test_disk_slower_than_rdma():
+    tr = traces.random_pages(1000)
+    disk = simulate(tr, make_prefetcher("none"), PageCache(64), "disk_block")
+    rdma = simulate(tr, make_prefetcher("none"), PageCache(64), "rdma_block")
+    assert disk.total_time > rdma.total_time
+
+
+def test_prefetch_consumes_link_bandwidth():
+    """Over-aggressive prefetching delays demand fetches (wasted I/O bw)."""
+    tr = traces.random_pages(1500, seed=3)
+    greedy = simulate(tr, make_prefetcher("next_n_line", n=8),
+                      PageCache(64, eviction="lru"), "rdma_lean")
+    none = simulate(tr, make_prefetcher("none"), PageCache(64), "rdma_lean")
+    assert greedy.link_busy > 3 * none.link_busy
+
+
+def test_deterministic_given_seed():
+    tr = traces.voltdb_like(500)
+    a = simulate(tr, make_prefetcher("leap"), PageCache(64), "rdma_block", seed=7)
+    b = simulate(tr, make_prefetcher("leap"), PageCache(64), "rdma_block", seed=7)
+    assert a.stats.latencies == b.stats.latencies
+
+
+def test_latency_models_registered():
+    assert {"disk_block", "rdma_block", "disk_lean", "rdma_lean",
+            "tpu_ici", "tpu_dcn"} <= set(LATENCY_MODELS)
+
+
+class TestTraces:
+    def test_classify_windows_pure_patterns(self):
+        from repro.core.traces import classify_windows
+        assert classify_windows(traces.sequential(500), 8)["sequential"] == 1.0
+        assert classify_windows(traces.stride(500, 10), 8)["stride"] == 1.0
+        r = classify_windows(traces.random_pages(500), 8)
+        assert r["other"] > 0.95
+
+    def test_x2_windows_degenerate_to_stride(self):
+        """Paper §2.3: at X=2 every non-sequential pair counts as 'stride' —
+        the motivating flaw of 2-fault pattern detectors."""
+        from repro.core.traces import classify_windows
+        r = classify_windows(traces.memcached_like(4000), 2)
+        assert r["stride"] > 0.8 and r["other"] < 0.05
+
+    def test_memcached_mostly_irregular_at_x8(self):
+        from repro.core.traces import classify_windows
+        r = classify_windows(traces.memcached_like(4000), 8)
+        assert r["other"] > 0.9                 # paper Fig. 3: ~96%
+
+    def test_voltdb_majority_irregular_at_x8(self):
+        from repro.core.traces import classify_windows
+        r = classify_windows(traces.voltdb_like(4000), 8)
+        assert r["other"] > 0.5                 # paper: ~69% irregular
+
+    def test_generators_deterministic(self):
+        for name, gen in traces.TRACES.items():
+            a, b = gen(n=256), gen(n=256)
+            assert np.array_equal(a, b), name

@@ -1,0 +1,169 @@
+"""Optimizers, data pipeline, checkpoint, runtime (FT/straggler/compression)."""
+
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (AsyncCheckpointer, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.data import PrefetchQueue, SyntheticSource, make_pipeline
+from repro.optim import cosine_warmup, linear_warmup, make_optimizer
+from repro.runtime import (StepTimeMonitor, Watchdog, compress_int8,
+                           decompress_int8, init_error_feedback,
+                           run_with_restarts)
+
+
+class TestOptim:
+    @pytest.mark.parametrize("name", ["adamw", "adafactor"])
+    def test_converges_on_quadratic(self, name):
+        init, upd = make_optimizer(name, 0.05)
+        p = {"w": jnp.ones((4, 4)), "nested": ({"b": jnp.ones(3)},)}
+        st = init(p)
+        for i in range(100):
+            g = jax.tree.map(lambda x: 2 * x, p)
+            p, st, _ = upd(g, st, p, jnp.int32(i))
+        assert sum(float(jnp.abs(l).sum()) for l in jax.tree.leaves(p)) < 1.0
+
+    @pytest.mark.parametrize("name", ["adamw", "adafactor"])
+    def test_tuple_bearing_tree_structure_preserved(self, name):
+        """Regression: params trees contain tuples (period stacks)."""
+        init, upd = make_optimizer(name, 0.1)
+        p = {"period": ({"w": jnp.ones((2, 3))}, {"w": jnp.ones((4,))})}
+        st = init(p)
+        g = jax.tree.map(jnp.ones_like, p)
+        p2, st2, _ = upd(g, st, p, jnp.int32(0))
+        assert jax.tree.structure(p2) == jax.tree.structure(p)
+        assert isinstance(p2["period"], tuple) and len(p2["period"]) == 2
+
+    def test_schedules(self):
+        lr = cosine_warmup(1.0, 10, 100)
+        assert float(lr(jnp.int32(0))) < 0.2
+        assert float(lr(jnp.int32(10))) == pytest.approx(1.0, abs=0.1)
+        assert float(lr(jnp.int32(99))) < 0.2
+        wu = linear_warmup(2.0, 4)
+        assert float(wu(jnp.int32(100))) == 2.0
+
+
+class TestData:
+    def test_batches_deterministic_fn_of_step(self):
+        p1 = make_pipeline(100, 8, 16, seed=3)
+        p2 = make_pipeline(100, 8, 16, seed=3)
+        for _ in range(3):
+            next(p1)
+        p2.load_state_dict(p1.state_dict())
+        assert np.array_equal(next(p1)["tokens"], next(p2)["tokens"])
+
+    def test_hosts_get_disjoint_rows(self):
+        a = make_pipeline(100, 8, 16, n_hosts=2, host_id=0)
+        b = make_pipeline(100, 8, 16, n_hosts=2, host_id=1)
+        assert not np.array_equal(next(a)["tokens"], next(b)["tokens"])
+        assert a.rows == 4
+
+    def test_prefetch_queue_timeout_surfaces_straggler(self):
+        def slow(i):
+            time.sleep(10)
+            return i
+        q = PrefetchQueue(slow, depth=1, timeout=0.2)
+        with pytest.raises(TimeoutError):
+            q.get()
+        q.stop()
+
+    def test_prefetch_queue_delivers_in_order(self):
+        q = PrefetchQueue(lambda i: i * i, depth=2, timeout=5)
+        assert [q.get() for _ in range(4)] == [0, 1, 4, 9]
+        q.stop()
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_atomicity(self):
+        with tempfile.TemporaryDirectory() as d:
+            tree = {"a": jnp.arange(6).reshape(2, 3),
+                    "b": (jnp.ones(3), {"c": jnp.zeros(2)})}
+            save_checkpoint(d, 3, tree, {"rng": [0, 7]})
+            os.makedirs(os.path.join(d, "step_00000009.tmp"))  # torn write
+            assert latest_step(d) == 3
+            out, extras = restore_checkpoint(d, 3, tree)
+            assert extras == {"rng": [0, 7]}
+            for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(out)):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_async_and_gc(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = AsyncCheckpointer(d, keep=2)
+            tree = {"w": jnp.ones(4)}
+            for s in (1, 2, 3, 4):
+                ck.save(s, tree)
+            ck.wait()
+            steps = sorted(int(x.split("_")[1]) for x in os.listdir(d))
+            assert steps == [3, 4]
+
+    def test_restore_with_resharding(self):
+        with tempfile.TemporaryDirectory() as d:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            mesh = jax.make_mesh((1,), ("data",))
+            tree = {"w": jnp.arange(8.0)}
+            save_checkpoint(d, 1, tree)
+            sh = {"w": NamedSharding(mesh, P("data"))}
+            out, _ = restore_checkpoint(d, 1, tree, shardings=sh)
+            assert out["w"].sharding == sh["w"]
+
+
+class TestRuntime:
+    def test_watchdog_fires_and_recovers(self):
+        fired = []
+        w = Watchdog(0.15, on_stall=lambda: fired.append(1)).start()
+        time.sleep(0.4)
+        w.beat()
+        assert fired and w.stalled
+        w.stop()
+
+    def test_straggler_monitor(self):
+        m = StepTimeMonitor(warmup=2)
+        flags = [m.record(dt) for dt in [1.0] * 8 + [5.0] + [1.0] * 3]
+        assert flags[8] is True and sum(flags) == 1
+        assert m.summary()["straggler_steps"] == 1
+        assert m.ewma == pytest.approx(1.0, abs=0.01)
+
+    def test_error_feedback_unbiased_over_time(self):
+        g = jax.random.normal(jax.random.PRNGKey(0), (256,))
+        err = jnp.zeros(256)
+        acc = jnp.zeros(256)
+        for _ in range(30):
+            q, s, err = compress_int8(g, err)
+            acc = acc + decompress_int8(q, s)
+        rel = float(jnp.linalg.norm(acc - 30 * g) / jnp.linalg.norm(30 * g))
+        assert rel < 1e-2
+
+    def test_run_with_restarts_bit_exact(self):
+        saved = {}
+        fails = {3: True, 7: True}
+
+        def mk():
+            return {"x": np.float64(0)}
+
+        def step(s, i):
+            if fails.pop(i, False):
+                raise RuntimeError("preempted")
+            return {"x": s["x"] + np.sin(i)}
+
+        def sv(s, i):
+            saved["ck"] = (dict(s), i)
+
+        def rs():
+            return (dict(saved["ck"][0]), saved["ck"][1]) if saved else None
+
+        state, restarts = run_with_restarts(mk, step, sv, rs, 12, 2)
+        assert restarts == 2
+        assert state["x"] == pytest.approx(sum(np.sin(i) for i in range(12)))
+
+    def test_run_with_restarts_gives_up(self):
+        def bad(s, i):
+            raise RuntimeError("dead node")
+        with pytest.raises(RuntimeError):
+            run_with_restarts(lambda: {}, bad, lambda s, i: None,
+                              lambda: None, 5, 1, max_restarts=2)

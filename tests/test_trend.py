@@ -1,0 +1,73 @@
+"""Boyer-Moore majority vote + FINDTREND: properties and paper example."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.history import AccessHistory
+from repro.core.trend import boyer_moore, find_trend, find_trend_jax
+from repro.core.history import init_history, push_history
+
+
+# -- boyer_moore ------------------------------------------------------------
+@given(st.lists(st.integers(-50, 50), min_size=1, max_size=64))
+def test_boyer_moore_matches_counting_oracle(values):
+    cand, found = boyer_moore(values)
+    arr = np.asarray(values)
+    counts = {v: int((arr == v).sum()) for v in set(values)}
+    true_majority = [v for v, c in counts.items() if c >= len(values) // 2 + 1]
+    if true_majority:
+        assert found and cand == true_majority[0]
+    else:
+        assert not found
+
+
+def test_boyer_moore_empty():
+    assert boyer_moore([]) == (0, False)
+
+
+# -- FINDTREND (paper §3.2.1 worked example, Fig. 5) --------------------------
+PAPER_TRACE = [0x48, 0x45, 0x42, 0x3F, 0x3C, 0x02, 0x04, 0x06, 0x08,
+               0x0A, 0x0C, 0x10, 0x39, 0x12, 0x14, 0x16]
+
+
+def test_paper_example_fig5():
+    """H=8, N_split=2: trend -3 at t3; none at t7; +2 at t8; +2 at t15."""
+    h = AccessHistory(8)
+    results = {}
+    for i, page in enumerate(PAPER_TRACE):
+        h.push(page)
+        results[i] = find_trend(h, n_split=2)
+    assert results[3] == (-3, True)          # Fig. 5a
+    assert results[7][1] is False            # Fig. 5b: no majority
+    assert results[8] == (2, True)           # Fig. 5c: adapts to +2
+    assert results[15] == (2, True)          # Fig. 5d: ignores t12/t13 noise
+
+
+def test_trend_tolerates_irregularities():
+    """A window of w detects a trend with up to floor(w/2)-1 outliers."""
+    h = AccessHistory(8)
+    pages = [0, 3, 6, 100, 9, 12, 15]        # one outlier in +3 run
+    for p in pages:
+        h.push(p)
+    delta, found = find_trend(h, n_split=2)
+    # within window 4 (newest-first): deltas 3,3,-91?,... -> majority +3
+    assert found and delta == 3
+
+
+# -- JAX twin equivalence ------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 1 << 16), min_size=2, max_size=40),
+       st.sampled_from([2, 4, 8]))
+def test_find_trend_jax_equals_numpy(pages, n_split):
+    h = AccessHistory(16)
+    state = init_history(16)
+    import jax.numpy as jnp
+    for p in pages:
+        h.push(p)
+        state, _ = push_history(state, jnp.int32(p))
+    ref = find_trend(h, n_split)
+    jx = find_trend_jax(state, n_split)
+    assert ref[1] == bool(jx[1])
+    if ref[1]:
+        assert ref[0] == int(jx[0])

@@ -1,0 +1,73 @@
+"""AccessHistory ring buffer + adaptive prefetch window (Alg. 2) properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.history import AccessHistory
+from repro.core.window import PrefetchWindow, round_up_pow2, _round_up_pow2_jax
+
+
+@given(st.lists(st.integers(0, 1 << 20), min_size=1, max_size=100))
+def test_history_window_returns_newest_first(pages):
+    h = AccessHistory(16)
+    deltas = []
+    last = None
+    for p in pages:
+        deltas.append(0 if last is None else p - last)
+        last = p
+        h.push(p)
+    got = h.window(min(16, len(pages)))
+    expect = list(reversed(deltas))[: min(16, len(pages))]
+    assert list(got) == expect
+
+
+def test_history_requires_pow2():
+    with pytest.raises(ValueError):
+        AccessHistory(12)
+
+
+@given(st.integers(1, 1 << 20))
+def test_round_up_pow2(x):
+    p = round_up_pow2(x)
+    assert p >= x and p < 2 * x or (x == 1 and p == 1)
+    assert p & (p - 1) == 0
+    import jax.numpy as jnp
+    assert int(_round_up_pow2_jax(jnp.int32(x))) == p
+
+
+class TestPrefetchWindow:
+    def test_grows_with_hits_capped(self):
+        w = PrefetchWindow(pw_max=8)
+        for hits in (1, 3, 9, 20):
+            for _ in range(hits):
+                w.note_prefetch_hit()
+            pw = w.next_size(follows_trend=True)
+            assert pw == min(round_up_pow2(hits + 1), 8)
+
+    def test_zero_hits_follows_trend_keeps_minimum(self):
+        w = PrefetchWindow(pw_max=8)
+        assert w.next_size(follows_trend=True) == 1
+
+    def test_zero_hits_off_trend_suspends(self):
+        w = PrefetchWindow(pw_max=8)
+        assert w.next_size(follows_trend=False) == 0
+
+    def test_smooth_shrink(self):
+        """Alg. 2 line 13-14: never collapse below half the previous window."""
+        w = PrefetchWindow(pw_max=8)
+        for _ in range(10):
+            w.note_prefetch_hit()
+        assert w.next_size(True) == 8
+        w.note_prefetch_hit()          # only 1 hit -> would be 2, floor 4
+        assert w.next_size(True) == 4
+
+    @given(st.lists(st.tuples(st.integers(0, 12), st.booleans()),
+                    min_size=1, max_size=50))
+    def test_window_bounded(self, events):
+        w = PrefetchWindow(pw_max=8)
+        for hits, follows in events:
+            for _ in range(hits):
+                w.note_prefetch_hit()
+            pw = w.next_size(follows)
+            assert 0 <= pw <= 8
