@@ -11,9 +11,9 @@ import argparse
 import sys
 import time
 
-from . import (fig2_microbenchmark, fig3_patterns, fig8_slow_storage,
-               fig9_10_prefetchers, fig11_apps, fig12_cache_size,
-               fig13_multiapp, jax_stream, roofline)
+from . import (fabric_scale, fig2_microbenchmark, fig3_patterns,
+               fig8_slow_storage, fig9_10_prefetchers, fig11_apps,
+               fig12_cache_size, fig13_multiapp, jax_stream, roofline)
 from .common import fmt_table
 
 SUITES = {
@@ -24,6 +24,7 @@ SUITES = {
     "fig11": fig11_apps.run,
     "fig12": fig12_cache_size.run,
     "fig13": fig13_multiapp.run,
+    "fabric_scale": fabric_scale.run,
     "jax_stream": jax_stream.run,
     "roofline": roofline.run,
 }

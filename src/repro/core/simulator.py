@@ -11,11 +11,16 @@ constants are taken from the paper's own measurements (Fig. 1/2):
 * cache hit               ≈ 0.8 µs  ("almost memory-speed")
 
 plus TPU-flavored presets where the "fabric" is ICI/DCN and a page is a KV
-block (see DESIGN.md §2). Bandwidth contention is modeled with a single
-busy-until FIFO link per stream: prefetches are asynchronous but serialize
-on the link, so over-aggressive policies delay demand fetches — the paper's
+block (see DESIGN.md §2). Prefetches are asynchronous but serialize on the
+fabric link, so over-aggressive policies delay demand fetches — the paper's
 "wasted I/O bandwidth" effect. An access to a still-in-flight page blocks
 only for the residual transfer (partial hit), like Linux's swap cache.
+
+``simulate`` runs one stream over the multi-tenant fabric engine
+(``repro.fabric``, DESIGN.md §3) on a width-1 FIFO link; the original
+sequential loop is retained as ``simulate_legacy``, the semantic reference
+the engine is tested against. Multi-stream contention scenarios build a
+``FabricScenario`` and call ``repro.fabric.run_fabric`` instead.
 """
 
 from __future__ import annotations
@@ -82,7 +87,27 @@ class SimResult:
 def simulate(trace, prefetcher: Prefetcher, cache: PageCache,
              model: LatencyModel | str = "rdma_lean",
              think_time: float = 0.0, seed: int = 0) -> SimResult:
-    """Replay ``trace`` through ``prefetcher`` + ``cache`` under ``model``."""
+    """Replay ``trace`` through ``prefetcher`` + ``cache`` under ``model``.
+
+    Thin wrapper over the multi-tenant fabric engine (``repro.fabric``):
+    one tenant on a width-1 FIFO link, which reproduces the legacy loop
+    (kept below as :func:`simulate_legacy`) operation-for-operation —
+    pinned by ``tests/test_fabric.py``. Multi-stream contention scenarios
+    should build a ``FabricScenario`` and call ``repro.fabric.run_fabric``.
+    """
+    from ..fabric.sim import run_single_stream
+    return run_single_stream(trace, prefetcher, cache, model=model,
+                             think_time=think_time, seed=seed)
+
+
+def simulate_legacy(trace, prefetcher: Prefetcher, cache: PageCache,
+                    model: LatencyModel | str = "rdma_lean",
+                    think_time: float = 0.0, seed: int = 0) -> SimResult:
+    """Reference implementation: the original strictly sequential loop.
+
+    Retained as the semantic spec the fabric engine's single-tenant path
+    is tested against (hit rate / coverage / completion-time equivalence).
+    """
     if isinstance(model, str):
         model = LATENCY_MODELS[model]
     rng = np.random.default_rng(seed)

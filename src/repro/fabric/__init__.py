@@ -1,0 +1,29 @@
+"""Multi-tenant remote-memory fabric: discrete-event simulation subsystem.
+
+Models N concurrent tenant streams (each with an isolated prefetcher +
+page cache + arrival process) contending for a shared remote-memory
+fabric with configurable queue-pair counts and bandwidth-arbitration
+policies — the shared data path of paper §4.1/§4.4 and Fig. 13.
+
+Layout (see DESIGN.md §3):
+
+* :mod:`engine`  — event heap + virtual clock, deterministic tie-breaking.
+* :mod:`link`    — fabric links/tiers, queue pairs, arbitration policies.
+* :mod:`tenants` — per-tenant specs + runtime (think time, bursts, churn).
+* :mod:`metrics` — per-tenant tail latency, fairness, link utilization.
+* :mod:`sim`     — scenario runner; also backs ``repro.core.simulate``.
+"""
+
+from .engine import EventEngine
+from .link import ARBITRATIONS, FabricLink, Request
+from .metrics import (FabricReport, TenantReport, jain_index,
+                      percentile_summary, slowdowns)
+from .sim import FabricScenario, run_fabric, run_single_stream
+from .tenants import Tenant, TenantSpec
+
+__all__ = [
+    "ARBITRATIONS", "EventEngine", "FabricLink", "FabricReport",
+    "FabricScenario", "Request", "Tenant", "TenantReport", "TenantSpec",
+    "jain_index", "percentile_summary", "run_fabric", "run_single_stream",
+    "slowdowns",
+]

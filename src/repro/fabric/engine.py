@@ -1,0 +1,74 @@
+"""Discrete-event engine: event heap, virtual clock, deterministic ties.
+
+The engine is a plain binary heap of ``(time, rank, seq, callback)``
+entries plus a virtual clock. Determinism has two layers:
+
+* ``seq`` — a monotone insertion counter — breaks exact ``(time, rank)``
+  ties, so a replay of the same scenario is bit-identical.
+* ``rank`` orders *simultaneous events of different actors*. The fabric
+  assigns each tenant a rank drawn from a seed-derived permutation
+  (:meth:`EventEngine.actor_ranks`), so "who goes first when two tenants
+  fault at the same instant" is a function of the scenario seed rather
+  than of tenant construction order. Re-seeding reshuffles ties without
+  touching anything else (DESIGN.md §3.1).
+
+The engine knows nothing about tenants or links; it only runs callbacks.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+
+import numpy as np
+
+
+class EventEngine:
+    """Virtual-time event loop with seeded tie-breaking."""
+
+    def __init__(self, seed: int = 0):
+        self.seed = int(seed)
+        self.now = 0.0
+        self.events_run = 0
+        self.rng = np.random.default_rng(self.seed)
+        self._heap: list[tuple[float, int, int, object]] = []
+        self._seq = itertools.count()
+
+    # -- scheduling ---------------------------------------------------------
+    def schedule_at(self, t: float, fn, rank: int = 0) -> None:
+        """Run ``fn()`` at virtual time ``t`` (must not be in the past)."""
+        t = float(t)
+        if t < self.now:
+            raise ValueError(f"cannot schedule at {t} < now {self.now}")
+        heapq.heappush(self._heap, (t, int(rank), next(self._seq), fn))
+
+    def schedule(self, delay: float, fn, rank: int = 0) -> None:
+        """Run ``fn()`` after ``delay`` time units."""
+        self.schedule_at(self.now + float(delay), fn, rank)
+
+    def actor_ranks(self, n: int) -> list[int]:
+        """Seed-derived permutation of ``range(n)`` used as tie ranks."""
+        return [int(r) for r in self.rng.permutation(int(n))]
+
+    # -- execution ----------------------------------------------------------
+    def run(self, until: float | None = None) -> float:
+        """Drain the heap (optionally stopping at ``until``); returns now.
+
+        When ``until`` is given, the clock advances to it afterwards —
+        safe because every event left in the heap is later than it, so
+        virtual time stays monotone across successive ``run`` calls.
+        """
+        while self._heap:
+            t, rank, seq, fn = self._heap[0]
+            if until is not None and t > until:
+                break
+            heapq.heappop(self._heap)
+            self.now = t
+            self.events_run += 1
+            fn()
+        if until is not None and until > self.now:
+            self.now = until
+        return self.now
+
+    def __len__(self) -> int:
+        return len(self._heap)

@@ -1,0 +1,147 @@
+"""Fabric links: queue pairs, bandwidth arbitration, heterogeneous tiers.
+
+A :class:`FabricLink` models one transfer substrate (an RDMA NIC, a disk
+queue, an ICI hop): ``width`` parallel channels, each moving one page in
+``request.t_xfer`` µs, fed from queue pairs under an arbitration policy:
+
+* ``"fifo"`` — the shared-data-path baseline (paper §2.3/Fig. 13): one
+  queue pair, strict arrival order across *all* tenants and request
+  kinds. A tenant's prefetch burst head-of-line blocks every other
+  tenant's demand fetch — exactly the interference Leap §4.4 removes.
+* ``"per_tenant_qp"`` — Leap's lean path: each tenant registers its own
+  queue pair (or shares one modulo ``n_qps``); channels round-robin over
+  non-empty QPs, and within a QP *demand* fetches go before *prefetch*
+  fills (the async prefetch queues of §4.4: prefetches consume spare
+  bandwidth but never sit in front of a faulting process).
+
+Heterogeneous tiers (mixed disk + RDMA deployments) are modeled by
+instantiating one link per tier and routing each tenant to the tier its
+latency model names — see ``sim.run_fabric``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+ARBITRATIONS = ("fifo", "per_tenant_qp")
+
+
+@dataclasses.dataclass
+class Request:
+    """One page transfer over the fabric."""
+
+    tenant: str                 # tenant name (QP routing key)
+    page: int
+    kind: str                   # "demand" | "prefetch"
+    t_xfer: float               # channel occupancy (µs)
+    on_complete: object         # callback(t_done)
+    t_submit: float = 0.0
+    t_start: float = -1.0
+    t_done: float = -1.0
+
+    @property
+    def queue_wait(self) -> float:
+        return self.t_start - self.t_submit
+
+
+class _QueuePair:
+    """Two sub-queues: demand fetches are served before prefetch fills."""
+
+    __slots__ = ("demand", "prefetch")
+
+    def __init__(self):
+        self.demand: deque[Request] = deque()
+        self.prefetch: deque[Request] = deque()
+
+    def push(self, req: Request) -> None:
+        (self.demand if req.kind == "demand" else self.prefetch).append(req)
+
+    def pop(self) -> Request:
+        return self.demand.popleft() if self.demand else self.prefetch.popleft()
+
+    def __len__(self) -> int:
+        return len(self.demand) + len(self.prefetch)
+
+
+class FabricLink:
+    """One fabric tier: ``width`` channels + QPs under an arbitration policy."""
+
+    def __init__(self, engine, name: str = "rdma", width: int = 1,
+                 arbitration: str = "fifo", n_qps: int | None = None):
+        if arbitration not in ARBITRATIONS:
+            raise ValueError(
+                f"arbitration must be one of {ARBITRATIONS}, got {arbitration!r}")
+        self.engine = engine
+        self.name = name
+        self.width = int(width)
+        self.arbitration = arbitration
+        self.n_qps = n_qps              # None: one QP per registered tenant
+        self._fifo: deque[Request] = deque()          # fifo mode
+        self._qps: list[_QueuePair] = []              # per_tenant_qp mode
+        self._qp_of: dict[str, int] = {}
+        self._rr = 0                    # round-robin pointer over QPs
+        self.busy = 0                   # channels currently transferring
+        self.busy_time = 0.0            # sum of completed transfer durations
+        self.completed = 0
+        self.queue_waits: list[float] = []
+
+    # -- tenant registration (per_tenant_qp) --------------------------------
+    def register_tenant(self, tenant: str) -> int:
+        """Assign ``tenant`` a queue pair; QPs are shared modulo ``n_qps``."""
+        if tenant in self._qp_of:
+            return self._qp_of[tenant]
+        if self.n_qps is None:
+            qp = len(self._qps)
+            self._qps.append(_QueuePair())
+        else:
+            qp = len(self._qp_of) % int(self.n_qps)
+            while len(self._qps) <= qp:
+                self._qps.append(_QueuePair())
+        self._qp_of[tenant] = qp
+        return qp
+
+    # -- submission / service ------------------------------------------------
+    def submit(self, req: Request) -> None:
+        req.t_submit = self.engine.now
+        if self.arbitration == "fifo":
+            self._fifo.append(req)
+        else:
+            self._qps[self._qp_of[req.tenant]].push(req)
+        self._maybe_start()
+
+    def _next_request(self) -> Request | None:
+        if self.arbitration == "fifo":
+            return self._fifo.popleft() if self._fifo else None
+        n = len(self._qps)
+        for k in range(n):
+            qp = self._qps[(self._rr + k) % n]
+            if qp:
+                self._rr = (self._rr + k + 1) % n     # rotate past served QP
+                return qp.pop()
+        return None
+
+    def _maybe_start(self) -> None:
+        while self.busy < self.width:
+            req = self._next_request()
+            if req is None:
+                return
+            req.t_start = self.engine.now
+            self.busy += 1
+            self.engine.schedule(req.t_xfer, lambda r=req: self._complete(r))
+
+    def _complete(self, req: Request) -> None:
+        req.t_done = self.engine.now
+        self.busy -= 1
+        self.busy_time += req.t_xfer
+        self.completed += 1
+        self.queue_waits.append(req.queue_wait)
+        self._maybe_start()
+        req.on_complete(req.t_done)
+
+    # -- reporting -----------------------------------------------------------
+    def utilization(self, horizon: float) -> float:
+        """Fraction of channel-time spent transferring over ``horizon``."""
+        if horizon <= 0:
+            return 0.0
+        return self.busy_time / (self.width * horizon)

@@ -1,0 +1,122 @@
+"""Fabric metrics: per-tenant tails, fairness/slowdown, link utilization.
+
+Multi-tenant quality is about *distributions*, not means: the paper's
+Fig. 13 argument is that per-application isolation keeps one tenant's
+prefetch storm out of another tenant's p99. So the per-tenant report
+carries the full percentile ladder (p50/p90/p99/p99.9), and fabric-level
+summaries add Jain's fairness index and per-tenant slowdown vs. a solo
+(uncontended) run of the same tenant.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def percentile_summary(latencies) -> dict:
+    """p50/p90/p99/p99.9 + avg/max of a latency sample (µs)."""
+    qs = (50, 90, 99, 99.9)
+    if latencies is None or len(latencies) == 0:
+        return {f"p{q:g}": 0.0 for q in qs} | {"avg": 0.0, "max": 0.0}
+    arr = np.asarray(latencies, dtype=np.float64)
+    out = {f"p{q:g}": float(np.percentile(arr, q)) for q in qs}
+    out["avg"] = float(arr.mean())
+    out["max"] = float(arr.max())
+    return out
+
+
+def jain_index(values) -> float:
+    """Jain's fairness index: 1.0 = perfectly fair, 1/n = one hog."""
+    arr = np.asarray(list(values), dtype=np.float64)
+    if arr.size == 0 or not np.any(arr):
+        return 1.0
+    return float(arr.sum() ** 2 / (arr.size * (arr ** 2).sum()))
+
+
+def slowdowns(report: "FabricReport", solo: dict) -> dict:
+    """Per-tenant slowdown = contended completion / solo completion.
+
+    ``solo`` maps tenant name -> solo completion time (same spec run
+    alone on the fabric). 1.0 = no interference; 2.0 = took twice as long.
+    """
+    out = {}
+    for t in report.tenants:
+        base = solo.get(t.name)
+        if base:
+            out[t.name] = t.completion_time / base
+    return out
+
+
+@dataclasses.dataclass
+class TenantReport:
+    name: str
+    faults: int
+    cache_hits: int
+    misses: int
+    prefetch_hits: int
+    completion_time: float          # last access done (incl. trailing gap), µs
+    latency: dict                   # percentile_summary of per-fault latency
+
+    @property
+    def hit_rate(self) -> float:
+        return self.cache_hits / self.faults if self.faults else 0.0
+
+    @property
+    def coverage(self) -> float:
+        return self.prefetch_hits / self.faults if self.faults else 0.0
+
+    @property
+    def throughput(self) -> float:
+        """Faults served per µs — the fairness-index input."""
+        return self.faults / self.completion_time if self.completion_time else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "tenant": self.name, "faults": self.faults,
+            "hit_rate": round(self.hit_rate, 4),
+            "coverage": round(self.coverage, 4),
+            "completion_us": round(self.completion_time, 1),
+            "p50": round(self.latency["p50"], 2),
+            "p99": round(self.latency["p99"], 2),
+            "p99.9": round(self.latency["p99.9"], 2),
+        }
+
+
+@dataclasses.dataclass
+class FabricReport:
+    tenants: list[TenantReport]
+    makespan: float                 # max tenant completion time (µs)
+    link_stats: dict                # tier -> {busy_time, utilization, completed}
+    seed: int
+
+    def tenant(self, name: str) -> TenantReport:
+        for t in self.tenants:
+            if t.name == name:
+                return t
+        raise KeyError(name)
+
+    @property
+    def fairness(self) -> float:
+        """Jain index over per-tenant throughputs under contention."""
+        return jain_index([t.throughput for t in self.tenants])
+
+    def worst_p99(self) -> float:
+        return max((t.latency["p99"] for t in self.tenants), default=0.0)
+
+    def mean_p99(self) -> float:
+        ps = [t.latency["p99"] for t in self.tenants]
+        return float(np.mean(ps)) if ps else 0.0
+
+    def summary(self) -> dict:
+        return {
+            "tenants": len(self.tenants),
+            "makespan_us": round(self.makespan, 1),
+            "worst_p99": round(self.worst_p99(), 2),
+            "mean_p99": round(self.mean_p99(), 2),
+            "fairness": round(self.fairness, 4),
+            "link": {k: {kk: round(vv, 4) if isinstance(vv, float) else vv
+                         for kk, vv in v.items()}
+                     for k, v in self.link_stats.items()},
+        }

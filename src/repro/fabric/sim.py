@@ -1,0 +1,289 @@
+"""Fabric scenario runner: N tenants, shared links, one event loop.
+
+Per-access semantics are the legacy single-stream simulator's, lifted
+into discrete events so that streams genuinely contend (DESIGN.md §3.2):
+
+* A fault looks up the tenant's cache at the moment it happens. A hit
+  costs ``t_hit``; a page whose transfer is still in flight *defers* the
+  access to the transfer-completion event (the swap-cache partial-hit:
+  the fault blocks only on the residual transfer time).
+* A miss draws its data-path cost, inserts the demand fill, submits a
+  transfer to the tenant's fabric tier, and resumes the tenant
+  ``datapath + (t_fabric − t_xfer) + alloc-stall`` after the transfer
+  completes.
+* The policy reacts to every fault (§4.1 tracker semantics); accepted
+  prefetch candidates are submitted as *async* transfers the tenant does
+  not wait on. They occupy link bandwidth — under ``"fifo"`` arbitration
+  they head-of-line block other tenants, under ``"per_tenant_qp"`` they
+  only ever sit behind their own tenant's traffic.
+
+A single tenant on a width-1 FIFO link reproduces the legacy
+``simulate()`` loop operation-for-operation (same rng stream, same cache
+call order), which is what lets ``repro.core.simulate`` be a thin
+wrapper over this engine — pinned by ``tests/test_fabric.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from ..core.cache import PageCache
+from ..core.prefetcher import make_prefetcher
+from .engine import EventEngine
+from .link import FabricLink, Request
+from .metrics import FabricReport, TenantReport, percentile_summary
+from .tenants import Tenant, TenantSpec, tier_of
+
+_PENDING = math.inf     # ready_t of an entry whose transfer is in flight
+
+
+class _Transfer:
+    """In-flight tracked cache fill: entry identity + deferred accesses."""
+
+    __slots__ = ("entry", "waiters")
+
+    def __init__(self, entry):
+        self.entry = entry
+        self.waiters: list = []
+
+
+@dataclasses.dataclass
+class FabricScenario:
+    """Declarative description of one multi-tenant run.
+
+    ``data_path="isolated"`` gives every tenant its own tracker + cache +
+    queue pair (Leap §4.1/§4.4); ``"shared"`` funnels all tenants through
+    one communal prefetcher + cache + FIFO link under one latency model
+    (the stock kernel swap path of Fig. 13's baseline).
+    """
+
+    tenants: list
+    data_path: str = "isolated"          # "isolated" | "shared"
+    arbitration: str | None = None       # default: per data_path
+    link_width: int = 1
+    n_qps: int | None = None             # per_tenant_qp: QPs shared modulo this
+    shared_policy: str = "read_ahead"
+    shared_policy_kwargs: dict = dataclasses.field(default_factory=dict)
+    shared_cache_capacity: int = 512
+    shared_eviction: str = "lru"
+    shared_model: object = "rdma_block"
+    seed: int = 0
+
+
+def _resolve_model(model):
+    from ..core.simulator import LATENCY_MODELS
+    return LATENCY_MODELS[model] if isinstance(model, str) else model
+
+
+class _FabricSim:
+    """Event handlers wiring tenants, caches and links together."""
+
+    def __init__(self, engine: EventEngine):
+        self.engine = engine
+        self.links: dict[str, FabricLink] = {}
+        # (cache id, page) -> _Transfer for every *tracked* in-flight fill
+        self.inflight: dict[tuple[int, int], _Transfer] = {}
+
+    def start_tenant(self, ten: Tenant) -> None:
+        t0 = float(ten.spec.start_time)
+        self.engine.schedule_at(t0, lambda: self._access(ten, t0),
+                                rank=ten.rank)
+
+    # -- fault path ----------------------------------------------------------
+    def _access(self, ten: Tenant, t_start: float) -> None:
+        if ten.finished:
+            ten.done_time = self.engine.now
+            return
+        page = ten.current_page()
+        cache = ten.cache
+        key = (id(cache), page)
+        rec = self.inflight.get(key)
+        if rec is not None and cache.entries.get(page) is rec.entry:
+            rec.waiters.append((ten, t_start))   # block on residual transfer
+            return
+        stats = cache.stats
+        stats.faults += 1
+        ten.faults += 1
+        # cache ops are stamped with the fault's *start* time: a deferred
+        # access (in-flight page) logically faulted at t_start and blocked
+        # on the residual transfer, exactly like the legacy loop's partial
+        # hit — lookup's wait term then covers the whole deferral
+        hit, pf_hit, wait = cache.lookup(page, t_start)
+        if hit:
+            stats.cache_hits += 1
+            ten.cache_hits += 1
+            if pf_hit:
+                ten.prefetch_hits += 1
+            latency = ten.model.t_hit + wait
+            self._issue_prefetches(ten, page, pf_hit, t_start)
+            self._finish_access(ten, t_start, latency)
+            return
+        stats.misses += 1
+        ten.misses += 1
+        stall = cache.insert_demand(page, t_start, _PENDING)
+        dp = ten.model.datapath_cost(ten.rng)
+        entry = cache.entries.get(page)          # tracked only under LRU
+        drec = None
+        if entry is not None:
+            drec = _Transfer(entry)
+            self.inflight[key] = drec
+        self.links[ten.tier].submit(Request(
+            ten.name, page, "demand", ten.model.t_xfer,
+            lambda t_done, ten=ten, page=page, key=key, drec=drec,
+            t_start=t_start, dp=dp, stall=stall:
+                self._demand_done(ten, page, key, drec, t_start, dp,
+                                  stall, t_done)))
+        self._issue_prefetches(ten, page, False, t_start)
+
+    def _demand_done(self, ten: Tenant, page: int, key, drec, t_start: float,
+                     dp: float, stall: float, t_done: float) -> None:
+        waiters = self._settle(ten.cache, page, key, drec, t_done)
+        m = ten.model
+        latency = (t_done - t_start) + dp + (m.t_fabric - m.t_xfer) \
+            + stall * m.t_scan_unit
+        self._finish_access(ten, t_start, latency)
+        self._wake(waiters)
+
+    def _prefetch_done(self, ten: Tenant, page: int, key, rec,
+                       t_done: float) -> None:
+        self._wake(self._settle(ten.cache, page, key, rec, t_done))
+
+    def _settle(self, cache, page: int, key, rec, t_done: float) -> list:
+        """Patch the entry's arrival time and detach the in-flight record."""
+        if rec is None:
+            return []
+        if cache.entries.get(page) is rec.entry:
+            rec.entry.ready_t = t_done
+        if self.inflight.get(key) is rec:
+            del self.inflight[key]
+        waiters, rec.waiters = rec.waiters, []
+        return waiters
+
+    def _wake(self, waiters: list) -> None:
+        for w_ten, w_start in waiters:
+            self._access(w_ten, w_start)
+
+    def _issue_prefetches(self, ten: Tenant, page: int, pf_hit: bool,
+                          t_fault: float) -> None:
+        cache = ten.cache
+        for cand in ten.prefetcher.on_fault(page, pf_hit):
+            if cand < 0 or cand in cache:
+                continue
+            if not cache.insert_prefetch(cand, t_fault, _PENDING):
+                continue
+            cand = int(cand)
+            key = (id(cache), cand)
+            rec = _Transfer(cache.entries[cand])
+            self.inflight[key] = rec
+            self.links[ten.tier].submit(Request(
+                ten.name, cand, "prefetch", ten.model.t_xfer,
+                lambda t_done, ten=ten, cand=cand, key=key, rec=rec:
+                    self._prefetch_done(ten, cand, key, rec, t_done)))
+
+    def _finish_access(self, ten: Tenant, t_start: float,
+                       latency: float) -> None:
+        ten.latencies.append(latency)
+        ten.cache.stats.latencies.append(latency)
+        ten.advance()
+        resume = t_start + latency + ten.gap_after_access()
+        if ten.finished:
+            ten.done_time = resume
+            return
+        self.engine.schedule_at(resume, lambda: self._access(ten, resume),
+                                rank=ten.rank)
+
+
+# -- entry points -------------------------------------------------------------
+def run_fabric(scenario: FabricScenario) -> FabricReport:
+    """Run a multi-tenant scenario; returns the per-tenant/fabric report."""
+    if scenario.data_path not in ("isolated", "shared"):
+        raise ValueError(f"data_path must be 'isolated' or 'shared', "
+                         f"got {scenario.data_path!r}")
+    engine = EventEngine(scenario.seed)
+    sim = _FabricSim(engine)
+    arb = scenario.arbitration or (
+        "per_tenant_qp" if scenario.data_path == "isolated" else "fifo")
+
+    shared_pf = shared_cache = shared_tier = None
+    if scenario.data_path == "shared":
+        shared_pf = make_prefetcher(scenario.shared_policy,
+                                    **scenario.shared_policy_kwargs)
+        shared_cache = PageCache(scenario.shared_cache_capacity,
+                                 eviction=scenario.shared_eviction)
+        shared_model = _resolve_model(scenario.shared_model)
+        # the communal path is one link on the communal model's tier,
+        # whatever tier the specs would have picked for themselves
+        shared_tier = tier_of(shared_model.name)
+
+    ranks = engine.actor_ranks(len(scenario.tenants))
+    tenants: list[Tenant] = []
+    for i, spec in enumerate(scenario.tenants):
+        if shared_cache is not None:
+            pf, cache, model = shared_pf, shared_cache, shared_model
+        else:
+            pf = make_prefetcher(spec.policy, **spec.policy_kwargs)
+            cache = PageCache(spec.cache_capacity, eviction=spec.eviction)
+            model = _resolve_model(spec.model)
+        rng = np.random.default_rng(
+            spec.seed if spec.seed is not None else [scenario.seed, i])
+        tenants.append(Tenant(spec, pf, cache, model, rng, rank=ranks[i],
+                              shared=shared_cache is not None,
+                              tier=shared_tier))
+
+    for tier in sorted({t.tier for t in tenants}):
+        sim.links[tier] = FabricLink(engine, tier, width=scenario.link_width,
+                                     arbitration=arb, n_qps=scenario.n_qps)
+    for ten in tenants:
+        if arb == "per_tenant_qp":
+            sim.links[ten.tier].register_tenant(ten.name)
+        sim.start_tenant(ten)
+    engine.run()
+
+    for cache in {id(t.cache): t.cache for t in tenants}.values():
+        cache.drain_unconsumed()
+    makespan = max((t.done_time or 0.0 for t in tenants), default=0.0)
+    # async prefetches may still drain after the last tenant finishes;
+    # utilization is over the full busy horizon so it stays <= 1
+    horizon = max(makespan, engine.now)
+    reports = [TenantReport(
+        name=t.name, faults=t.faults, cache_hits=t.cache_hits,
+        misses=t.misses, prefetch_hits=t.prefetch_hits,
+        completion_time=(t.done_time or 0.0) - t.spec.start_time,
+        latency=percentile_summary(t.latencies)) for t in tenants]
+    link_stats = {tier: {"busy_time": link.busy_time,
+                         "utilization": link.utilization(horizon),
+                         "completed": link.completed,
+                         "avg_queue_wait": float(np.mean(link.queue_waits))
+                         if link.queue_waits else 0.0,
+                         "p99_queue_wait": float(np.percentile(
+                             link.queue_waits, 99))
+                         if link.queue_waits else 0.0}
+                  for tier, link in sim.links.items()}
+    return FabricReport(reports, makespan, link_stats, scenario.seed)
+
+
+def run_single_stream(trace, prefetcher, cache, model="rdma_lean",
+                      think_time: float = 0.0, seed: int = 0):
+    """Legacy-compatible single stream on the fabric engine.
+
+    Backs ``repro.core.simulate``: one tenant, width-1 FIFO link, rng
+    seeded exactly as the legacy loop. Returns a ``SimResult``.
+    """
+    from ..core.simulator import SimResult
+    model = _resolve_model(model)
+    engine = EventEngine(seed)
+    sim = _FabricSim(engine)
+    spec = TenantSpec("stream0", trace, model=model, think_time=think_time)
+    ten = Tenant(spec, prefetcher, cache, model,
+                 np.random.default_rng(seed), rank=0)
+    sim.links[ten.tier] = FabricLink(engine, ten.tier, width=1,
+                                     arbitration="fifo")
+    sim.start_tenant(ten)
+    engine.run()
+    cache.drain_unconsumed()
+    return SimResult(prefetcher.name, model.name, cache.stats,
+                     ten.done_time or 0.0, sim.links[ten.tier].busy_time,
+                     cache.scanned_entries)

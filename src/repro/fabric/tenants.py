@@ -1,0 +1,136 @@
+"""Per-tenant state: isolated prefetcher + page cache + arrival process.
+
+A :class:`TenantSpec` declares a tenant (trace, policy, cache, latency
+model, arrival behavior); :class:`Tenant` is its runtime instantiated by
+``sim.run_fabric``. Arrival processes model the workload shapes that
+stress a shared fabric:
+
+* ``"constant"`` — a fixed ``think_time`` between accesses (the legacy
+  single-stream semantics; ``think_time=0`` is a closed loop).
+* ``"bursty"``   — on/off: bursts of ``burst_len`` back-to-back accesses
+  separated by exponential idle gaps of mean ``idle_time`` µs drawn from
+  the tenant's seeded rng. The "noisy neighbor" of Fig. 13.
+* ``"churn"``    — every ``churn_every`` accesses the tenant cold-restarts:
+  its prefetcher state resets and its (isolated) cache is dropped, then
+  it idles ``churn_downtime`` µs — arriving/departing applications.
+
+Tenants on a *shared* data path reference one communal cache+prefetcher,
+so per-tenant effectiveness is tracked here (faults, hits, latencies)
+independently of the communal ``PrefetchStats``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+def tier_of(model_name: str) -> str:
+    """Fabric tier a latency model rides on (single source of the rule).
+
+    Disk models share the "disk" tier, RDMA models the "rdma" tier, and
+    each TPU interconnect is its own substrate ("tpu_ici", "tpu_dcn") —
+    ICI and DCN traffic never contend with RDMA links.
+    """
+    if "disk" in model_name:
+        return "disk"
+    if model_name.startswith("tpu_"):
+        return model_name
+    return "rdma"
+
+
+@dataclasses.dataclass
+class TenantSpec:
+    name: str
+    trace: object                       # sequence of page ids
+    policy: str = "leap"
+    policy_kwargs: dict = dataclasses.field(default_factory=dict)
+    cache_capacity: int = 128
+    eviction: str = "eager"
+    model: object = "rdma_lean"         # LatencyModel or name; names its tier
+    tier: str | None = None             # default: "disk" if model says so
+    think_time: float = 0.0
+    arrival: str = "constant"           # constant | bursty | churn
+    burst_len: int = 64
+    idle_time: float = 200.0            # mean off-period (µs)
+    churn_every: int = 0
+    churn_downtime: float = 500.0
+    start_time: float = 0.0
+    seed: int | None = None             # None: derived from scenario seed
+
+    def resolved_tier(self) -> str:
+        if self.tier is not None:
+            return self.tier
+        return tier_of(self.model if isinstance(self.model, str)
+                       else self.model.name)
+
+
+class Tenant:
+    """Runtime tenant: trace cursor, per-tenant metrics, arrival process.
+
+    ``shared=True`` marks a tenant on the communal data path: its
+    prefetcher and cache are shared infrastructure that churn restarts
+    must not clear. ``tier`` overrides the spec's tier (the shared path
+    routes everyone over the communal model's tier).
+    """
+
+    def __init__(self, spec: TenantSpec, prefetcher, cache, model,
+                 rng: np.random.Generator, rank: int = 0,
+                 shared: bool = False, tier: str | None = None):
+        self.spec = spec
+        self.name = spec.name
+        self.prefetcher = prefetcher
+        self.cache = cache
+        self.model = model
+        self.rng = rng
+        self.rank = rank
+        self.shared = shared
+        self.tier = tier if tier is not None else spec.resolved_tier()
+        self.trace = np.asarray(spec.trace, dtype=np.int64)
+        self.idx = 0
+        # per-tenant effectiveness (valid even when cache/prefetcher shared)
+        self.faults = 0
+        self.cache_hits = 0
+        self.misses = 0
+        self.prefetch_hits = 0
+        self.latencies: list[float] = []
+        self.done_time: float | None = None   # when the next access would start
+
+    # -- trace cursor --------------------------------------------------------
+    @property
+    def finished(self) -> bool:
+        return self.idx >= len(self.trace)
+
+    def current_page(self) -> int:
+        return int(self.trace[self.idx])
+
+    def advance(self) -> None:
+        self.idx += 1
+
+    # -- arrival process -----------------------------------------------------
+    def gap_after_access(self) -> float:
+        """Extra idle time *after* the access just completed (on top of
+        the latency already charged); also flags churn restarts."""
+        gap = self.spec.think_time
+        if self.spec.arrival == "bursty" and self.idx < len(self.trace) \
+                and self.idx % max(1, self.spec.burst_len) == 0:
+            gap += float(self.rng.exponential(self.spec.idle_time))
+        if self.spec.arrival == "churn" and self.spec.churn_every > 0 \
+                and self.idx < len(self.trace) \
+                and self.idx % self.spec.churn_every == 0:
+            self.cold_restart()
+            gap += self.spec.churn_downtime
+        return gap
+
+    def cold_restart(self) -> None:
+        """Drop prefetcher state and cache contents — a tenant departing
+        and re-arriving with nothing warm. On the shared data path the
+        tracker and cache are communal infrastructure serving everyone
+        else, so a churning tenant leaves both alone."""
+        if self.shared:
+            return
+        self.prefetcher.reset()
+        self.cache.drain_unconsumed()
+        self.cache.entries.clear()
+        self.cache.prefetch_fifo.clear()

@@ -1,0 +1,227 @@
+"""Fabric engine invariants: determinism, legacy equivalence, contention."""
+
+import numpy as np
+import pytest
+
+from repro.core import traces
+from repro.core.cache import PageCache
+from repro.core.prefetcher import make_prefetcher
+from repro.core.simulator import simulate, simulate_legacy
+from repro.fabric import (EventEngine, FabricScenario, TenantSpec,
+                          jain_index, percentile_summary, run_fabric,
+                          slowdowns)
+
+
+# -- engine primitives --------------------------------------------------------
+class TestEngine:
+    def test_events_run_in_time_order(self):
+        eng = EventEngine(seed=0)
+        out = []
+        for t in (5.0, 1.0, 3.0):
+            eng.schedule_at(t, lambda t=t: out.append(t))
+        eng.run()
+        assert out == [1.0, 3.0, 5.0] and eng.now == 5.0
+
+    def test_ties_break_by_rank_then_insertion(self):
+        eng = EventEngine(seed=0)
+        out = []
+        eng.schedule_at(1.0, lambda: out.append("b"), rank=1)
+        eng.schedule_at(1.0, lambda: out.append("a"), rank=0)
+        eng.schedule_at(1.0, lambda: out.append("c"), rank=1)
+        eng.run()
+        assert out == ["a", "b", "c"]
+
+    def test_actor_ranks_seeded(self):
+        a = EventEngine(seed=3).actor_ranks(16)
+        b = EventEngine(seed=3).actor_ranks(16)
+        c = EventEngine(seed=4).actor_ranks(16)
+        assert a == b and sorted(a) == list(range(16)) and a != c
+
+    def test_cannot_schedule_in_past(self):
+        eng = EventEngine()
+        eng.schedule_at(2.0, lambda: eng.schedule_at(1.0, lambda: None))
+        with pytest.raises(ValueError):
+            eng.run()
+
+
+# -- single-tenant equivalence with the legacy loop ---------------------------
+@pytest.mark.parametrize("trace_name,policy,model,eviction,think", [
+    ("powergraph", "leap", "rdma_lean", "eager", 0.0),
+    ("voltdb", "read_ahead", "rdma_block", "lru", 3.0),
+    ("sequential", "next_n_line", "disk_block", "lru", 0.0),
+    ("memcached", "stride", "disk_lean", "lru", 1.0),
+    ("interleaved", "none", "rdma_block", "lru", 0.0),
+])
+def test_single_tenant_matches_legacy(trace_name, policy, model, eviction,
+                                      think):
+    tr = traces.TRACES[trace_name](n=2000)
+    ref = simulate_legacy(tr, make_prefetcher(policy),
+                          PageCache(64, eviction=eviction), model, think,
+                          seed=7)
+    fab = simulate(tr, make_prefetcher(policy),
+                   PageCache(64, eviction=eviction), model, think, seed=7)
+    for attr in ("faults", "cache_hits", "misses", "prefetch_issued",
+                 "prefetch_hits", "pollution"):
+        assert getattr(fab.stats, attr) == getattr(ref.stats, attr), attr
+    assert fab.stats.hit_rate == ref.stats.hit_rate
+    assert fab.stats.coverage == ref.stats.coverage
+    assert fab.total_time == pytest.approx(ref.total_time, rel=1e-9)
+    assert fab.link_busy == pytest.approx(ref.link_busy, rel=1e-9)
+    assert fab.scanned_entries == ref.scanned_entries
+    assert np.allclose(fab.stats.latencies, ref.stats.latencies)
+    assert np.allclose(fab.stats.timeliness, ref.stats.timeliness)
+
+
+# -- multi-tenant scenarios ---------------------------------------------------
+def _victim_spec(n=1500):
+    return TenantSpec("victim", traces.sequential(n), policy="leap",
+                      cache_capacity=64, model="rdma_lean")
+
+
+def _noisy_spec(n=1500):
+    return TenantSpec("noisy", traces.random_pages(n, seed=5) + (1 << 40),
+                      policy="next_n_line", policy_kwargs={"n": 8},
+                      cache_capacity=64, eviction="lru", model="rdma_lean",
+                      arrival="bursty", burst_len=64, idle_time=100.0)
+
+
+class TestFabric:
+    def test_deterministic_under_fixed_seed(self):
+        def go():
+            return run_fabric(FabricScenario(
+                [_victim_spec(), _noisy_spec()], data_path="isolated",
+                arbitration="fifo", seed=11))
+        a, b = go(), go()
+        assert a.makespan == b.makespan
+        for ta, tb in zip(a.tenants, b.tenants):
+            assert ta.latency == tb.latency
+            assert ta.completion_time == tb.completion_time
+            assert (ta.faults, ta.cache_hits, ta.prefetch_hits) == \
+                (tb.faults, tb.cache_hits, tb.prefetch_hits)
+
+    def test_noisy_tenant_never_improves_victim_p99_under_fifo(self):
+        """Contention invariant: on the shared-FIFO baseline, adding a
+        noisy neighbor can only delay the victim's fetches."""
+        solo = run_fabric(FabricScenario([_victim_spec()],
+                                         data_path="isolated",
+                                         arbitration="fifo", seed=0))
+        for seed in (0, 1, 2):
+            duo = run_fabric(FabricScenario(
+                [_victim_spec(), _noisy_spec()], data_path="isolated",
+                arbitration="fifo", seed=seed))
+            for q in ("p50", "p99", "p99.9"):
+                assert duo.tenant("victim").latency[q] >= \
+                    solo.tenant("victim").latency[q] - 1e-9, (seed, q)
+            assert duo.tenant("victim").completion_time >= \
+                solo.tenant("victim").completion_time - 1e-9
+
+    def test_per_tenant_qps_protect_victim_tail(self):
+        """Leap §4.4 direction: per-tenant async QPs keep the noisy
+        neighbor's burst out of the victim's p99."""
+        specs = lambda: [_victim_spec(), _noisy_spec()]
+        fifo = run_fabric(FabricScenario(specs(), data_path="isolated",
+                                         arbitration="fifo", seed=0))
+        qp = run_fabric(FabricScenario(specs(), data_path="isolated",
+                                       arbitration="per_tenant_qp", seed=0))
+        assert qp.tenant("victim").latency["p99"] < \
+            fifo.tenant("victim").latency["p99"]
+
+    def test_isolated_beats_shared_data_path(self):
+        """Fig. 13 direction: per-tenant Leap data paths beat the communal
+        read-ahead + LRU + FIFO baseline on completion time and p99."""
+        def specs():
+            return [TenantSpec(a, traces.TRACES[a](n=1200) + (i << 40),
+                               policy="leap", cache_capacity=128,
+                               model="rdma_lean")
+                    for i, a in enumerate(("powergraph", "memcached"))]
+        shared = run_fabric(FabricScenario(
+            specs(), data_path="shared", shared_model="rdma_block"))
+        iso = run_fabric(FabricScenario(specs(), data_path="isolated"))
+        for name in ("powergraph", "memcached"):
+            assert iso.tenant(name).completion_time < \
+                shared.tenant(name).completion_time
+            assert iso.tenant(name).latency["p99"] < \
+                shared.tenant(name).latency["p99"]
+
+    def test_heterogeneous_tiers_served_independently(self):
+        rep = run_fabric(FabricScenario(
+            [TenantSpec("fast", traces.sequential(400), model="rdma_lean"),
+             TenantSpec("slow", traces.sequential(400, start=1 << 30),
+                        model="disk_lean")],
+            data_path="isolated"))
+        assert set(rep.link_stats) == {"rdma", "disk"}
+        assert rep.link_stats["disk"]["busy_time"] > \
+            rep.link_stats["rdma"]["busy_time"]
+
+    def test_bursty_and_churn_arrivals_complete(self):
+        rep = run_fabric(FabricScenario(
+            [TenantSpec("burst", traces.powergraph_like(800),
+                        arrival="bursty", burst_len=32, idle_time=50.0),
+             TenantSpec("churn", traces.sequential(800, start=1 << 30),
+                        arrival="churn", churn_every=200,
+                        churn_downtime=100.0)],
+            data_path="isolated", seed=2))
+        for t in rep.tenants:
+            assert t.faults == 800
+        # churn restarts force cold misses on an otherwise sequential trace
+        assert rep.tenant("churn").misses >= 4
+
+    def test_churn_spares_shared_data_path(self):
+        """A churning tenant must not clear the communal tracker/cache."""
+        from repro.core.simulator import LATENCY_MODELS
+        from repro.fabric.tenants import Tenant
+        pf = make_prefetcher("read_ahead")
+        cache = PageCache(16, eviction="lru")
+        cache.insert_prefetch(1, 0.0, 1.0)
+        pf.window = 8
+        ten = Tenant(TenantSpec("churner", [], arrival="churn",
+                                churn_every=10),
+                     pf, cache, LATENCY_MODELS["rdma_block"],
+                     np.random.default_rng(0), shared=True)
+        ten.cold_restart()
+        assert cache.occupancy == 1 and pf.window == 8
+        ten.shared = False
+        ten.cold_restart()
+        assert cache.occupancy == 0 and pf.window == 0
+
+    def test_shared_path_uses_one_link_on_shared_tier(self):
+        """Shared data path: every tenant routes over the communal
+        model's tier, even if their own specs name other tiers."""
+        rep = run_fabric(FabricScenario(
+            [TenantSpec("a", traces.sequential(200), model="disk_lean"),
+             TenantSpec("b", traces.sequential(200, start=1 << 30),
+                        model="rdma_lean")],
+            data_path="shared", shared_model="rdma_block"))
+        assert set(rep.link_stats) == {"rdma"}
+
+    def test_tenant_start_offsets(self):
+        rep = run_fabric(FabricScenario(
+            [TenantSpec("late", traces.sequential(200), start_time=500.0)],
+            data_path="isolated"))
+        assert rep.makespan >= 500.0
+        assert rep.tenant("late").completion_time < rep.makespan
+
+
+# -- metrics helpers ----------------------------------------------------------
+class TestMetrics:
+    def test_jain_index_bounds(self):
+        assert jain_index([1.0, 1.0, 1.0]) == pytest.approx(1.0)
+        assert jain_index([1.0, 0.0, 0.0, 0.0]) == pytest.approx(0.25)
+        assert jain_index([]) == 1.0
+
+    def test_slowdowns_vs_solo_runs(self):
+        contended = run_fabric(FabricScenario(
+            [_victim_spec(), _noisy_spec()], data_path="isolated",
+            arbitration="fifo", seed=0))
+        solo = {"victim": run_fabric(FabricScenario(
+            [_victim_spec()], data_path="isolated", arbitration="fifo",
+            seed=0)).tenant("victim").completion_time}
+        sd = slowdowns(contended, solo)
+        assert set(sd) == {"victim"}        # no solo baseline for "noisy"
+        assert sd["victim"] >= 1.0          # contention never speeds you up
+
+    def test_percentile_summary_keys(self):
+        s = percentile_summary(list(range(1000)))
+        assert set(s) == {"p50", "p90", "p99", "p99.9", "avg", "max"}
+        assert s["p50"] <= s["p90"] <= s["p99"] <= s["p99.9"] <= s["max"]
+        assert percentile_summary([])["p99"] == 0.0
