@@ -47,15 +47,15 @@ def run() -> tuple[list[dict], dict]:
 
     rows, derived = [], {}
     for a in APPS:
-        b, l = shared.tenant(a), leap.tenant(a)
-        sp = b.completion_time / l.completion_time
+        b, lp = shared.tenant(a), leap.tenant(a)
+        sp = b.completion_time / lp.completion_time
         rows.append({"app": a,
                      "shared_default_ms": round(b.completion_time / 1e3, 1),
-                     "leap_isolated_ms": round(l.completion_time / 1e3, 1),
+                     "leap_isolated_ms": round(lp.completion_time / 1e3, 1),
                      "speedup": round(sp, 2),
                      "shared_p99_us": round(b.latency["p99"], 1),
-                     "leap_p99_us": round(l.latency["p99"], 1),
-                     "coverage": round(l.coverage, 3)})
+                     "leap_p99_us": round(lp.latency["p99"], 1),
+                     "coverage": round(lp.coverage, 3)})
         derived[f"{a}_multiapp_speedup"] = round(sp, 2)
     derived["shared_fairness"] = round(shared.fairness, 3)
     derived["leap_fairness"] = round(leap.fairness, 3)

@@ -8,7 +8,6 @@ improvement on PowerGraph.
 
 from __future__ import annotations
 
-import dataclasses
 
 from repro.core import traces
 from repro.core.cache import PageCache

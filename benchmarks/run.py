@@ -11,9 +11,10 @@ import argparse
 import sys
 import time
 
-from . import (fabric_scale, fig2_microbenchmark, fig3_patterns,
-               fig8_slow_storage, fig9_10_prefetchers, fig11_apps,
-               fig12_cache_size, fig13_multiapp, jax_stream, roofline)
+from . import (datapath_overlap, fabric_scale, fig2_microbenchmark,
+               fig3_patterns, fig8_slow_storage, fig9_10_prefetchers,
+               fig11_apps, fig12_cache_size, fig13_multiapp, jax_stream,
+               roofline)
 from .common import fmt_table
 
 SUITES = {
@@ -26,6 +27,7 @@ SUITES = {
     "fig13": fig13_multiapp.run,
     "fabric_scale": fabric_scale.run,
     "jax_stream": jax_stream.run,
+    "datapath_overlap": datapath_overlap.run,
     "roofline": roofline.run,
 }
 

@@ -66,6 +66,10 @@ class PageCache:
         prefetched_hit = e.prefetched and not e.consumed
         if prefetched_hit:
             self.stats.prefetch_hits += 1
+            if wait > 0.0:
+                # swap-cache partial hit: consumed while still in flight —
+                # the fault blocks on the residual transfer only.
+                self.stats.partial_hits += 1
             self.stats.timeliness.append(max(now, e.ready_t) - e.insert_t)
             self.prefetch_fifo.pop(page, None)
         e.consumed = True
@@ -134,9 +138,21 @@ class PageCache:
                 self._evict_one()
         return stall
 
-    def drain_unconsumed(self) -> None:
-        """End-of-run accounting: unconsumed prefetches count as pollution."""
+    def drain_unconsumed(self, now: float | None = None) -> None:
+        """End-of-run accounting for unconsumed prefetches.
+
+        With ``now`` given, entries whose transfer had not completed by
+        ``now`` (``ready_t > now``) are counted as ``inflight_at_end`` —
+        they are neither useful nor pollution, the run simply ended first.
+        Everything else (landed but never hit) is pollution. Without
+        ``now`` every unconsumed prefetch counts as pollution (legacy
+        accounting, kept for callers without a clock).
+        """
         for page in list(self.prefetch_fifo):
-            self.stats.pollution += 1
+            e = self.entries.get(page)
+            if now is not None and e is not None and e.ready_t > now:
+                self.stats.inflight_at_end += 1
+            else:
+                self.stats.pollution += 1
             self.prefetch_fifo.pop(page)
             self.entries.pop(page, None)

@@ -3,8 +3,12 @@
 * **Accuracy**   = prefetch_hits / prefetch_issued  (useful fraction of cache adds)
 * **Coverage**   = prefetch_hits / total_faults     (faults served by prefetch)
 * **Timeliness** = distribution of (first-hit time − prefetch-issue time)
-* **Pollution**  = prefetched pages evicted (or left) without ever being hit
+* **Pollution**  = prefetched pages evicted (or landed-but-never-hit at end)
 * **Miss count** = faults that found nothing in the cache (major faults)
+* **Partial hits** = prefetched hits whose transfer was still in flight when
+  consumed (swap-cache semantics: the fault blocked on the residual only)
+* **In-flight at end** = prefetches whose transfer had not completed when the
+  run ended — neither useful nor pollution, reported separately
 
 Percentile helpers report the p50/p90/p99/avg shapes the paper's figures use.
 """
@@ -23,7 +27,9 @@ class PrefetchStats:
     misses: int = 0               # faults that missed (major faults)
     prefetch_issued: int = 0      # pages added to cache via prefetch
     prefetch_hits: int = 0        # first hits on prefetched entries
+    partial_hits: int = 0         # subset of prefetch_hits still in flight
     pollution: int = 0            # prefetched entries never hit
+    inflight_at_end: int = 0      # prefetches not yet arrived at end of run
     timeliness: list = dataclasses.field(default_factory=list)
     latencies: list = dataclasses.field(default_factory=list)  # per-fault sim latency
 
@@ -38,6 +44,13 @@ class PrefetchStats:
     @property
     def hit_rate(self) -> float:
         return self.cache_hits / self.faults if self.faults else 0.0
+
+    @property
+    def latency_hidden_frac(self) -> float:
+        """Fraction of consumed prefetches fully arrived before first use."""
+        if not self.prefetch_hits:
+            return 1.0
+        return (self.prefetch_hits - self.partial_hits) / self.prefetch_hits
 
     @property
     def miss_rate(self) -> float:
@@ -66,7 +79,10 @@ class PrefetchStats:
             "coverage": round(self.coverage, 4),
             "prefetch_issued": self.prefetch_issued,
             "prefetch_hits": self.prefetch_hits,
+            "partial_hits": self.partial_hits,
+            "latency_hidden_frac": round(self.latency_hidden_frac, 4),
             "pollution": self.pollution,
+            "inflight_at_end": self.inflight_at_end,
             "latency": self.latency_percentiles(),
             "timeliness": self.timeliness_percentiles(),
         }

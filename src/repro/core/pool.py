@@ -20,6 +20,20 @@ playing local DRAM:
 All ops are fixed-shape and jit/scan-safe. The batch of page requests per call
 is a fixed-size vector with a validity mask (misses = demand fetch, plus up to
 ``PW_max`` prefetch candidates from :mod:`repro.core.leap_jax`).
+
+Two data paths share this metadata (DESIGN.md §4):
+
+* **Synchronous** — :func:`pool_access`: demand page and prefetch candidates
+  are fetched in one blocking batch; every byte lands on the critical path of
+  the step that requested it. This is the legacy read-ahead-style path.
+* **Asynchronous (issue/wait)** — :func:`pool_issue` enqueues candidates into
+  a fixed-shape in-flight ring (:func:`ring_init`) with an *arrival deadline*
+  (a step-clock value); :func:`pool_wait` lands everything whose deadline has
+  passed and services one demand access. A demand access to a page still in
+  the ring is a **partial hit**: it completes the transfer early and is
+  charged only the residual (paper's swap-cache semantics, §4.2). Candidates
+  issued at step *t* with ``delay=1`` land at the top of step *t+1* — the
+  prefetch DMA overlaps the consumer's compute instead of blocking it.
 """
 
 from __future__ import annotations
@@ -34,7 +48,16 @@ NO_SLOT = jnp.int32(-1)
 
 
 def pool_init(n_pages: int, n_slots: int) -> dict:
-    """Metadata state for an ``n_pages`` pool cached by ``n_slots`` hot slots."""
+    """Metadata state for an ``n_pages`` pool cached by ``n_slots`` hot slots.
+
+    Returns a flat dict of fixed-shape int32/bool arrays (jit/scan-safe):
+    ``page_slot int32[n_pages]`` (page -> slot or -1), ``slot_page
+    int32[n_slots]`` (slot -> page or -1), per-slot ``prefetched`` /
+    ``consumed`` flags, the free-slot LIFO stack, the FIFO eviction ring of
+    unconsumed prefetches, and scalar int32 counters. Shared by the sync
+    (:func:`pool_access`) and async (:func:`pool_issue` / :func:`pool_wait`)
+    data paths; ``n_partial_hits`` only ever advances on the async path.
+    """
     return {
         "page_slot": jnp.full((n_pages,), NO_SLOT, jnp.int32),
         "slot_page": jnp.full((n_slots,), NO_PAGE, jnp.int32),
@@ -56,6 +79,35 @@ def pool_init(n_pages: int, n_slots: int) -> dict:
         "n_prefetch_hits": jnp.int32(0),
         "n_pollution": jnp.int32(0),
         "n_alloc_scans": jnp.int32(0),
+        # Async-path only: demand accesses that completed a still-in-flight
+        # prefetch early (swap-cache partial hits, DESIGN.md §4).
+        "n_partial_hits": jnp.int32(0),
+    }
+
+
+def ring_init(capacity: int) -> dict:
+    """In-flight ring for the async issue/wait data path (DESIGN.md §4).
+
+    ``capacity`` is the maximum number of prefetch fetches in flight at once
+    (the depth of the paper's async RDMA queue). Fields:
+
+    * ``page int32[capacity]``: in-flight page ids, ``-1`` = empty entry.
+    * ``deadline int32[capacity]``: step-clock arrival time of each entry;
+      :func:`pool_wait` lands entries with ``deadline <= now``.
+    * ``now int32``: the stream's step clock (owned by the stream layer;
+      pool-level callers pass ``now`` explicitly).
+    * ``n_drops int32``: issues rejected because the ring was full —
+      back-pressure, *not* counted as issued.
+
+    ``capacity == 0`` is the degenerate sync configuration: the stream layer
+    bypasses the ring entirely and the async path pins bit-equivalent to
+    :func:`pool_access` (tested in ``tests/test_paging.py``).
+    """
+    return {
+        "page": jnp.full((capacity,), NO_PAGE, jnp.int32),
+        "deadline": jnp.zeros((capacity,), jnp.int32),
+        "now": jnp.int32(0),
+        "n_drops": jnp.int32(0),
     }
 
 
@@ -130,6 +182,47 @@ def _unmap(st: dict, slot: jax.Array) -> dict:
     return st
 
 
+def _tree_where(cond: jax.Array, on_true: dict, on_false: dict) -> dict:
+    """Select between two structurally identical state dicts elementwise."""
+    return jax.tree.map(lambda b, a: jnp.where(cond, b, a), on_true, on_false)
+
+
+def _alloc_slot(st: dict, lazy: bool) -> tuple[dict, jax.Array]:
+    """Unconditionally produce one free, unmapped slot (stack pop or evict).
+
+    Callers gate the returned state with :func:`_tree_where` when the
+    allocation is conditional.
+    """
+    have_free = st["free_top"] > 0
+    top_slot = st["free_stack"][jnp.maximum(st["free_top"] - 1, 0)]
+    st_ev, victim = _evict_for_alloc(st, lazy)
+    st_ev = _unmap(st_ev, victim)
+    st = _tree_where(~have_free, st_ev, st)
+    slot = jnp.where(have_free, top_slot, victim)
+    st = dict(st)
+    st["free_top"] = jnp.where(have_free, st["free_top"] - 1, st["free_top"])
+    return st, slot
+
+
+def _map_slot(st: dict, slot: jax.Array, page: jax.Array,
+              pref: jax.Array) -> dict:
+    """Map ``page`` into ``slot``; prefetches also enter the FIFO ring.
+
+    Shared by the sync and async fetch paths — the bit-equivalence pin
+    between them rides on this being the single mapping implementation.
+    """
+    st = dict(st)
+    st["page_slot"] = st["page_slot"].at[page].set(slot)
+    st["slot_page"] = st["slot_page"].at[slot].set(page)
+    st["slot_prefetched"] = st["slot_prefetched"].at[slot].set(pref)
+    st["slot_consumed"] = st["slot_consumed"].at[slot].set(~pref)
+    st["slot_last_use"] = st["slot_last_use"].at[slot].set(st["clock"])
+    tail = jnp.mod(st["fifo_head"] + st["fifo_count"], st["fifo"].shape[0])
+    st["fifo"] = jnp.where(pref, st["fifo"].at[tail].set(slot), st["fifo"])
+    st["fifo_count"] = st["fifo_count"] + pref.astype(jnp.int32)
+    return st
+
+
 @functools.partial(jax.jit, static_argnames=("lazy",), donate_argnums=(0, 1))
 def pool_access(st: dict, hot: jax.Array, pool: jax.Array,
                 pages: jax.Array, is_prefetch: jax.Array, valid: jax.Array,
@@ -187,36 +280,14 @@ def pool_access(st: dict, hot: jax.Array, pool: jax.Array,
             un = _unmap(dict(st), s_safe)
             st = jax.tree.map(lambda a, b: jnp.where(was_pref_hit, b, a), st, un)
 
-        # ---- miss path: allocate + copy --------------------------------------
+        # ---- miss path: allocate + map + copy (shared helpers; the sync /
+        # async bit-equivalence pin rides on this code path) -------------------
         need_fetch = req_valid & in_range & ~resident
-        have_free = st["free_top"] > 0
-        # (a) from free stack
-        top_slot = st["free_stack"][jnp.maximum(st["free_top"] - 1, 0)]
-        # (b) else evict
-        st_ev, victim = _evict_for_alloc(st, lazy)
-        st_ev = _unmap(st_ev, victim)
-        take_ev = need_fetch & ~have_free
-        st = jax.tree.map(lambda a, b: jnp.where(take_ev, b, a), st, st_ev)
-        slot_new = jnp.where(have_free, top_slot, victim)
-        st["free_top"] = jnp.where(need_fetch & have_free,
-                                   st["free_top"] - 1, st["free_top"])
-
-        # map + copy
-        def mapped(st):
-            st = dict(st)
-            st["page_slot"] = st["page_slot"].at[page].set(slot_new)
-            st["slot_page"] = st["slot_page"].at[slot_new].set(page)
-            st["slot_prefetched"] = st["slot_prefetched"].at[slot_new].set(pref)
-            st["slot_consumed"] = st["slot_consumed"].at[slot_new].set(~pref)
-            st["slot_last_use"] = st["slot_last_use"].at[slot_new].set(st["clock"])
-            # prefetches enter the FIFO eviction ring
-            tail = jnp.mod(st["fifo_head"] + st["fifo_count"], st["fifo"].shape[0])
-            st["fifo"] = jnp.where(pref, st["fifo"].at[tail].set(slot_new), st["fifo"])
-            st["fifo_count"] = st["fifo_count"] + pref.astype(jnp.int32)
-            st["n_prefetch_issued"] = st["n_prefetch_issued"] + pref.astype(jnp.int32)
-            st["n_misses"] = st["n_misses"] + (~pref).astype(jnp.int32)
-            return st
-        st_m = mapped(st)
+        st_f, slot_new = _alloc_slot(st, lazy)
+        st_m = _map_slot(st_f, slot_new, page, pref)
+        st_m["n_prefetch_issued"] = (st_m["n_prefetch_issued"]
+                                     + pref.astype(jnp.int32))
+        st_m["n_misses"] = st_m["n_misses"] + (~pref).astype(jnp.int32)
         st = jax.tree.map(lambda a, b: jnp.where(need_fetch, b, a), st, st_m)
         hot = jnp.where(need_fetch,
                         hot.at[slot_new].set(pool[jnp.maximum(page, 0)]), hot)
@@ -229,7 +300,10 @@ def pool_access(st: dict, hot: jax.Array, pool: jax.Array,
             st_back = _unmap(st, slot_new)
             st = jax.tree.map(lambda a, b: jnp.where(give_back, b, a), st, st_back)
 
-        freed_slot = jnp.where(was_pref_hit, s_safe,
+        # Free on prefetched hit only under eager policy: lazy keeps the slot
+        # mapped until LRU eviction, so pushing it would hand out a slot whose
+        # stale page_slot entry still serves phantom hits.
+        freed_slot = jnp.where(was_pref_hit & (not lazy), s_safe,
                                jnp.where(give_back, slot_new, NO_SLOT))
         out_slot = jnp.where(resident, slot0, jnp.where(need_fetch, slot_new, NO_SLOT))
         return (st, hot), (out_slot, resident, was_pref_hit, freed_slot)
@@ -247,19 +321,233 @@ def pool_access(st: dict, hot: jax.Array, pool: jax.Array,
     return st, hot, slots, {"hit": hits, "prefetched_hit": pref_hits}
 
 
-def pool_stats(st: dict) -> dict:
-    """Python-side counter summary (paper §3.1)."""
+@functools.partial(jax.jit, static_argnames=("lazy",), donate_argnums=(0, 1))
+def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
+               now: jax.Array, delay: jax.Array, lazy: bool = False) -> tuple[dict, dict]:
+    """Issue-phase of the async data path: enqueue prefetch candidates.
+
+    Args:
+      st:    pool metadata from :func:`pool_init`.
+      ring:  in-flight ring from :func:`ring_init` (capacity >= 1).
+      pages: ``int32[K]`` candidate page ids.
+      valid: ``bool[K]`` request mask.
+      now:   ``int32`` step clock of the issuing step.
+      delay: ``int32`` steps until arrival; entries get
+             ``deadline = now + delay`` and are landed by the first
+             :func:`pool_wait` whose ``now`` reaches it (``delay=1`` =
+             double-buffered: issued at *t*, consumable at *t+1*).
+
+    A candidate is enqueued only if it is in range, not hot-resident, and not
+    already in flight (``n_prefetch_issued`` counts exactly the enqueued
+    ones). A full ring drops the candidate and counts ``ring["n_drops"]``
+    instead — issue back-pressure, never a blocking fetch.
+
+    Returns ``(st, ring)``. No data moves here; the copy happens at landing
+    time inside :func:`pool_wait`.
+    """
+    del lazy  # same issue semantics under both eviction policies
+    if ring["page"].shape[0] == 0:
+        return st, ring
+    K = pages.shape[0]
+    n_pages = st["page_slot"].shape[0]
+
+    def body(k, carry):
+        st, ring = carry
+        page = pages[k]
+        in_range = (page >= 0) & (page < n_pages)
+        p_safe = jnp.clip(page, 0, n_pages - 1)
+        resident = st["page_slot"][p_safe] >= 0
+        in_flight = jnp.any((ring["page"] == page) & (ring["page"] >= 0))
+        want = valid[k] & in_range & ~resident & ~in_flight
+        free_mask = ring["page"] < 0
+        have_space = jnp.any(free_mask)
+        pos = jnp.argmax(free_mask)
+        ring_new = dict(ring)
+        ring_new["page"] = ring["page"].at[pos].set(p_safe)
+        ring_new["deadline"] = ring["deadline"].at[pos].set(now + delay)
+        take = want & have_space
+        ring = _tree_where(take, ring_new, ring)
+        st = dict(st)
+        ring = dict(ring)
+        st["n_prefetch_issued"] = st["n_prefetch_issued"] + take.astype(jnp.int32)
+        ring["n_drops"] = ring["n_drops"] + (want & ~have_space).astype(jnp.int32)
+        return st, ring
+
+    return jax.lax.fori_loop(0, K, body, (st, ring))
+
+
+@functools.partial(jax.jit, static_argnames=("lazy",), donate_argnums=(0, 1, 2))
+def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
+              page: jax.Array, now: jax.Array, lazy: bool = False,
+              ) -> tuple[dict, dict, jax.Array, jax.Array, jax.Array, dict]:
+    """Wait-phase of the async data path: land arrivals, serve one demand.
+
+    Args:
+      st:   pool metadata from :func:`pool_init`.
+      ring: in-flight ring from :func:`ring_init` (capacity >= 1).
+      hot:  ``[n_slots, ...]`` hot buffer (updated functionally).
+      pool: ``[n_pages, ...]`` slow tier.
+      page: ``int32`` demand page id of this step.
+      now:  ``int32`` step clock (compared against ring deadlines).
+
+    Two phases, mirroring the swap-in path over an async queue:
+
+    1. **Land** every ring entry with ``deadline <= now``: allocate a slot
+       (free stack, else eager FIFO / lazy LRU eviction), copy the page in,
+       and track it as an unconsumed prefetch — this models DMA that
+       completed during the *previous* step's compute.
+    2. **Serve** the demand. Hot-resident -> hit (a first hit on a
+       prefetched slot counts ``n_prefetch_hits`` and eager-frees it).
+       Still in the ring -> **partial hit**: the entry is completed
+       immediately (removed from the ring, data copied), counting both
+       ``n_prefetch_hits`` and ``n_partial_hits`` — the consumer blocked on
+       the residual transfer only. Otherwise -> demand miss and fetch.
+
+    Returns ``(st, ring, hot, slot, data, info)`` where ``slot`` is the hot
+    slot serving the demand (-1 if out of range), ``data`` is
+    ``hot[slot]``, and ``info`` has scalar bool ``hit`` (resident full hit),
+    ``prefetched_hit`` (full hit on an unconsumed prefetch) and
+    ``partial_hit``. As with :func:`pool_access`, slots eager-freed here are
+    unmapped immediately but stay readable until the next pool call.
+    """
+    R = ring["page"].shape[0]
+    n_pages = st["page_slot"].shape[0]
+
+    # ---- phase 1: land due arrivals -----------------------------------------
+    if R > 0:
+        def land(i, carry):
+            st, ring, hot = carry
+            p = ring["page"][i]
+            due = (p >= 0) & (ring["deadline"][i] <= now)
+            p_safe = jnp.maximum(p, 0)
+            resident = st["page_slot"][p_safe] >= 0
+            commit = due & ~resident
+            st_c, slot = _alloc_slot(st, lazy)
+            st_c = dict(st_c)
+            st_c["clock"] = st_c["clock"] + 1
+            st_c = _map_slot(st_c, slot, p_safe, jnp.ones((), bool))
+            hot_c = hot.at[slot].set(pool[p_safe])
+            st = _tree_where(commit, st_c, st)
+            hot = jnp.where(commit, hot_c, hot)
+            # A due entry whose page somehow became resident is dropped and
+            # counted as pollution so the issue decomposition still sums.
+            st = dict(st)
+            st["n_pollution"] = st["n_pollution"] + (due & resident).astype(jnp.int32)
+            ring = dict(ring)
+            ring["page"] = ring["page"].at[i].set(jnp.where(due, NO_PAGE, p))
+            return st, ring, hot
+
+        st, ring, hot = jax.lax.fori_loop(0, R, land, (st, ring, hot))
+
+    # ---- phase 2: serve the demand access -----------------------------------
+    in_range = (page >= 0) & (page < n_pages)
+    p_safe = jnp.clip(page, 0, n_pages - 1)
+    st = dict(st)
+    st["clock"] = st["clock"] + in_range.astype(jnp.int32)
+    slot0 = st["page_slot"][p_safe]
+    resident = in_range & (slot0 >= 0)
+    s_safe = jnp.maximum(slot0, 0)
+    was_pref_hit = (resident & st["slot_prefetched"][s_safe]
+                    & ~st["slot_consumed"][s_safe])
+    if R > 0:
+        match = (ring["page"] == page) & (ring["page"] >= 0)
+        partial = in_range & ~resident & jnp.any(match)
+        match_i = jnp.argmax(match)
+        ring = dict(ring)
+        ring["page"] = jnp.where(partial, ring["page"].at[match_i].set(NO_PAGE),
+                                 ring["page"])
+    else:
+        partial = jnp.zeros((), bool)
+    miss = in_range & ~resident & ~partial
+
+    # counters (partial hits count as cache hits *and* prefetch hits — the
+    # simulator's swap-cache accounting, so both paths stay comparable)
+    st["n_hits"] = st["n_hits"] + (resident | partial).astype(jnp.int32)
+    st["n_prefetch_hits"] = (st["n_prefetch_hits"]
+                             + (was_pref_hit | partial).astype(jnp.int32))
+    st["n_partial_hits"] = st["n_partial_hits"] + partial.astype(jnp.int32)
+    st["n_misses"] = st["n_misses"] + miss.astype(jnp.int32)
+
+    # resident hit: consume; eager policy frees a prefetched slot on first hit
+    st["slot_consumed"] = jnp.where(
+        resident, st["slot_consumed"].at[s_safe].set(True), st["slot_consumed"])
+    st["slot_last_use"] = jnp.where(
+        resident, st["slot_last_use"].at[s_safe].set(st["clock"]),
+        st["slot_last_use"])
+    if not lazy:
+        st_un = _unmap(dict(st), s_safe)
+        st = _tree_where(was_pref_hit, st_un, st)
+
+    # partial hit or miss: fetch now (partial = completing the in-flight DMA
+    # early; only the residual is on the critical path — see pool_stats)
+    need_fetch = partial | miss
+    st_f, slot_new = _alloc_slot(st, lazy)
+    st_f = _map_slot(st_f, slot_new, p_safe, jnp.zeros((), bool))
+    hot_f = hot.at[slot_new].set(pool[p_safe])
+    st = _tree_where(need_fetch, st_f, st)
+    hot = jnp.where(need_fetch, hot_f, hot)
+
+    # eager policy: demand pages are consumed-on-arrival and never tracked —
+    # unmap now, return the staging slot at the end of the call
+    give_back = need_fetch & (not lazy)
+    if not lazy:
+        st_back = _unmap(st, slot_new)
+        st = _tree_where(give_back, st_back, st)
+
+    freed = jnp.where(was_pref_hit & (not lazy), s_safe,
+                      jnp.where(give_back, slot_new, NO_SLOT))
+    st_p = _free_push(st, jnp.maximum(freed, 0))
+    st = _tree_where(freed >= 0, st_p, st)
+
+    out_slot = jnp.where(resident, slot0,
+                         jnp.where(need_fetch, slot_new, NO_SLOT))
+    data = hot[jnp.maximum(out_slot, 0)]
+    info = {"hit": resident, "prefetched_hit": was_pref_hit,
+            "partial_hit": partial}
+    return st, ring, hot, out_slot, data, info
+
+
+def pool_stats(st: dict, ring: dict | None = None) -> dict:
+    """Python-side counter summary (paper §3.1 + DESIGN.md §4). Not jittable.
+
+    With just ``st`` this reports the sync-path counters. Pass the matching
+    ``ring`` to additionally decompose where every issued prefetch ended up:
+
+    ``prefetch_issued == prefetch_hits + pollution + inflight_at_end
+    + resident_unused``
+
+    * ``prefetch_hits`` — consumed (``partial_hits`` is the subset consumed
+      while still in flight; the rest arrived before first use).
+    * ``pollution`` — landed in the hot buffer, evicted before any hit.
+    * ``inflight_at_end`` — still in the ring when the run ended.
+    * ``resident_unused`` — landed, still resident and unconsumed at the end.
+
+    ``latency_hidden_frac`` is the fraction of consumed prefetches whose
+    data had fully arrived before first use — the async path's
+    latency-hiding score (1.0 = every prefetch hid its whole transfer).
+    """
     g = lambda k: int(st[k])
     issued, phits = g("n_prefetch_issued"), g("n_prefetch_hits")
+    partial = g("n_partial_hits")
     faults = g("n_hits") + g("n_misses")
-    return {
+    resident_unused = int(jnp.sum((st["slot_page"] >= 0)
+                                  & st["slot_prefetched"]
+                                  & ~st["slot_consumed"]))
+    out = {
         "faults": faults,
         "hits": g("n_hits"),
         "misses": g("n_misses"),
         "prefetch_issued": issued,
         "prefetch_hits": phits,
+        "partial_hits": partial,
         "pollution": g("n_pollution"),
+        "resident_unused": resident_unused,
         "alloc_scans": g("n_alloc_scans"),
         "accuracy": phits / issued if issued else 0.0,
         "coverage": phits / faults if faults else 0.0,
+        "latency_hidden_frac": (phits - partial) / phits if phits else 1.0,
     }
+    if ring is not None:
+        out["inflight_at_end"] = int(jnp.sum(ring["page"] >= 0))
+        out["ring_drops"] = int(ring["n_drops"])
+    return out

@@ -14,7 +14,12 @@ plus TPU-flavored presets where the "fabric" is ICI/DCN and a page is a KV
 block (see DESIGN.md §2). Prefetches are asynchronous but serialize on the
 fabric link, so over-aggressive policies delay demand fetches — the paper's
 "wasted I/O bandwidth" effect. An access to a still-in-flight page blocks
-only for the residual transfer (partial hit), like Linux's swap cache.
+only for the residual transfer (partial hit, counted in
+``stats.partial_hits``), like Linux's swap cache; prefetches whose transfer
+never completed before the run ended are ``inflight_at_end``, not
+pollution. These mirror the jitted async data path's issue/wait ring
+(``repro.core.pool``, DESIGN.md §4), so the trace sim and the in-model
+stream report comparable swap-cache partial-hit numbers.
 
 ``simulate`` runs one stream over the multi-tenant fabric engine
 (``repro.fabric``, DESIGN.md §3) on a width-1 FIFO link; the original
@@ -147,7 +152,7 @@ def simulate_legacy(trace, prefetcher: Prefetcher, cache: PageCache,
         stats.latencies.append(latency)
         now += latency + think_time
 
-    cache.drain_unconsumed()
+    cache.drain_unconsumed(now)
     return SimResult(prefetcher.name, model.name, stats, now, link_busy_total,
                      cache.scanned_entries)
 

@@ -17,11 +17,10 @@ by reading the 'pod' axis.
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 
 def pipeline_forward(stage_fn, params_stacked, x, *, mesh: Mesh,

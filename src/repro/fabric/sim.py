@@ -188,7 +188,8 @@ class _FabricSim:
         ten.latencies.append(latency)
         ten.cache.stats.latencies.append(latency)
         ten.advance()
-        resume = t_start + latency + ten.gap_after_access()
+        done = t_start + latency
+        resume = done + ten.gap_after_access(done)
         if ten.finished:
             ten.done_time = resume
             return
@@ -242,9 +243,9 @@ def run_fabric(scenario: FabricScenario) -> FabricReport:
         sim.start_tenant(ten)
     engine.run()
 
-    for cache in {id(t.cache): t.cache for t in tenants}.values():
-        cache.drain_unconsumed()
     makespan = max((t.done_time or 0.0 for t in tenants), default=0.0)
+    for cache in {id(t.cache): t.cache for t in tenants}.values():
+        cache.drain_unconsumed(makespan)
     # async prefetches may still drain after the last tenant finishes;
     # utilization is over the full busy horizon so it stays <= 1
     horizon = max(makespan, engine.now)
@@ -283,7 +284,7 @@ def run_single_stream(trace, prefetcher, cache, model="rdma_lean",
                                      arbitration="fifo")
     sim.start_tenant(ten)
     engine.run()
-    cache.drain_unconsumed()
+    cache.drain_unconsumed(ten.done_time or 0.0)
     return SimResult(prefetcher.name, model.name, cache.stats,
                      ten.done_time or 0.0, sim.links[ten.tier].busy_time,
                      cache.scanned_entries)

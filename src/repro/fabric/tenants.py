@@ -109,9 +109,11 @@ class Tenant:
         self.idx += 1
 
     # -- arrival process -----------------------------------------------------
-    def gap_after_access(self) -> float:
+    def gap_after_access(self, now: float | None = None) -> float:
         """Extra idle time *after* the access just completed (on top of
-        the latency already charged); also flags churn restarts."""
+        the latency already charged); also flags churn restarts. ``now``
+        is the completion time of the access, used to classify in-flight
+        prefetches discarded by a churn restart."""
         gap = self.spec.think_time
         if self.spec.arrival == "bursty" and self.idx < len(self.trace) \
                 and self.idx % max(1, self.spec.burst_len) == 0:
@@ -119,18 +121,21 @@ class Tenant:
         if self.spec.arrival == "churn" and self.spec.churn_every > 0 \
                 and self.idx < len(self.trace) \
                 and self.idx % self.spec.churn_every == 0:
-            self.cold_restart()
+            self.cold_restart(now)
             gap += self.spec.churn_downtime
         return gap
 
-    def cold_restart(self) -> None:
+    def cold_restart(self, now: float | None = None) -> None:
         """Drop prefetcher state and cache contents — a tenant departing
         and re-arriving with nothing warm. On the shared data path the
         tracker and cache are communal infrastructure serving everyone
-        else, so a churning tenant leaves both alone."""
+        else, so a churning tenant leaves both alone. With ``now`` given,
+        prefetches whose transfer had not completed by the restart count
+        as ``inflight_at_end`` rather than pollution (they never landed —
+        the pollution/in-flight taxonomy of DESIGN.md §4.3)."""
         if self.shared:
             return
         self.prefetcher.reset()
-        self.cache.drain_unconsumed()
+        self.cache.drain_unconsumed(now)
         self.cache.entries.clear()
         self.cache.prefetch_fifo.clear()

@@ -5,10 +5,10 @@ wrapper, interpret=True off-TPU), ref.py (pure-jnp oracle for tests).
 """
 
 from .flash_attention import flash_attention, flash_attention_ref
-from .gather_pages import gather_pages, gather_pages_ref
+from .gather_pages import gather_pages, gather_pages_async, gather_pages_ref
 from .paged_attention import paged_attention, paged_attention_ref
 from .selective_scan import selective_scan, selective_scan_ref
 
 __all__ = ["flash_attention", "flash_attention_ref", "gather_pages",
-           "selective_scan", "selective_scan_ref",
+           "gather_pages_async", "selective_scan", "selective_scan_ref",
            "gather_pages_ref", "paged_attention", "paged_attention_ref"]

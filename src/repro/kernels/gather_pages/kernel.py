@@ -28,6 +28,41 @@ def _gather_kernel(idx_ref, pool_ref, out_ref):
     out_ref[...] = pool_ref[...]
 
 
+def _gather_async_kernel(idx_ref, pool_ref, out_ref, scratch_ref, sem_ref):
+    """Manual issue/wait gather: explicit double-buffered async copies.
+
+    ``pool_ref`` stays in HBM (memory_space=ANY); each requested page is
+    DMA'd into one of two VMEM scratch slots via ``pltpu.make_async_copy``.
+    The copy for page k+1 is *issued* before the copy for page k is
+    *waited* on — the in-flight ring of the async data path (DESIGN.md §4)
+    collapsed to depth 2, so the consumer's write-out of page k overlaps
+    page k+1's transfer.
+    """
+    K = out_ref.shape[0]
+
+    def get_dma(slot, k):
+        return pltpu.make_async_copy(
+            pool_ref.at[idx_ref[k]],     # HBM page row
+            scratch_ref.at[slot],        # VMEM landing buffer
+            sem_ref.at[slot])
+
+    get_dma(0, 0).start()                # warm-up: issue page 0
+
+    def body(k, carry):
+        cur = jax.lax.rem(k, 2)
+        nxt = jax.lax.rem(k + 1, 2)
+
+        @pl.when(k + 1 < K)
+        def _():
+            get_dma(nxt, k + 1).start()  # issue k+1 while k is in flight
+
+        get_dma(cur, k).wait()           # wait: k's page has landed
+        out_ref[pl.ds(k, 1), :] = scratch_ref[cur][None, :]
+        return carry
+
+    jax.lax.fori_loop(0, K, body, None)
+
+
 def gather_pages_fwd(pool: jax.Array, indices: jax.Array, *,
                      interpret: bool = True) -> jax.Array:
     """pool [n_pages, E], indices [K] int32 -> out [K, E].
@@ -47,6 +82,37 @@ def gather_pages_fwd(pool: jax.Array, indices: jax.Array, *,
     )
     return pl.pallas_call(
         _gather_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((K, E), pool.dtype),
+        interpret=interpret,
+    )(idx, pool)
+
+
+def gather_pages_async_fwd(pool: jax.Array, indices: jax.Array, *,
+                           interpret: bool = True) -> jax.Array:
+    """pool [n_pages, E], indices [K] int32 -> out [K, E], issue/wait form.
+
+    Functionally identical to :func:`gather_pages_fwd` (out-of-range indices
+    clamped) but the HBM->VMEM page copies are explicit
+    ``pltpu.make_async_copy`` issue/wait pairs driven by the kernel itself,
+    not the pipeline emitter — the kernel-level mirror of the
+    ``pool_issue``/``pool_wait`` data path. VMEM footprint: 2 pages in
+    flight + the [K, E] output block.
+    """
+    n_pages, E = pool.shape
+    K = indices.shape[0]
+    idx = jnp.clip(indices, 0, n_pages - 1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(1,),
+        in_specs=[pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY)],
+        out_specs=pl.BlockSpec((K, E), lambda i, idx_ref: (0, 0)),
+        scratch_shapes=[pltpu.VMEM((2, E), pool.dtype),
+                        pltpu.SemaphoreType.DMA((2,))],
+    )
+    return pl.pallas_call(
+        _gather_async_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((K, E), pool.dtype),
         interpret=interpret,

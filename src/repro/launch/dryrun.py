@@ -30,8 +30,6 @@ import re
 import time
 import traceback
 
-import jax
-
 from repro import configs as cfglib
 from repro.launch.hlo_analysis import analyze_hlo
 from repro.launch.mesh import make_production_mesh

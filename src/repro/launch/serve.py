@@ -33,7 +33,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--paged", action="store_true",
-                    help="drive the Leap-prefetched page stream alongside")
+                    help="drive the Leap-prefetched page stream alongside "
+                         "(see --async-datapath for the issue/wait variant)")
+    ap.add_argument("--async-datapath", action="store_true",
+                    help="with --paged: fetch prefetch candidates through "
+                         "the issue/wait in-flight ring so their DMA "
+                         "overlaps the next decode step instead of blocking "
+                         "this one; reports partial hits + latency-hidden "
+                         "fraction (DESIGN.md §4)")
+    ap.add_argument("--ring-size", type=int, default=8,
+                    help="in-flight ring capacity for --async-datapath")
     ap.add_argument("--page-size", type=int, default=4)
     args = ap.parse_args(argv)
 
@@ -78,14 +87,21 @@ def main(argv=None) -> dict:
         geom = PrefetchedStream(n_pages=npages * B,
                                 n_slots=min(4 * 8 + 2, npages * B),
                                 page_elems=cfg.n_kv_heads * cfg.head_dim
-                                * args.page_size)
+                                * args.page_size,
+                                ring_size=args.ring_size)
         pool = jnp.zeros((geom.n_pages, geom.page_elems), jnp.float32)
         sched = jnp.asarray(np.concatenate(
             [np.arange(npages) + b * npages for b in range(B)]), jnp.int32)
-        st, _, info = stream_consume(pool, sched, geom)
+        st, _, info = stream_consume(pool, sched, geom,
+                                     async_datapath=args.async_datapath)
         s = stream_stats(st)
         result["paged_prefetch_hit_rate"] = round(s["coverage"], 3)
         result["paged_pollution"] = s["pollution"]
+        if args.async_datapath:
+            result["paged_partial_hits"] = s["partial_hits"]
+            result["paged_latency_hidden_frac"] = round(
+                s["latency_hidden_frac"], 3)
+            result["paged_inflight_at_end"] = s["inflight_at_end"]
 
     print(result)
     return result

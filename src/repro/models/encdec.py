@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from .attention import blocked_attention, decode_attention, full_attention
 from .config import ModelConfig
-from .layers import (apply_mlp, apply_norm, apply_rotary, chunked_ce_loss,
+from .layers import (apply_mlp, apply_norm, chunked_ce_loss,
                      dense_init, embed_init, mlp_init, norm_init, rope_angles)
 from .transformer import _attn_init, _qkv, lm_head
 

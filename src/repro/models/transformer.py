@@ -19,8 +19,6 @@ their O(1) recurrent states.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -30,12 +28,10 @@ from .config import ModelConfig
 from .layers import (apply_mlp, apply_norm, apply_rotary, chunked_ce_loss,
                      dense_init, embed_init, mlp_init, mrope_angles,
                      norm_init, rope_angles)
-from .mamba import (apply_mamba, mamba_decode_step, mamba_init,
-                    mamba_state_init)
+from .mamba import apply_mamba, mamba_decode_step, mamba_init
 from .moe import apply_moe, moe_init
 from .xlstm import (apply_mlstm, apply_slstm, mlstm_decode_step, mlstm_init,
-                    mlstm_state_init, slstm_decode_step, slstm_init,
-                    slstm_state_init)
+                    mlstm_state_init, slstm_decode_step, slstm_init)
 
 
 # --------------------------------------------------------------------------

@@ -3,15 +3,21 @@
 The disaggregated-memory layer of the framework. ``kv_cache`` is the
 vLLM-style paged KV pool (page dim mesh-shardable = the remote tier);
 ``prefetch_serving`` wires the jittable Leap controller + hot-buffer pool +
-gather_pages kernel into a page-stream consumer; ``expert_stream`` applies
-the same controller to MoE expert-id streams (weight paging).
+gather_pages kernel into a page-stream consumer, with a sync (blocking
+batched fetch) and an async (issue/wait in-flight ring, DESIGN.md §4) data
+path; ``expert_stream`` applies the same controller to MoE expert-id
+streams (weight paging).
 """
 
 from .kv_cache import (PageAllocator, append_kv, init_paged_kv,
                        linear_page_table, paged_decode_attention)
-from .prefetch_serving import PrefetchedStream, stream_consume
+from .prefetch_serving import (PrefetchedStream, multi_stream_consume,
+                               stream_consume, stream_init, stream_step,
+                               stream_step_async, stream_stats)
 from .expert_stream import ExpertPrefetcher
 
 __all__ = ["PageAllocator", "append_kv", "init_paged_kv",
            "linear_page_table", "paged_decode_attention",
-           "PrefetchedStream", "stream_consume", "ExpertPrefetcher"]
+           "PrefetchedStream", "multi_stream_consume", "stream_consume",
+           "stream_init", "stream_step", "stream_step_async", "stream_stats",
+           "ExpertPrefetcher"]

@@ -8,7 +8,10 @@ routing is the Memcached case where Leap's contribution is *throttling* —
 it stops prefetching instead of thrashing the buffer (paper §5.3.4).
 
 ``ExpertPrefetcher`` tracks one stream per (layer, slot) — the per-process
-isolation of §4.1 — and exposes hit/pollution counters per stream.
+isolation of §4.1 — and exposes hit/pollution counters per stream. With
+``async_datapath=True`` the expert-block fetches go through the issue/wait
+in-flight ring (DESIGN.md §4): blocks speculated at routing step *t* arrive
+during step *t+1*'s expert compute instead of stalling step *t*.
 """
 
 from __future__ import annotations
@@ -18,39 +21,67 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core.leap_jax import leap_init, leap_step_batched
-from repro.paging.prefetch_serving import PrefetchedStream, stream_init, stream_step
+from repro.paging.prefetch_serving import (PrefetchedStream, stream_init,
+                                           stream_step, stream_step_async)
 
 
 @dataclasses.dataclass(frozen=True)
 class ExpertPrefetcher:
-    """Leap-managed hot buffer of expert weight blocks."""
+    """Leap-managed hot buffer of expert weight blocks.
+
+    Attributes:
+      n_experts:   slow-tier size (router ids are ``int32`` in
+                   ``[0, n_experts)``).
+      n_hot:       experts resident at once (hot-buffer slots).
+      block_elems: flattened expert weight block size (payload elements).
+      pw_max:      prefetch-window cap — experts are big; keep it tight.
+      async_datapath: fetch blocks via the issue/wait ring instead of the
+                   blocking batched path (sync-vs-async contract of
+                   :mod:`repro.paging.prefetch_serving`).
+      ring_size:   in-flight ring capacity for the async path.
+    """
     n_experts: int
     n_hot: int                   # experts resident at once
     block_elems: int             # flattened expert weight block size
     pw_max: int = 2              # experts are big; keep the window tight
+    async_datapath: bool = False
+    ring_size: int = 4
 
     def geom(self) -> PrefetchedStream:
         return PrefetchedStream(n_pages=self.n_experts, n_slots=self.n_hot,
                                 page_elems=self.block_elems,
-                                pw_max=self.pw_max)
+                                pw_max=self.pw_max, ring_size=self.ring_size)
 
     def init(self, dtype=jnp.float32) -> dict:
+        """Fresh per-stream state (controller + hot buffer + ring)."""
         return stream_init(self.geom(), dtype)
+
+    def _step(self):
+        return stream_step_async if self.async_datapath else stream_step
 
     def fetch(self, state: dict, expert_weights: jax.Array,
               expert_id: jax.Array):
-        """Serve one routed expert id; returns (state, block, info)."""
-        return stream_step(state, expert_weights, expert_id, self.geom())
+        """Serve one routed expert id; returns ``(state, block, info)``.
+
+        ``expert_weights`` is ``[n_experts, block_elems]``; ``block`` is the
+        ``[block_elems]`` payload, ``info`` the scalar-bool hit masks of
+        :func:`repro.paging.prefetch_serving.stream_step`.
+        """
+        return self._step()(state, expert_weights, expert_id, self.geom())
 
     def consume_route_trace(self, state: dict, expert_weights: jax.Array,
                             ids: jax.Array):
-        """Scan a [T] expert-id trace (one layer's routing over steps)."""
+        """Scan a ``int32[T]`` expert-id trace (one layer's routing).
+
+        Returns ``(state, info)`` with ``[T]`` bool arrays ``hit`` /
+        ``pref_hit`` / ``partial_hit`` (the last all-False on the sync path).
+        """
         geom = self.geom()
+        step_fn = self._step()
 
         def body(st, e):
-            st, _, info = stream_step(st, expert_weights, e, geom)
-            return st, (info["hit"], info["pref_hit"])
+            st, _, info = step_fn(st, expert_weights, e, geom)
+            return st, (info["hit"], info["pref_hit"], info["partial_hit"])
 
-        state, (hits, pref) = jax.lax.scan(body, state, ids)
-        return state, {"hit": hits, "pref_hit": pref}
+        state, (hits, pref, partial) = jax.lax.scan(body, state, ids)
+        return state, {"hit": hits, "pref_hit": pref, "partial_hit": partial}

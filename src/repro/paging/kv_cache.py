@@ -27,6 +27,9 @@ from repro.kernels.paged_attention import paged_attention
 
 def init_paged_kv(n_layers: int, n_pages: int, page_size: int, n_kv_heads: int,
                   head_dim: int, dtype=jnp.bfloat16) -> dict:
+    """Zeroed KV pool: ``{"k","v"}`` each ``[L, n_pages, page, Hkv, dh]``
+    of ``dtype`` (default bf16). The page dim is the mesh-shardable
+    disaggregated tier (see :func:`kv_pool_specs`)."""
     sh = (n_layers, n_pages, page_size, n_kv_heads, head_dim)
     return {"k": jnp.zeros(sh, dtype), "v": jnp.zeros(sh, dtype)}
 
@@ -39,7 +42,10 @@ def kv_pool_specs(n_layers: int) -> dict:
 
 def linear_page_table(batch: int, n_pages_per_seq: int,
                       stride: int = 1) -> jax.Array:
-    """Static allocation: seq b's logical page j -> b*npps + j (strided)."""
+    """Static allocation: seq b's logical page j -> b*npps + j (strided).
+
+    Returns ``int32[batch, n_pages_per_seq]`` of physical page ids.
+    """
     base = jnp.arange(batch)[:, None] * n_pages_per_seq
     return (base + jnp.arange(n_pages_per_seq)[None, :] * stride
             % n_pages_per_seq).astype(jnp.int32)
@@ -49,7 +55,9 @@ def append_kv(pool: dict, layer: jax.Array, k_new: jax.Array, v_new: jax.Array,
               page_table: jax.Array, pos: jax.Array) -> dict:
     """Write one token's K/V for every sequence at position ``pos``.
 
-    k_new/v_new [B, Hkv, dh]; pool leaves [L, n_pages, page, Hkv, dh].
+    ``k_new``/``v_new`` are ``[B, Hkv, dh]`` (cast to the pool dtype); pool
+    leaves are ``[L, n_pages, page, Hkv, dh]``; ``layer``/``pos`` are scalar
+    int32. Returns the updated pool dict (functional, jit/scan-safe).
     """
     page_size = pool["k"].shape[2]
     B = k_new.shape[0]
@@ -66,7 +74,11 @@ def append_kv(pool: dict, layer: jax.Array, k_new: jax.Array, v_new: jax.Array,
 def paged_decode_attention(q: jax.Array, pool: dict, layer: jax.Array,
                            page_table: jax.Array, lengths: jax.Array, *,
                            use_kernel: bool = False) -> jax.Array:
-    """q [B,1,Hq,dh] against layer ``layer`` of the paged pool."""
+    """Decode attention: ``q [B,1,Hq,dh]`` against layer ``layer``.
+
+    ``page_table`` is ``int32[B, npps]``, ``lengths`` ``int32[B]`` valid
+    context tokens per sequence. Returns ``[B, 1, Hq, dh]`` in q's dtype.
+    """
     k_pool = pool["k"][layer]
     v_pool = pool["v"][layer]
     return paged_attention(q, k_pool, v_pool, page_table, lengths,

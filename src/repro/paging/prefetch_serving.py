@@ -4,14 +4,26 @@ This is the end-to-end in-model integration of the paper: a compute stream
 that consumes remote pages (KV pages during chunked long-context processing,
 expert blocks, offloaded layer weights) runs against a small hot buffer;
 every slow-tier access feeds the per-stream Leap controller
-(:mod:`repro.core.leap_jax`), whose candidates are fetched *alongside* the
-demand page in one batched :func:`pool_access` — the prefetch DMA overlaps
-the next compute step exactly like the paper's async RDMA queues overlap the
-faulting process' progress.
+(:mod:`repro.core.leap_jax`), whose candidates are fetched ahead of use.
+
+Two data paths realize the fetches (paper §4.2–4.4, DESIGN.md §4):
+
+* **Sync** (:func:`stream_step`): the demand page and the controller's
+  candidates ride one blocking batched :func:`repro.core.pool.pool_access` —
+  every prefetch byte sits on the critical path of the step that issued it
+  (the read-ahead-style baseline).
+* **Async issue/wait** (:func:`stream_step_async`): candidates are *issued*
+  into a fixed-shape in-flight ring (:func:`repro.core.pool.pool_issue`)
+  with an arrival deadline one step out; the next step's
+  :func:`repro.core.pool.pool_wait` *lands* them before serving its demand —
+  the prefetch DMA overlaps the consumer's compute, exactly like the paper's
+  async RDMA queues overlap the faulting process' progress. A demand access
+  to a page still in flight completes it early as a *partial hit* (swap-cache
+  semantics) and only the residual transfer blocks.
 
 Everything is fixed-shape and lives in one ``lax.scan`` per stream, so the
 whole serving path jits; per-stream isolation (paper §4.1) is ``vmap`` over
-the controller+buffer state.
+the controller+buffer(+ring) state.
 """
 
 from __future__ import annotations
@@ -23,37 +35,72 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.leap_jax import leap_init, leap_step
-from repro.core.pool import pool_access, pool_init, pool_stats
+from repro.core.pool import (pool_access, pool_init, pool_issue, pool_stats,
+                             pool_wait, ring_init)
 from repro.core.window import DEFAULT_PW_MAX
 
 
 @dataclasses.dataclass(frozen=True)
 class PrefetchedStream:
-    """Static geometry of one prefetched page stream."""
+    """Static geometry of one prefetched page stream.
+
+    Attributes:
+      n_pages:    slow-tier size (page ids are ``int32`` in ``[0, n_pages)``).
+      n_slots:    hot-buffer capacity; size ``>= 2 * (1 + pw_max)`` so a
+                  batch's evictions never race its allocations.
+      page_elems: flattened payload elements per page.
+      pw_max:     controller prefetch-window cap (candidates per fault).
+      h_size:     controller access-history length.
+      n_split:    FINDTREND ladder start (``h_size // n_split`` window).
+      ring_size:  async in-flight ring capacity. ``0`` makes the async path
+                  degenerate to the sync one (bit-equivalent, tested).
+      arrival_delay: steps between issue and arrival; ``1`` = issued at *t*,
+                  consumable at *t+1* (double-buffered overlap).
+    """
     n_pages: int
     n_slots: int
     page_elems: int
     pw_max: int = DEFAULT_PW_MAX
     h_size: int = 32
     n_split: int = 8
+    ring_size: int = 8
+    arrival_delay: int = 1
 
 
 def stream_init(geom: PrefetchedStream, dtype=jnp.float32) -> dict:
+    """Fresh stream state: controller + pool metadata + hot buffer + ring.
+
+    Returns a pytree dict with keys ``leap`` (controller state),
+    ``pool_meta`` (:func:`repro.core.pool.pool_init`), ``hot``
+    (``[n_slots, page_elems]`` of ``dtype``) and ``ring``
+    (:func:`repro.core.pool.ring_init`, inert on the sync path).
+    """
     return {
         "leap": leap_init(geom.h_size),
         "pool_meta": pool_init(geom.n_pages, geom.n_slots),
         "hot": jnp.zeros((geom.n_slots, geom.page_elems), dtype),
+        "ring": ring_init(geom.ring_size),
     }
 
 
 def stream_step(state: dict, pool_data: jax.Array, page: jax.Array,
                 geom: PrefetchedStream) -> tuple[dict, jax.Array, dict]:
-    """Service one page access; returns (state, page_data, info).
+    """Synchronous step: service one page access, fetch candidates inline.
+
+    Args:
+      state: stream state from :func:`stream_init`.
+      pool_data: ``[n_pages, page_elems]`` slow tier.
+      page: ``int32`` demand page id.
+
+    Returns ``(state, data, info)`` with ``data = [page_elems]`` payload and
+    scalar-bool ``info`` keys ``hit`` / ``pref_hit`` / ``partial_hit``
+    (``partial_hit`` is always False here: the sync batch blocks until every
+    requested byte has landed, so nothing is ever left in flight).
 
     Order per fault (paper Fig. 6): look up / demand-fetch the page, notify
     the tracker (with whether it hit a prefetched entry), then issue the
-    controller's candidates — they ride the same batched fetch and land
-    before the next step consumes them.
+    controller's candidates — they ride the same batched fetch, fully on
+    this step's critical path.
     """
     # Probe residency first so the controller sees prefetched_hit correctly.
     slot0 = state["pool_meta"]["page_slot"][jnp.clip(page, 0, geom.n_pages - 1)]
@@ -72,40 +119,121 @@ def stream_step(state: dict, pool_data: jax.Array, page: jax.Array,
     meta, hot, slots, info = pool_access(meta, state["hot"], pool_data,
                                          pages, is_pf, val)
     data = hot[jnp.maximum(slots[0], 0)]
-    return ({"leap": new_leap, "pool_meta": meta, "hot": hot},
-            data, {"hit": info["hit"][0], "pref_hit": info["prefetched_hit"][0]})
+    return ({**state, "leap": new_leap, "pool_meta": meta, "hot": hot},
+            data, {"hit": info["hit"][0], "pref_hit": info["prefetched_hit"][0],
+                   "partial_hit": jnp.zeros((), bool)})
 
 
-@functools.partial(jax.jit, static_argnames=("geom",))
+def stream_step_async(state: dict, pool_data: jax.Array, page: jax.Array,
+                      geom: PrefetchedStream) -> tuple[dict, jax.Array, dict]:
+    """Asynchronous step: wait (land + serve demand), then issue candidates.
+
+    Same signature and return contract as :func:`stream_step`; the
+    difference is *when* prefetch data moves. Per step at clock *t*:
+
+    1. :func:`repro.core.pool.pool_wait` lands every ring entry whose
+       deadline has passed (DMA that completed during step *t-1*'s compute)
+       and serves the demand — resident hit, partial hit (demand completes a
+       still-in-flight entry and blocks only on the residual), or miss.
+    2. The controller consumes the fault (a partial hit counts as a
+       prefetched hit, as in the kernel swap cache) and emits candidates.
+    3. :func:`repro.core.pool.pool_issue` enqueues them with deadline
+       ``t + geom.arrival_delay`` — off the critical path of this step.
+
+    With ``geom.ring_size == 0`` there is nowhere to park an in-flight fetch,
+    so the step delegates to :func:`stream_step` and is bit-equivalent to the
+    sync path (pinned in ``tests/test_paging.py``).
+    """
+    if geom.ring_size == 0:
+        new_state, data, info = stream_step(state, pool_data, page, geom)
+        ring = dict(new_state["ring"])
+        ring["now"] = ring["now"] + 1
+        return {**new_state, "ring": ring}, data, info
+
+    meta, ring, hot = state["pool_meta"], state["ring"], state["hot"]
+    now = ring["now"]
+    meta, ring, hot, slot, data, winfo = pool_wait(meta, ring, hot, pool_data,
+                                                   page, now)
+    pref_feedback = winfo["prefetched_hit"] | winfo["partial_hit"]
+    new_leap, cands, valid = leap_step(state["leap"], page, pref_feedback,
+                                       n_split=geom.n_split,
+                                       pw_max=geom.pw_max)
+    val = valid & (cands >= 0) & (cands < geom.n_pages)
+    meta, ring = pool_issue(meta, ring, cands, val, now,
+                            jnp.int32(geom.arrival_delay))
+    ring = dict(ring)
+    ring["now"] = now + 1
+    return ({**state, "leap": new_leap, "pool_meta": meta, "hot": hot,
+             "ring": ring},
+            data, {"hit": winfo["hit"], "pref_hit": winfo["prefetched_hit"],
+                   "partial_hit": winfo["partial_hit"]})
+
+
+@functools.partial(jax.jit, static_argnames=("geom", "async_datapath"))
 def stream_consume(pool_data: jax.Array, schedule: jax.Array,
-                   geom: PrefetchedStream, state: dict | None = None):
-    """Run a whole access schedule [T] through the stream; scan-jitted.
+                   geom: PrefetchedStream, state: dict | None = None,
+                   async_datapath: bool = False):
+    """Run a whole access schedule through the stream; scan-jitted.
 
-    Returns (state, data_sums [T] checksum of each served page, hits [T]).
+    Args:
+      pool_data: ``[n_pages, page_elems]`` slow tier.
+      schedule: ``int32[T]`` demand page ids.
+      state: optional stream state to continue from (default: fresh).
+      async_datapath: static switch — False replays the sync batched path
+        (:func:`stream_step`), True the issue/wait overlap path
+        (:func:`stream_step_async`).
+
+    Returns ``(state, data_sums, info)``: ``data_sums`` is a ``[T]`` checksum
+    of each served page's payload, ``info`` has bool ``[T]`` arrays ``hit``,
+    ``pref_hit`` and ``partial_hit`` (all-False on the sync path).
     """
     if state is None:
         state = stream_init(geom, pool_data.dtype)
+    step_fn = stream_step_async if async_datapath else stream_step
 
     def body(st, page):
-        st, data, info = stream_step(st, pool_data, page, geom)
-        return st, (data.sum(), info["hit"], info["pref_hit"])
+        st, data, info = step_fn(st, pool_data, page, geom)
+        return st, (data.sum(), info["hit"], info["pref_hit"],
+                    info["partial_hit"])
 
-    state, (sums, hits, pref_hits) = jax.lax.scan(body, state, schedule)
-    return state, sums, {"hit": hits, "pref_hit": pref_hits}
+    state, (sums, hits, pref_hits, partials) = jax.lax.scan(
+        body, state, schedule)
+    return state, sums, {"hit": hits, "pref_hit": pref_hits,
+                         "partial_hit": partials}
 
 
 def multi_stream_consume(pool_data: jax.Array, schedules: jax.Array,
-                         geom: PrefetchedStream):
+                         geom: PrefetchedStream,
+                         async_datapath: bool = False):
     """Isolated per-stream state over a shared pool: vmap(streams).
 
-    schedules [n_streams, T]. The paper's Fig. 13 scenario: concurrent
-    streams with different patterns do not pollute each other's detectors.
+    Args:
+      schedules: ``int32[n_streams, T]`` demand page ids per stream.
+      async_datapath: static sync/async selector, as in
+        :func:`stream_consume` (one value for all streams).
+
+    The paper's Fig. 13 scenario: concurrent streams keep private
+    controller + hot-buffer (+ in-flight ring) state, so different patterns
+    do not pollute each other's detectors.
     """
     def one(schedule):
-        return stream_consume(pool_data, schedule, geom)
+        return stream_consume(pool_data, schedule, geom,
+                              async_datapath=async_datapath)
 
     return jax.vmap(one)(schedules)
 
 
 def stream_stats(state: dict) -> dict:
-    return pool_stats(state["pool_meta"])
+    """Counter summary of a stream state; not jittable (host-side ints).
+
+    Extends :func:`repro.core.pool.pool_stats` with the async-path
+    decomposition (DESIGN.md §4): every issued prefetch is exactly one of
+    ``prefetch_hits`` (consumed; ``partial_hits`` = the subset consumed
+    while still in flight), ``pollution`` (landed, evicted unused),
+    ``inflight_at_end`` (still in the ring) or ``resident_unused`` (landed,
+    never consumed, still resident). ``latency_hidden_frac`` is the fraction
+    of consumed prefetches that had fully arrived before first use — 1.0
+    means the ring hid every transfer behind compute; the sync path reports
+    1.0 vacuously (its fetches all block the issuing step instead).
+    """
+    return pool_stats(state["pool_meta"], state.get("ring"))

@@ -1,0 +1,59 @@
+"""Property tests for the async issue/wait data path (DESIGN.md §4).
+
+Hypothesis-driven: for arbitrary schedules, (a) hit-rate counters never
+decrease when the in-flight ring gains slack (eviction pressure off — more
+ring capacity can only land a superset of prefetches), and (b) the
+issued-prefetch decomposition sums for every configuration. The
+deterministic slices of these properties also run without hypothesis in
+``tests/test_paging.py``.
+"""
+
+import pytest
+
+pytest.importorskip("hypothesis")
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as hst
+
+from repro.paging.prefetch_serving import (PrefetchedStream, stream_consume,
+                                           stream_stats)
+
+N_PAGES = 64
+POOL = jnp.arange(N_PAGES * 4, dtype=jnp.float32).reshape(N_PAGES, 4)
+
+
+def _stats(sched, ring_size, arrival_delay=1):
+    geom = PrefetchedStream(n_pages=N_PAGES, n_slots=N_PAGES, page_elems=4,
+                            ring_size=ring_size, arrival_delay=arrival_delay)
+    st, sums, _ = stream_consume(POOL, jnp.asarray(sched, jnp.int32), geom,
+                                 async_datapath=True)
+    return stream_stats(st), np.asarray(sums)
+
+
+schedules = hst.lists(hst.integers(0, N_PAGES - 1), min_size=10, max_size=80)
+
+
+@settings(max_examples=25, deadline=None)
+@given(sched=schedules,
+       rings=hst.tuples(hst.integers(1, 6), hst.integers(0, 10)))
+def test_hit_counters_never_decrease_with_ring_slack(sched, rings):
+    r_small = rings[0]
+    r_big = r_small + rings[1]
+    s_small, _ = _stats(sched, r_small)
+    s_big, _ = _stats(sched, r_big)
+    assert s_big["hits"] >= s_small["hits"]
+    assert s_big["prefetch_hits"] >= s_small["prefetch_hits"]
+
+
+@settings(max_examples=25, deadline=None)
+@given(sched=schedules, ring=hst.integers(1, 12),
+       delay=hst.integers(1, 3))
+def test_decomposition_and_data_for_arbitrary_schedules(sched, ring, delay):
+    s, sums = _stats(sched, ring, delay)
+    np.testing.assert_allclose(
+        sums, np.asarray(POOL[np.asarray(sched)].sum(-1)))
+    assert s["prefetch_issued"] == (s["prefetch_hits"] + s["pollution"]
+                                    + s["inflight_at_end"]
+                                    + s["resident_unused"]), s
+    assert 0 <= s["partial_hits"] <= s["prefetch_hits"]
+    assert s["faults"] == len(sched)

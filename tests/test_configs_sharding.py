@@ -1,9 +1,7 @@
 """Arch configs (published dims, param counts) + sharding rule resolution."""
 
 import jax
-import jax.numpy as jnp
 import pytest
-from jax.sharding import PartitionSpec as P
 
 from repro.configs import (ARCHS, SHAPES, get_config, get_smoke_config,
                            input_specs, skip_reason, supports_long_context)

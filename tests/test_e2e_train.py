@@ -3,13 +3,11 @@ kill it mid-run, restart from checkpoint, and verify the loss trajectory is
 bit-exact vs an uninterrupted run (the paper-scale fault-tolerance contract).
 """
 
-import os
 import tempfile
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
 from repro.configs import get_smoke_config

@@ -61,7 +61,8 @@ def test_single_tenant_matches_legacy(trace_name, policy, model, eviction,
     fab = simulate(tr, make_prefetcher(policy),
                    PageCache(64, eviction=eviction), model, think, seed=7)
     for attr in ("faults", "cache_hits", "misses", "prefetch_issued",
-                 "prefetch_hits", "pollution"):
+                 "prefetch_hits", "partial_hits", "pollution",
+                 "inflight_at_end"):
         assert getattr(fab.stats, attr) == getattr(ref.stats, attr), attr
     assert fab.stats.hit_rate == ref.stats.hit_rate
     assert fab.stats.coverage == ref.stats.coverage

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.gather_pages import gather_pages, gather_pages_ref
+from repro.kernels.gather_pages import gather_pages
 from repro.kernels.paged_attention import paged_attention
 
 
@@ -78,6 +78,33 @@ class TestGatherPages:
         out = gather_pages(pool, idx, interpret=True)
         np.testing.assert_allclose(np.asarray(out),
                                    np.asarray(pool)[np.asarray(idx)])
+
+
+class TestGatherPagesAsync:
+    """Issue/wait double-buffered gather == the pipelined/oracle gather."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.int32])
+    def test_matches_ref(self, dtype):
+        from repro.kernels.gather_pages import gather_pages_async
+        pool = jnp.arange(32 * 6, dtype=jnp.float32).reshape(32, 6).astype(dtype)
+        idx = jnp.array([0, 31, 7, 7, 13, 1], jnp.int32)
+        out = gather_pages_async(pool, idx, interpret=True)
+        assert (np.asarray(out) == np.asarray(pool)[np.asarray(idx)]).all()
+
+    def test_clamps_and_multidim(self):
+        from repro.kernels.gather_pages import gather_pages_async
+        pool = jax.random.normal(jax.random.PRNGKey(0), (16, 4, 2, 8))
+        idx = jnp.array([3, -5, 100], jnp.int32)
+        out = gather_pages_async(pool, idx, interpret=True)
+        expect = np.asarray(pool)[np.clip(np.asarray(idx), 0, 15)]
+        np.testing.assert_allclose(np.asarray(out), expect)
+
+    def test_single_page(self):
+        from repro.kernels.gather_pages import gather_pages_async
+        pool = jnp.arange(8.0).reshape(4, 2)
+        out = gather_pages_async(pool, jnp.array([2], jnp.int32),
+                                 interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(pool[2:3]))
 
 
 class TestPagedAttention:

@@ -1,10 +1,19 @@
-"""Paging layer: paged KV, Leap-prefetched streams, expert paging."""
+"""Paging layer: paged KV, Leap-prefetched streams, expert paging.
+
+Includes the async issue/wait data-path contract (DESIGN.md §4): issued at
+step t + consumed at t+1 = prefetched hit, consumed while still in flight =
+partial hit, zero-length ring pins bit-equivalent to the sync path, and the
+issued-prefetch decomposition always sums.
+"""
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core.pool import pool_init, pool_issue, pool_stats, pool_wait, ring_init
 from repro.paging import (ExpertPrefetcher, PageAllocator, append_kv,
                           init_paged_kv, linear_page_table,
                           paged_decode_attention)
@@ -78,6 +87,141 @@ class TestPrefetchedStream:
         assert float(info["pref_hit"][1, 20:].mean()) > 0.9
 
 
+def _assert_decomposition(s: dict) -> None:
+    """Every issued prefetch lands in exactly one bucket (DESIGN.md §4)."""
+    assert s["prefetch_issued"] == (s["prefetch_hits"] + s["pollution"]
+                                    + s["inflight_at_end"]
+                                    + s["resident_unused"]), s
+    assert 0 <= s["partial_hits"] <= s["prefetch_hits"]
+
+
+class TestAsyncDatapath:
+    GEOM = PrefetchedStream(n_pages=128, n_slots=24, page_elems=4)
+
+    def _pool(self):
+        return jnp.arange(128 * 4, dtype=jnp.float32).reshape(128, 4)
+
+    def _issue_one(self, page, now=0, delay=1):
+        st, ring = pool_init(64, 8), ring_init(4)
+        pool = jnp.arange(64 * 4, dtype=jnp.float32).reshape(64, 4)
+        st, ring = pool_issue(st, ring, jnp.asarray([page], jnp.int32),
+                              jnp.asarray([True]), jnp.int32(now),
+                              jnp.int32(delay))
+        return st, ring, pool
+
+    def test_issued_at_t_consumed_at_t1_is_prefetched_hit(self):
+        st, ring, pool = self._issue_one(5, now=0, delay=1)
+        hot = jnp.zeros((8, 4))
+        st, ring, hot, slot, data, info = pool_wait(
+            st, ring, hot, pool, jnp.int32(5), jnp.int32(1))
+        assert bool(info["prefetched_hit"]) and not bool(info["partial_hit"])
+        assert (data == pool[5]).all()
+        s = pool_stats(st, ring)
+        assert s["prefetch_hits"] == 1 and s["partial_hits"] == 0
+        assert s["latency_hidden_frac"] == 1.0
+
+    def test_consumed_at_t_while_in_flight_is_partial_hit(self):
+        st, ring, pool = self._issue_one(5, now=0, delay=1)
+        hot = jnp.zeros((8, 4))
+        st, ring, hot, slot, data, info = pool_wait(
+            st, ring, hot, pool, jnp.int32(5), jnp.int32(0))
+        assert bool(info["partial_hit"]) and not bool(info["prefetched_hit"])
+        assert (data == pool[5]).all()          # residual completed early
+        s = pool_stats(st, ring)
+        assert s["partial_hits"] == 1 and s["prefetch_hits"] == 1
+        assert s["latency_hidden_frac"] == 0.0 and s["inflight_at_end"] == 0
+
+    def test_full_ring_drops_not_issues(self):
+        st, ring = pool_init(64, 8), ring_init(2)
+        st, ring = pool_issue(st, ring, jnp.arange(4, dtype=jnp.int32),
+                              jnp.ones((4,), bool), jnp.int32(0), jnp.int32(1))
+        s = pool_stats(st, ring)
+        assert s["prefetch_issued"] == 2 and s["ring_drops"] == 2
+        assert s["inflight_at_end"] == 2
+
+    def test_data_always_correct_async(self):
+        for sched in (jnp.arange(100, dtype=jnp.int32),
+                      jax.random.randint(jax.random.PRNGKey(0), (100,), 0, 128),
+                      jnp.arange(0, 300, 3, dtype=jnp.int32) % 128):
+            st, sums, _ = stream_consume(self._pool(), sched, self.GEOM,
+                                         async_datapath=True)
+            expect = self._pool()[sched].sum(-1)
+            np.testing.assert_allclose(np.asarray(sums), np.asarray(expect))
+            _assert_decomposition(stream_stats(st))
+
+    def test_sequential_hides_latency(self):
+        sched = jnp.arange(100, dtype=jnp.int32)
+        st, _, info = stream_consume(self._pool(), sched, self.GEOM,
+                                     async_datapath=True)
+        s = stream_stats(st)
+        assert float(info["pref_hit"][20:].mean()) > 0.95
+        assert s["latency_hidden_frac"] == 1.0 and s["pollution"] == 0
+
+    def test_longer_arrival_delay_yields_partial_hits(self):
+        geom = dataclasses.replace(self.GEOM, arrival_delay=2)
+        sched = jnp.arange(100, dtype=jnp.int32)
+        st, _, info = stream_consume(self._pool(), sched, geom,
+                                     async_datapath=True)
+        s = stream_stats(st)
+        assert s["partial_hits"] > 0 and s["latency_hidden_frac"] < 1.0
+        # partials still serve the consumer: coverage stays high
+        assert s["coverage"] > 0.9
+        _assert_decomposition(s)
+
+    def test_zero_ring_bit_equivalent_to_sync(self):
+        geom = dataclasses.replace(self.GEOM, ring_size=0)
+        for sched in (jnp.arange(80, dtype=jnp.int32),
+                      jax.random.randint(jax.random.PRNGKey(1), (80,), 0, 128)):
+            st_a, sums_a, info_a = stream_consume(self._pool(), sched, geom,
+                                                  async_datapath=True)
+            st_s, sums_s, info_s = stream_consume(self._pool(), sched, geom,
+                                                  async_datapath=False)
+            np.testing.assert_array_equal(np.asarray(sums_a), np.asarray(sums_s))
+            for k in ("hit", "pref_hit", "partial_hit"):
+                np.testing.assert_array_equal(np.asarray(info_a[k]),
+                                              np.asarray(info_s[k]), err_msg=k)
+            for k, v in st_s["pool_meta"].items():
+                np.testing.assert_array_equal(np.asarray(st_a["pool_meta"][k]),
+                                              np.asarray(v), err_msg=k)
+
+    def test_sync_decomposition_sums_too(self):
+        for sched in (jnp.arange(100, dtype=jnp.int32),
+                      jax.random.randint(jax.random.PRNGKey(2), (100,), 0, 128)):
+            st, _, _ = stream_consume(self._pool(), sched, self.GEOM)
+            s = stream_stats(st)
+            assert s["partial_hits"] == 0 and s["inflight_at_end"] == 0
+            _assert_decomposition(s)
+
+    def test_multi_stream_async_isolation(self):
+        scheds = jnp.stack([jnp.arange(80, dtype=jnp.int32),
+                            (jnp.arange(80, dtype=jnp.int32) * 3) % 128])
+        st, sums, info = multi_stream_consume(self._pool(), scheds, self.GEOM,
+                                              async_datapath=True)
+        assert float(info["pref_hit"][0, 20:].mean()) > 0.9
+        assert float(info["pref_hit"][1, 20:].mean()) > 0.9
+        expect = self._pool()[scheds].sum(-1)
+        np.testing.assert_allclose(np.asarray(sums), np.asarray(expect))
+
+    def test_more_ring_slack_never_loses_hits(self):
+        """Deterministic slice of the hypothesis property (see
+        tests/test_async_datapath.py): with eviction pressure off, growing
+        the in-flight ring can only land a superset of prefetches."""
+        pool = jnp.arange(64 * 4, dtype=jnp.float32).reshape(64, 4)
+        for mult in (1, 3, 5):
+            sched = (jnp.arange(120, dtype=jnp.int32) * mult) % 64
+            prev_hits = prev_pref = -1
+            for ring in (1, 2, 4, 8, 16):
+                geom = PrefetchedStream(n_pages=64, n_slots=64, page_elems=4,
+                                        ring_size=ring)
+                st, _, _ = stream_consume(pool, sched, geom,
+                                          async_datapath=True)
+                s = stream_stats(st)
+                assert s["hits"] >= prev_hits
+                assert s["prefetch_hits"] >= prev_pref
+                prev_hits, prev_pref = s["hits"], s["prefetch_hits"]
+                _assert_decomposition(s)
+
+
 class TestExpertPaging:
     def test_skewed_routing_gets_hits_random_throttles(self):
         ep = ExpertPrefetcher(n_experts=16, n_hot=6, block_elems=8)
@@ -93,3 +237,14 @@ class TestExpertPaging:
         issued_rnd = pool_stats(st2["pool_meta"])["prefetch_issued"]
         assert hits_cyc > 50           # cyclic stride +1 detected
         assert issued_rnd < 30         # randomness -> throttled
+
+    def test_async_expert_stream_matches_hits(self):
+        ep = ExpertPrefetcher(n_experts=16, n_hot=6, block_elems=8,
+                              async_datapath=True)
+        weights = jnp.arange(16 * 8, dtype=jnp.float32).reshape(16, 8)
+        st = ep.init()
+        cyc = jnp.asarray(np.tile(np.arange(4), 40), jnp.int32)
+        st, info = ep.consume_route_trace(st, weights, cyc)
+        s = stream_stats(st)
+        assert s["prefetch_hits"] > 50
+        _assert_decomposition(s)

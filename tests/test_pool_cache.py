@@ -63,6 +63,24 @@ class TestPool:
             st, hot, _, _ = _serve(st, hot, self.pool, [p], [False])
         assert pool_stats(st)["alloc_scans"] == 0
 
+    def test_lazy_prefetched_hit_keeps_slot_mapped(self):
+        """Regression: lazy mode must NOT free the slot on a prefetched hit —
+        the mapping stays live until LRU eviction, so a freed slot would be
+        reallocated while page_slot still points at it (phantom hit serving
+        another page's data)."""
+        st = pool_init(64, 8)
+        hot = jnp.zeros((8, 4))
+        st, hot, _, _ = _serve(st, hot, self.pool, [5], [True], lazy=True)
+        st, hot, _, info = _serve(st, hot, self.pool, [5], [False], lazy=True)
+        assert bool(info["prefetched_hit"][0])
+        # fill remaining free slots so a leaked slot would get reused
+        st, hot, _, _ = _serve(st, hot, self.pool, [1, 2, 3, 4, 6, 7, 8],
+                               [False] * 7, lazy=True)
+        st, hot, slots, info = _serve(st, hot, self.pool, [5], [False],
+                                      lazy=True)
+        assert bool(info["hit"][0])
+        assert (hot[slots[0]] == self.pool[5]).all()
+
     def test_out_of_range_requests_ignored(self):
         st = pool_init(64, 8)
         hot = jnp.zeros((8, 4))
@@ -85,6 +103,15 @@ class TestPageCache:
         c.insert_prefetch(5, now=0.0, ready_t=4.0)
         hit, pf, wait = c.lookup(5, now=1.0)
         assert hit and wait == pytest.approx(3.0)
+        assert c.stats.partial_hits == 1 and c.stats.prefetch_hits == 1
+        assert c.stats.latency_hidden_frac == 0.0
+
+    def test_arrived_hit_is_not_partial(self):
+        c = PageCache(8, eviction="eager")
+        c.insert_prefetch(5, now=0.0, ready_t=1.0)
+        c.lookup(5, now=2.0)
+        assert c.stats.partial_hits == 0 and c.stats.prefetch_hits == 1
+        assert c.stats.latency_hidden_frac == 1.0
 
     def test_lru_scan_stall_charged(self):
         c = PageCache(4, eviction="lru", high_watermark=2.0)  # no bg scan
@@ -106,3 +133,15 @@ class TestPageCache:
         c.lookup(1, 1.0)
         c.drain_unconsumed()
         assert c.stats.pollution == 1
+
+    def test_drain_separates_inflight_from_pollution(self):
+        c = PageCache(8, eviction="eager")
+        c.insert_prefetch(1, now=0.0, ready_t=1.0)    # landed, never hit
+        c.insert_prefetch(2, now=0.0, ready_t=9.0)    # still in flight at end
+        c.drain_unconsumed(now=5.0)
+        assert c.stats.pollution == 1
+        assert c.stats.inflight_at_end == 1
+        # decomposition: issued == hits + pollution + inflight_at_end
+        assert c.stats.prefetch_issued == (c.stats.prefetch_hits
+                                           + c.stats.pollution
+                                           + c.stats.inflight_at_end)

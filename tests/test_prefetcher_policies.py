@@ -8,10 +8,8 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import traces
 from repro.core.cache import PageCache
-from repro.core.prefetcher import (LeapPrefetcher, NextNLinePrefetcher,
-                                   ReadAheadPrefetcher, StridePrefetcher,
-                                   make_prefetcher)
-from repro.core.simulator import run_policy_matrix, simulate
+from repro.core.prefetcher import LeapPrefetcher, make_prefetcher
+from repro.core.simulator import simulate
 
 
 def _run(trace, name, capacity=64, **kw):

@@ -1,7 +1,6 @@
 """Trace simulator invariants + latency-model calibration checks."""
 
 import numpy as np
-import pytest
 
 from repro.core import traces
 from repro.core.cache import PageCache

@@ -11,7 +11,7 @@ import pytest
 
 from repro.checkpoint import (AsyncCheckpointer, latest_step,
                               restore_checkpoint, save_checkpoint)
-from repro.data import PrefetchQueue, SyntheticSource, make_pipeline
+from repro.data import PrefetchQueue, make_pipeline
 from repro.optim import cosine_warmup, linear_warmup, make_optimizer
 from repro.runtime import (StepTimeMonitor, Watchdog, compress_int8,
                            decompress_int8, init_error_feedback,

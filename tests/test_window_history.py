@@ -4,7 +4,7 @@ import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
 from repro.core.history import AccessHistory
 from repro.core.window import PrefetchWindow, round_up_pow2, _round_up_pow2_jax
