@@ -1,4 +1,4 @@
-"""Shared benchmark plumbing: runners, CSV writing, result tables."""
+"""Shared benchmark plumbing: runners, CSV writing, result tables, smoke."""
 
 from __future__ import annotations
 
@@ -7,6 +7,16 @@ import os
 import time
 
 RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+
+# CI smoke mode: every suite registered in benchmarks.run executes end-to-end
+# at tiny sizes so new benchmarks cannot rot unexercised. Headline numbers are
+# meaningless at smoke sizes — the gate is "runs and writes its CSV".
+SMOKE = os.environ.get("REPRO_BENCH_SMOKE", "") not in ("", "0")
+
+
+def sized(full, smoke):
+    """Pick the benchmark's driving size: ``smoke`` under REPRO_BENCH_SMOKE=1."""
+    return smoke if SMOKE else full
 
 
 def write_csv(name: str, rows: list[dict]) -> str:

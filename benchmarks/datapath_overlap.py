@@ -31,10 +31,10 @@ from repro.core.simulator import LATENCY_MODELS
 from repro.paging.prefetch_serving import (PrefetchedStream, stream_consume,
                                            stream_stats)
 
-from .common import write_csv
+from .common import sized, write_csv
 
-N_PAGES, N_SLOTS, PAGE_ELEMS, T = 512, 48, 64, 400
-RING_SIZES = (2, 8, 16)
+N_PAGES, N_SLOTS, PAGE_ELEMS, T = 512, 48, 64, sized(400, 80)
+RING_SIZES = sized((2, 8, 16), (2, 8))
 MODEL = LATENCY_MODELS["rdma_lean"]
 
 

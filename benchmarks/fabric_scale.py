@@ -18,7 +18,7 @@ from __future__ import annotations
 from repro.core import traces
 from repro.fabric import FabricScenario, TenantSpec, run_fabric, slowdowns
 
-from .common import write_csv
+from .common import sized, write_csv
 
 # tenant archetypes cycled to build an N-tenant population
 _KINDS = ("sequential", "powergraph", "stride10", "voltdb",
@@ -58,7 +58,7 @@ def _population(n_tenants: int, n: int, capacity: int,
 
 
 def _row(tag: str, n_tenants: int, arb: str, capacity: int,
-         hetero: bool = False, n: int = 2500) -> dict:
+         hetero: bool = False, n: int = sized(2500, 250)) -> dict:
     specs = _population(n_tenants, n, capacity, hetero)
     rep = run_fabric(FabricScenario(
         specs, data_path="isolated", arbitration=arb, seed=42))
@@ -95,13 +95,14 @@ def run() -> tuple[list[dict], dict]:
                     and r["cache"] == cap)
 
     # interference cost at 4 tenants: contended completion vs solo runs
-    specs4 = _population(4, 2500, 128)
+    n4 = sized(2500, 250)
+    specs4 = _population(4, n4, 128)
     contended = run_fabric(FabricScenario(specs4, data_path="isolated",
                                           arbitration="per_tenant_qp",
                                           seed=42))
     solo = {s.name: run_fabric(FabricScenario(
         [s], data_path="isolated", arbitration="per_tenant_qp",
-        seed=42)).tenants[0].completion_time for s in _population(4, 2500, 128)}
+        seed=42)).tenants[0].completion_time for s in _population(4, n4, 128)}
     sd = slowdowns(contended, solo)
 
     fifo8, qp8 = _sel(8, "fifo", 128), _sel(8, "per_tenant_qp", 128)

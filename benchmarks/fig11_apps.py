@@ -17,13 +17,13 @@ from repro.core.cache import PageCache
 from repro.core.prefetcher import make_prefetcher
 from repro.core.simulator import simulate
 
-from .common import write_csv
+from .common import sized, write_csv
 
 APPS = ("powergraph", "numpy", "voltdb", "memcached")
 
 
 def _trace(app: str, limit: str) -> np.ndarray:
-    n = 16000 if limit == "50" else 24000
+    n = sized(16000, 400) if limit == "50" else sized(24000, 600)
     tr = traces.TRACES[app](n=n)
     if limit == "25":
         rng = np.random.default_rng(9)

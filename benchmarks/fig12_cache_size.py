@@ -12,7 +12,7 @@ from repro.core.cache import PageCache
 from repro.core.prefetcher import make_prefetcher
 from repro.core.simulator import simulate
 
-from .common import write_csv
+from .common import sized, write_csv
 
 APPS = ("powergraph", "numpy", "voltdb", "memcached")
 SIZES = (8, 16, 64, 4096)       # slots; 4096 ~ "unlimited"
@@ -21,7 +21,7 @@ SIZES = (8, 16, 64, 4096)       # slots; 4096 ~ "unlimited"
 def run() -> tuple[list[dict], dict]:
     rows, derived = [], {}
     for app in APPS:
-        tr = traces.TRACES[app](n=12000)
+        tr = traces.TRACES[app](n=sized(12000, 400))
         base_t = None
         for cap in sorted(SIZES, reverse=True):
             r = simulate(tr, make_prefetcher("leap"),

@@ -22,7 +22,7 @@ from __future__ import annotations
 from repro.core import traces
 from repro.fabric import FabricScenario, TenantSpec, run_fabric
 
-from .common import write_csv
+from .common import sized, write_csv
 
 APPS = ("powergraph", "numpy", "voltdb", "memcached")
 
@@ -37,7 +37,7 @@ def _specs(n: int) -> list[TenantSpec]:
 
 
 def run() -> tuple[list[dict], dict]:
-    n = 6000
+    n = sized(6000, 300)
     shared = run_fabric(FabricScenario(
         _specs(n), data_path="shared", shared_policy="read_ahead",
         shared_cache_capacity=512, shared_eviction="lru",

@@ -14,9 +14,9 @@ from repro.core.cache import PageCache
 from repro.core.prefetcher import make_prefetcher
 from repro.core.simulator import simulate
 
-from .common import write_csv
+from .common import sized, write_csv
 
-N = 20000
+N = sized(20000, 400)
 
 
 def run() -> tuple[list[dict], dict]:

@@ -12,7 +12,7 @@ from repro.core import traces
 from repro.core.traces import classify_windows
 from repro.core.trend import boyer_moore
 
-from .common import write_csv
+from .common import sized, write_csv
 
 APPS = ("powergraph", "numpy", "voltdb", "memcached")
 
@@ -31,7 +31,7 @@ def run() -> tuple[list[dict], dict]:
     rows = []
     derived = {}
     for app in APPS:
-        tr = traces.TRACES[app](n=8000)
+        tr = traces.TRACES[app](n=sized(8000, 400))
         for x in (2, 4, 8):
             c = classify_windows(tr, x)
             rows.append({"app": app, "X": x,

@@ -14,14 +14,14 @@ from repro.core.cache import PageCache
 from repro.core.prefetcher import make_prefetcher
 from repro.core.simulator import LATENCY_MODELS, LatencyModel, simulate
 
-from .common import write_csv
+from .common import sized, write_csv
 
 SSD = LatencyModel("ssd_block", 0.8, 120.0, 40.0, 34.0, 0.9, 0.01)
 HDD = LATENCY_MODELS["disk_block"]
 
 
 def run() -> tuple[list[dict], dict]:
-    tr = traces.powergraph_like(20000)
+    tr = traces.powergraph_like(sized(20000, 500))
     rows, totals = [], {}
     for medium, model in (("hdd", HDD), ("ssd", SSD)):
         for name in ("read_ahead", "leap"):

@@ -13,13 +13,13 @@ from repro.core.cache import PageCache
 from repro.core.prefetcher import make_prefetcher
 from repro.core.simulator import simulate
 
-from .common import write_csv
+from .common import sized, write_csv
 
 POLICIES = ("leap", "next_n_line", "stride", "read_ahead")
 
 
 def run() -> tuple[list[dict], dict]:
-    tr = traces.powergraph_like(20000)
+    tr = traces.powergraph_like(sized(20000, 500))
     rows, res = [], {}
     for name in POLICIES:
         cache = PageCache(256, eviction="eager" if name == "leap" else "lru")

@@ -19,13 +19,13 @@ import numpy as np
 from repro.core.pool import pool_stats
 from repro.paging.prefetch_serving import PrefetchedStream, stream_consume
 
-from .common import write_csv
+from .common import sized, write_csv
 
 GEOM = PrefetchedStream(n_pages=512, n_slots=48, page_elems=64)
 
 
 def _schedules():
-    T = 400
+    T = sized(400, 80)
     rng = np.random.default_rng(0)
     return {
         "kv_sequential_sweep": np.arange(T) % 512,

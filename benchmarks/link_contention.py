@@ -1,0 +1,167 @@
+"""Shared-link contention: demand-first budget arbitration vs blocking batch.
+
+The paper's §4.4/Fig. 13 concern, in-model: all fetches of all streams
+serialize on one RDMA link, so an over-aggressive prefetcher "wastes I/O
+bandwidth" and delays everyone's demand fetches. The budgeted jitted path
+(``multi_stream_consume(..., link_budget=B)``, DESIGN.md §5) arbitrates a
+per-step page budget across streams with demand fetches strictly first —
+surplus prefetches arrive late (``deferred``) instead of sitting in front
+of a faulting consumer.
+
+The sweep crosses streams x link budget x data path and prices each
+access's demand latency with the ``rdma_lean`` model, where a step's
+priority traffic needs ``q`` link rounds of ``B`` pages:
+
+* **sync** (read-ahead-style baseline): every issued candidate rides the
+  blocking batch, so ``q = ceil((demands + prefetches) / B)`` — prefetch
+  volume multiplies every consumer's queueing, and even a hit costs the
+  full batch when the stream issued candidates alongside it.
+* **async + budget** (demand-first): prefetches only ever get leftover
+  budget, so ``q = ceil(demands / B)``; full hits cost ``t_hit`` and
+  partial hits the expected residual of the in-flight transfer.
+
+Headline: demand latency on the demand-first path stays strictly below
+the read-ahead-style baseline at every finite budget and degrades
+gracefully as the budget shrinks, while the baseline collapses (its
+prefetch traffic sits in front of every demand). A derived row
+cross-checks the jitted per-stream counts against the lock-step fabric
+reference (``repro.fabric.run_linkstep``) at the tightest budget.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.simulator import LATENCY_MODELS
+from repro.fabric.linkstep import run_linkstep
+from repro.paging.prefetch_serving import (PrefetchedStream,
+                                           multi_stream_consume,
+                                           stream_stats_at)
+
+from .common import sized, write_csv
+
+N_PAGES = sized(512, 64)
+N_SLOTS = N_PAGES                      # eviction-free: match the linkstep twin
+PAGE_ELEMS = sized(32, 4)
+T = sized(240, 40)
+N_STREAMS = sized(4, 2)
+BUDGETS = sized((None, 8, 4, 2, 1), (None, 2))
+MODEL = LATENCY_MODELS["rdma_lean"]
+_INF_BUDGET = 1 << 20                  # "infinite": bit-equivalent to None
+
+
+def _schedules(n_streams: int) -> np.ndarray:
+    """Mixed per-stream patterns: trend-friendly strides + one random."""
+    rng = np.random.default_rng(0)
+    rows = []
+    for s in range(n_streams):
+        if s == n_streams - 1 and n_streams > 1:
+            rows.append(rng.integers(0, N_PAGES, T))
+        else:
+            rows.append((np.arange(T) * (s + 1) + 37 * s) % N_PAGES)
+    return np.stack(rows).astype(np.int32)
+
+
+def _rounds(pages_per_step: np.ndarray, budget: int | None) -> np.ndarray:
+    """Link rounds needed to move ``pages_per_step`` at ``budget`` pages/round."""
+    if budget is None:
+        return (pages_per_step > 0).astype(np.float64)
+    return np.ceil(pages_per_step / budget)
+
+
+def _mean_access_us(info: dict, budget: int | None, sync: bool) -> float:
+    """Model-priced mean per-access demand latency (critical-path bytes)."""
+    fetched = np.asarray(info["fetched"])              # [S, T]
+    partial = np.asarray(info["partial_hit"])
+    issued = np.asarray(info["issued"])
+    d_t = fetched.sum(0).astype(np.float64)            # [T]
+    p_t = issued.sum(0).astype(np.float64)
+    if sync:
+        # prefetches ride the blocking batch: they queue in front of demands,
+        # and a stream that issued candidates blocks on the batch even on a hit
+        q = _rounds(d_t + p_t, budget)[None]
+        lat = np.where(fetched | (issued > 0), q * MODEL.t_fabric, MODEL.t_hit)
+    else:
+        # demand-first: only demand traffic queues; a partial hit pays the
+        # expected residual of its in-flight transfer at the queue's rate
+        q = _rounds(d_t, budget)[None]
+        lat = np.where(partial, MODEL.t_hit + 0.5 * MODEL.t_fabric * q,
+                       np.where(fetched, q * MODEL.t_fabric, MODEL.t_hit))
+    return float(lat.mean())
+
+
+def _agg(st) -> dict:
+    """Aggregate per-stream pool counters of a stacked multi-stream state."""
+    per = [stream_stats_at(st, i) for i in range(st["hot"].shape[0])]
+    keys = ("hits", "misses", "prefetch_hits", "partial_hits", "deferred",
+            "pollution", "ring_drops", "prefetch_issued")
+    out = {k: sum(p[k] for p in per) for k in keys}
+    out["coverage"] = (out["prefetch_hits"]
+                       / max(1, out["hits"] + out["misses"]))
+    return out
+
+
+def _crossval(scheds: np.ndarray, geom: PrefetchedStream, budget: int) -> bool:
+    """Jitted per-stream counts == lock-step fabric reference counts?"""
+    st, _, _ = multi_stream_consume(
+        jnp.zeros((N_PAGES, PAGE_ELEMS), jnp.float32), jnp.asarray(scheds),
+        geom, async_datapath=True, link_budget=budget)
+    rep = run_linkstep(scheds, N_PAGES, budget, ring_size=geom.ring_size,
+                       arrival_delay=geom.arrival_delay, pw_max=geom.pw_max,
+                       h_size=geom.h_size, n_split=geom.n_split)
+    for i in range(len(scheds)):
+        j = stream_stats_at(st, i)
+        r = rep.stream_summary(i)
+        if any(j[k] != r[k] for k in r):
+            return False
+    return True
+
+
+def run() -> tuple[list[dict], dict]:
+    pool = jnp.arange(N_PAGES * PAGE_ELEMS,
+                      dtype=jnp.float32).reshape(N_PAGES, PAGE_ELEMS)
+    scheds = _schedules(N_STREAMS)
+    geom = PrefetchedStream(n_pages=N_PAGES, n_slots=N_SLOTS,
+                            page_elems=PAGE_ELEMS, ring_size=8)
+    rows, derived = [], {}
+    stall = {}
+    for budget in BUDGETS:
+        for path in ("sync", "async"):
+            if path == "sync":
+                st, _, info = multi_stream_consume(
+                    pool, jnp.asarray(scheds), geom, async_datapath=False,
+                    link_budget=budget if budget is not None else _INF_BUDGET)
+            else:
+                st, _, info = multi_stream_consume(
+                    pool, jnp.asarray(scheds), geom, async_datapath=True,
+                    link_budget=budget if budget is not None else _INF_BUDGET)
+            a = _agg(st)
+            us = _mean_access_us(info, budget, sync=(path == "sync"))
+            stall[(path, budget)] = us
+            rows.append({
+                "streams": N_STREAMS, "budget": budget or "inf", "path": path,
+                "coverage": round(a["coverage"], 3),
+                "partial_hits": a["partial_hits"],
+                "deferred": a["deferred"],
+                "ring_drops": a["ring_drops"],
+                "pollution": a["pollution"],
+                "demand_us_per_access": round(us, 2),
+            })
+
+    # headline: demand-first degrades gracefully — its *added* latency under
+    # contention (vs its own uncontended baseline) stays below the blocking
+    # batch's, and its absolute latency wins at every finite budget
+    tight = min(b for b in BUDGETS if b is not None)
+    added_sync = stall[("sync", tight)] - stall[("sync", None)]
+    added_async = stall[("async", tight)] - stall[("async", None)]
+    derived["tight_budget"] = tight
+    derived["sync_added_us_at_tight"] = round(added_sync, 2)
+    derived["async_added_us_at_tight"] = round(added_async, 2)
+    derived["demand_first_graceful"] = bool(added_async < added_sync)
+    derived["async_beats_sync_at_every_budget"] = bool(all(
+        stall[("async", b)] < stall[("sync", b)]
+        for b in BUDGETS if b is not None))
+    derived["crossval_counts_match"] = _crossval(scheds, geom, tight)
+    write_csv("link_contention", rows)
+    return rows, derived

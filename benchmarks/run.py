@@ -14,7 +14,7 @@ import time
 from . import (datapath_overlap, fabric_scale, fig2_microbenchmark,
                fig3_patterns, fig8_slow_storage, fig9_10_prefetchers,
                fig11_apps, fig12_cache_size, fig13_multiapp, jax_stream,
-               roofline)
+               link_contention, roofline)
 from .common import fmt_table
 
 SUITES = {
@@ -28,6 +28,7 @@ SUITES = {
     "fabric_scale": fabric_scale.run,
     "jax_stream": jax_stream.run,
     "datapath_overlap": datapath_overlap.run,
+    "link_contention": link_contention.run,
     "roofline": roofline.run,
 }
 

@@ -14,6 +14,12 @@ different access patterns keep their own Leap detector + hot buffer over
 a shared disaggregated pool; the random stream throttles itself while
 the regular streams converge to prefetched hits.
 
+Part 3 — the same four streams on a *budgeted* shared link
+(``link_budget``, DESIGN.md §5): demand fetches are arbitrated first
+each step, surplus prefetches arrive late (``deferred``) — coverage
+survives because demands complete in-flight prefetches early as partial
+hits instead of queueing behind them.
+
 Run: PYTHONPATH=src python examples/multi_stream.py
 """
 
@@ -83,3 +89,15 @@ hits = [float(info["pref_hit"][i, T // 4:].mean()) for i in range(4)]
 assert min(hits[:3]) > 0.85 and hits[3] < 0.2
 print("multi_stream OK: isolation beats the shared path, regular streams "
       "converge, random throttles")
+
+# -- part 3: shared link with a per-step fetch budget -------------------------
+state_b, _, info_b = multi_stream_consume(pool, jnp.asarray(schedules), geom,
+                                          async_datapath=True, link_budget=2)
+deferred = int(np.asarray(info_b["link_deferred"]).sum())
+partials = int(np.asarray(info_b["partial_hit"]).sum())
+covered = float((np.asarray(info_b["pref_hit"])
+                 | np.asarray(info_b["partial_hit"]))[:3, T // 4:].mean())
+print(f"\nbudgeted link (2 pages/step across 4 streams): "
+      f"{deferred} prefetches deferred, {partials} partial hits, "
+      f"regular-stream coverage {covered:.3f}")
+assert covered > 0.85          # demand-first keeps serving the consumers

@@ -75,8 +75,12 @@ class PageCache:
         e.consumed = True
         e.last_access_t = now
         self.entries.move_to_end(page)           # LRU touch
-        if self.eviction == "eager":
+        if self.eviction == "eager" and wait == 0.0:
             # §4.3: page-table updated -> free the cache entry immediately.
+            # An entry whose transfer is still in flight (wait > 0) stays
+            # resident until ready_t: freeing it would turn a re-access
+            # before arrival into a full miss that re-pays the whole fetch,
+            # when only the residual transfer is actually outstanding.
             del self.entries[page]
         return True, prefetched_hit, wait
 
@@ -110,7 +114,14 @@ class PageCache:
     # -- eviction -----------------------------------------------------------
     def _evict_one(self) -> None:
         if self.eviction == "eager":
-            # FIFO among unconsumed prefetches (the only tracked entries).
+            if not self.prefetch_fifo:
+                # Only consumed-but-still-in-flight entries remain (kept
+                # resident until ready_t by lookup). Evicting one forfeits
+                # its residual-dedup benefit, not correctness: it was
+                # already served and is not pollution.
+                self.entries.popitem(last=False)
+                return
+            # FIFO among unconsumed prefetches (the normally tracked entries).
             page, _ = self.prefetch_fifo.popitem(last=False)
             self.stats.pollution += 1            # evicted before any hit
             del self.entries[page]
@@ -124,6 +135,14 @@ class PageCache:
     def _make_room(self, now: float) -> float:
         """Ensure space for one insert; returns stall charged to the caller."""
         stall = 0.0
+        if self.eviction == "eager" and self.occupancy >= self.capacity:
+            # Consumed entries kept resident only because their transfer was
+            # in flight at hit time are garbage once the transfer completes
+            # (eager would have freed them at the hit had they arrived):
+            # purge before evicting any *live* prefetch as pollution.
+            for page, e in list(self.entries.items()):
+                if e.consumed and e.ready_t <= now:
+                    del self.entries[page]
         if self.eviction == "lru" and self.occupancy >= self.high * self.capacity:
             # Background kswapd scan: scans the whole list to rank LRU-ness.
             target = int(self.low * self.capacity)

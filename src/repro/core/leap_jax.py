@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 
 from .history import DEFAULT_H_SIZE, init_history, push_history
-from .trend import DEFAULT_N_SPLIT, _masked_boyer_moore
+from .trend import DEFAULT_N_SPLIT, trend_ladder
 from .window import DEFAULT_PW_MAX, _round_up_pow2_jax
 
 
@@ -43,23 +43,17 @@ def leap_init(h_size: int = DEFAULT_H_SIZE, batch: tuple[int, ...] = ()) -> dict
 
 
 def _find_trend_from(state: dict, n_split: int) -> tuple[jax.Array, jax.Array]:
-    """FINDTREND ladder over the (already updated) history state."""
+    """FINDTREND ladder over the (already updated) history state.
+
+    Delegates to :func:`repro.core.trend.trend_ladder` so the fused
+    controller stays bit-equivalent to :func:`repro.core.trend.find_trend_jax`
+    (including the final-rung clamp to the full history).
+    """
     h_size = state["deltas"].shape[-1]
     idx = jnp.mod(state["head"] - jnp.arange(h_size), h_size)
     vals = state["deltas"][idx]                      # newest-first
     valid = jnp.arange(h_size) < state["count"]
-
-    best_delta = jnp.int32(0)
-    best_found = jnp.zeros((), jnp.bool_)
-    w = max(1, h_size // n_split)
-    while w <= h_size:
-        in_window = (jnp.arange(h_size) < w) & valid
-        cand, found = _masked_boyer_moore(vals, in_window)
-        take = found & ~best_found
-        best_delta = jnp.where(take, cand, best_delta)
-        best_found = best_found | found
-        w *= 2
-    return best_delta, best_found
+    return trend_ladder(vals, valid, n_split)
 
 
 @functools.partial(jax.jit, static_argnames=("n_split", "pw_max"))

@@ -9,6 +9,10 @@
   consumed (swap-cache semantics: the fault blocked on the residual only)
 * **In-flight at end** = prefetches whose transfer had not completed when the
   run ended — neither useful nor pollution, reported separately
+* **Deferred** = prefetches that completed later than their nominal arrival
+  time because the shared link's budget went to demand fetches or
+  earlier-issued prefetches first (DESIGN.md §5) — an annotation on the
+  other buckets, not a bucket of its own
 
 Percentile helpers report the p50/p90/p99/avg shapes the paper's figures use.
 """
@@ -28,6 +32,7 @@ class PrefetchStats:
     prefetch_issued: int = 0      # pages added to cache via prefetch
     prefetch_hits: int = 0        # first hits on prefetched entries
     partial_hits: int = 0         # subset of prefetch_hits still in flight
+    deferred: int = 0             # completed past nominal arrival (link budget)
     pollution: int = 0            # prefetched entries never hit
     inflight_at_end: int = 0      # prefetches not yet arrived at end of run
     timeliness: list = dataclasses.field(default_factory=list)
@@ -80,6 +85,7 @@ class PrefetchStats:
             "prefetch_issued": self.prefetch_issued,
             "prefetch_hits": self.prefetch_hits,
             "partial_hits": self.partial_hits,
+            "deferred": self.deferred,
             "latency_hidden_frac": round(self.latency_hidden_frac, 4),
             "pollution": self.pollution,
             "inflight_at_end": self.inflight_at_end,

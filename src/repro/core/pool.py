@@ -34,6 +34,13 @@ Two data paths share this metadata (DESIGN.md §4):
   charged only the residual (paper's swap-cache semantics, §4.2). Candidates
   issued at step *t* with ``delay=1`` land at the top of step *t+1* — the
   prefetch DMA overlaps the consumer's compute instead of blocking it.
+
+The async pair also carries the hooks for the *shared-link budget
+arbitration* layer (DESIGN.md §5): :func:`pool_issue` stamps each entry with
+a global issue-order ``seq``, :func:`pool_wait` accepts a per-entry landing
+grant (``land_ok``) computed by the arbiter from the per-step link budget,
+and entries that complete past their nominal deadline count ``n_deferred``.
+Per-stream callers that never budget-gate can ignore all three.
 """
 
 from __future__ import annotations
@@ -82,6 +89,10 @@ def pool_init(n_pages: int, n_slots: int) -> dict:
         # Async-path only: demand accesses that completed a still-in-flight
         # prefetch early (swap-cache partial hits, DESIGN.md §4).
         "n_partial_hits": jnp.int32(0),
+        # Budgeted-link only (DESIGN.md §5): prefetches that completed later
+        # than their nominal arrival deadline because the shared link budget
+        # was spent on demand fetches or earlier-issued prefetches.
+        "n_deferred": jnp.int32(0),
     }
 
 
@@ -93,7 +104,14 @@ def ring_init(capacity: int) -> dict:
 
     * ``page int32[capacity]``: in-flight page ids, ``-1`` = empty entry.
     * ``deadline int32[capacity]``: step-clock arrival time of each entry;
-      :func:`pool_wait` lands entries with ``deadline <= now``.
+      :func:`pool_wait` lands entries with ``deadline <= now``. Under a
+      shared link budget the deadline is the *earliest possible* arrival:
+      budget-gated entries stay in the ring past it and count
+      ``n_deferred`` when they finally complete (DESIGN.md §5).
+    * ``seq int32[capacity]``: global issue order of each entry — the
+      shared-link arbitration layer lands eligible entries across all
+      streams in ascending ``seq`` (FIFO over the link). Plain per-stream
+      callers can ignore it.
     * ``now int32``: the stream's step clock (owned by the stream layer;
       pool-level callers pass ``now`` explicitly).
     * ``n_drops int32``: issues rejected because the ring was full —
@@ -106,6 +124,7 @@ def ring_init(capacity: int) -> dict:
     return {
         "page": jnp.full((capacity,), NO_PAGE, jnp.int32),
         "deadline": jnp.zeros((capacity,), jnp.int32),
+        "seq": jnp.zeros((capacity,), jnp.int32),
         "now": jnp.int32(0),
         "n_drops": jnp.int32(0),
     }
@@ -238,8 +257,9 @@ def pool_access(st: dict, hot: jax.Array, pool: jax.Array,
       valid: ``bool[K]`` request mask.
 
     Returns ``(st, hot, slots, info)``: ``slots[K]`` is where each valid
-    request's data now resides in ``hot``; ``info`` has per-request ``hit``
-    and ``prefetched_hit`` masks.
+    request's data now resides in ``hot``; ``info`` has per-request ``hit``,
+    ``prefetched_hit`` and ``fetched`` (request moved a page over the link)
+    masks.
 
     Slots eager-freed during this batch (consumed prefetches, demand staging)
     are *unmapped immediately* but only returned to the free stack at the end
@@ -306,9 +326,10 @@ def pool_access(st: dict, hot: jax.Array, pool: jax.Array,
         freed_slot = jnp.where(was_pref_hit & (not lazy), s_safe,
                                jnp.where(give_back, slot_new, NO_SLOT))
         out_slot = jnp.where(resident, slot0, jnp.where(need_fetch, slot_new, NO_SLOT))
-        return (st, hot), (out_slot, resident, was_pref_hit, freed_slot)
+        return (st, hot), (out_slot, resident, was_pref_hit, need_fetch,
+                           freed_slot)
 
-    (st, hot), (slots, hits, pref_hits, freed) = jax.lax.scan(
+    (st, hot), (slots, hits, pref_hits, fetched, freed) = jax.lax.scan(
         step, (st, hot), jnp.arange(K))
 
     # Deferred free-stack pushes (see docstring).
@@ -318,12 +339,14 @@ def pool_access(st: dict, hot: jax.Array, pool: jax.Array,
         return jax.tree.map(lambda a, b: jnp.where(s >= 0, b, a), st, stp)
 
     st = jax.lax.fori_loop(0, K, push_body, st)
-    return st, hot, slots, {"hit": hits, "prefetched_hit": pref_hits}
+    return st, hot, slots, {"hit": hits, "prefetched_hit": pref_hits,
+                            "fetched": fetched}
 
 
 @functools.partial(jax.jit, static_argnames=("lazy",), donate_argnums=(0, 1))
 def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
-               now: jax.Array, delay: jax.Array, lazy: bool = False) -> tuple[dict, dict]:
+               now: jax.Array, delay: jax.Array, lazy: bool = False,
+               seq: jax.Array | None = None) -> tuple[dict, dict]:
     """Issue-phase of the async data path: enqueue prefetch candidates.
 
     Args:
@@ -335,7 +358,15 @@ def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
       delay: ``int32`` steps until arrival; entries get
              ``deadline = now + delay`` and are landed by the first
              :func:`pool_wait` whose ``now`` reaches it (``delay=1`` =
-             double-buffered: issued at *t*, consumable at *t+1*).
+             double-buffered: issued at *t*, consumable at *t+1*). Clamped
+             to >= 1: issue runs after the step's wait, so no landing can
+             precede the next step's wait anyway, and an unreachable
+             deadline in the past would miscount every landing as
+             budget-``deferred``.
+      seq:   optional ``int32[K]`` global issue-order stamps used by the
+             shared-link arbitration layer (ascending across every issue on
+             the link; see DESIGN.md §5). ``None`` stamps zeros — fine for
+             per-stream callers that never budget-gate landings.
 
     A candidate is enqueued only if it is in range, not hot-resident, and not
     already in flight (``n_prefetch_issued`` counts exactly the enqueued
@@ -350,6 +381,9 @@ def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
         return st, ring
     K = pages.shape[0]
     n_pages = st["page_slot"].shape[0]
+    delay = jnp.maximum(delay, 1)
+    if seq is None:
+        seq = jnp.zeros((K,), jnp.int32)
 
     def body(k, carry):
         st, ring = carry
@@ -365,6 +399,7 @@ def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
         ring_new = dict(ring)
         ring_new["page"] = ring["page"].at[pos].set(p_safe)
         ring_new["deadline"] = ring["deadline"].at[pos].set(now + delay)
+        ring_new["seq"] = ring["seq"].at[pos].set(seq[k])
         take = want & have_space
         ring = _tree_where(take, ring_new, ring)
         st = dict(st)
@@ -379,6 +414,7 @@ def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
 @functools.partial(jax.jit, static_argnames=("lazy",), donate_argnums=(0, 1, 2))
 def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
               page: jax.Array, now: jax.Array, lazy: bool = False,
+              land_ok: jax.Array | None = None,
               ) -> tuple[dict, dict, jax.Array, jax.Array, jax.Array, dict]:
     """Wait-phase of the async data path: land arrivals, serve one demand.
 
@@ -389,25 +425,33 @@ def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
       pool: ``[n_pages, ...]`` slow tier.
       page: ``int32`` demand page id of this step.
       now:  ``int32`` step clock (compared against ring deadlines).
+      land_ok: optional ``bool[capacity]`` landing grant from the shared-link
+        arbitration layer (DESIGN.md §5): a due entry whose grant is False
+        stays in the ring — the link had no spare budget for it this step.
+        ``None`` grants everything (the unbudgeted per-stream path).
 
     Two phases, mirroring the swap-in path over an async queue:
 
-    1. **Land** every ring entry with ``deadline <= now``: allocate a slot
-       (free stack, else eager FIFO / lazy LRU eviction), copy the page in,
-       and track it as an unconsumed prefetch — this models DMA that
-       completed during the *previous* step's compute.
+    1. **Land** every ring entry with ``deadline <= now`` (and a landing
+       grant): allocate a slot (free stack, else eager FIFO / lazy LRU
+       eviction), copy the page in, and track it as an unconsumed prefetch —
+       this models DMA that completed during the *previous* step's compute.
+       An entry landing at ``now > deadline`` was budget-deferred and counts
+       ``n_deferred``.
     2. **Serve** the demand. Hot-resident -> hit (a first hit on a
        prefetched slot counts ``n_prefetch_hits`` and eager-frees it).
        Still in the ring -> **partial hit**: the entry is completed
        immediately (removed from the ring, data copied), counting both
        ``n_prefetch_hits`` and ``n_partial_hits`` — the consumer blocked on
-       the residual transfer only. Otherwise -> demand miss and fetch.
+       the residual transfer only (a partial completing past its deadline
+       also counts ``n_deferred``). Otherwise -> demand miss and fetch.
 
     Returns ``(st, ring, hot, slot, data, info)`` where ``slot`` is the hot
     slot serving the demand (-1 if out of range), ``data`` is
     ``hot[slot]``, and ``info`` has scalar bool ``hit`` (resident full hit),
-    ``prefetched_hit`` (full hit on an unconsumed prefetch) and
-    ``partial_hit``. As with :func:`pool_access`, slots eager-freed here are
+    ``prefetched_hit`` (full hit on an unconsumed prefetch), ``partial_hit``
+    and ``fetched`` (this demand moved a page over the link: miss or
+    partial). As with :func:`pool_access`, slots eager-freed here are
     unmapped immediately but stay readable until the next pool call.
     """
     R = ring["page"].shape[0]
@@ -415,10 +459,13 @@ def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
 
     # ---- phase 1: land due arrivals -----------------------------------------
     if R > 0:
+        if land_ok is None:
+            land_ok = jnp.ones((R,), bool)
+
         def land(i, carry):
             st, ring, hot = carry
             p = ring["page"][i]
-            due = (p >= 0) & (ring["deadline"][i] <= now)
+            due = (p >= 0) & (ring["deadline"][i] <= now) & land_ok[i]
             p_safe = jnp.maximum(p, 0)
             resident = st["page_slot"][p_safe] >= 0
             commit = due & ~resident
@@ -433,6 +480,9 @@ def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
             # counted as pollution so the issue decomposition still sums.
             st = dict(st)
             st["n_pollution"] = st["n_pollution"] + (due & resident).astype(jnp.int32)
+            # Landing past the deadline = the shared-link budget deferred it.
+            st["n_deferred"] = (st["n_deferred"]
+                                + (due & (ring["deadline"][i] < now)).astype(jnp.int32))
             ring = dict(ring)
             ring["page"] = ring["page"].at[i].set(jnp.where(due, NO_PAGE, p))
             return st, ring, hot
@@ -456,6 +506,11 @@ def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
         ring = dict(ring)
         ring["page"] = jnp.where(partial, ring["page"].at[match_i].set(NO_PAGE),
                                  ring["page"])
+        # Early completion of an already-overdue (budget-gated) entry still
+        # finished later than its nominal deadline: count it deferred.
+        st["n_deferred"] = (st["n_deferred"]
+                            + (partial
+                               & (ring["deadline"][match_i] < now)).astype(jnp.int32))
     else:
         partial = jnp.zeros((), bool)
     miss = in_range & ~resident & ~partial
@@ -503,7 +558,7 @@ def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
                          jnp.where(need_fetch, slot_new, NO_SLOT))
     data = hot[jnp.maximum(out_slot, 0)]
     info = {"hit": resident, "prefetched_hit": was_pref_hit,
-            "partial_hit": partial}
+            "partial_hit": partial, "fetched": need_fetch}
     return st, ring, hot, out_slot, data, info
 
 
@@ -540,6 +595,7 @@ def pool_stats(st: dict, ring: dict | None = None) -> dict:
         "prefetch_issued": issued,
         "prefetch_hits": phits,
         "partial_hits": partial,
+        "deferred": g("n_deferred"),
         "pollution": g("n_pollution"),
         "resident_unused": resident_unused,
         "alloc_scans": g("n_alloc_scans"),

@@ -63,7 +63,13 @@ def boyer_moore(values) -> tuple[int, bool]:
 
 
 def find_trend(history: AccessHistory, n_split: int = DEFAULT_N_SPLIT) -> tuple[int, bool]:
-    """Alg. 1: doubling-window majority search, newest-first from H_head."""
+    """Alg. 1: doubling-window majority search, newest-first from H_head.
+
+    The final rung clamps to ``w = h_size``: when ``h_size // n_split`` is not
+    a power-of-two divisor of ``h_size`` (e.g. ``h_size=32, n_split=3`` probes
+    w=10, 20), pure doubling would overshoot and never examine the full
+    history, missing majorities that only exist over all ``h_size`` entries.
+    """
     h_size = history.h_size
     w = max(1, h_size // n_split)
     while True:
@@ -71,9 +77,9 @@ def find_trend(history: AccessHistory, n_split: int = DEFAULT_N_SPLIT) -> tuple[
         delta, found = boyer_moore(window)
         if found:
             return delta, True
-        w *= 2
-        if w > h_size:
+        if w >= h_size:
             return 0, False
+        w = min(w * 2, h_size)
 
 
 # --------------------------------------------------------------------------
@@ -99,26 +105,37 @@ def _masked_boyer_moore(vals: jax.Array, mask: jax.Array) -> tuple[jax.Array, ja
     return cand, found
 
 
-@functools.partial(jax.jit, static_argnames=("n_split",))
-def find_trend_jax(state: dict, n_split: int = DEFAULT_N_SPLIT) -> tuple[jax.Array, jax.Array]:
-    """JAX twin of :func:`find_trend` over a jittable history state.
+def trend_ladder(vals: jax.Array, valid: jax.Array, n_split: int,
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Static doubling-window ladder over newest-first deltas + validity mask.
 
-    The window ladder (w, 2w, 4w, ... H) is static, so it unrolls; the first
-    rung with a verified majority wins (selected with ``where`` cascades).
+    Shared by :func:`find_trend_jax` and the fused controller
+    (:mod:`repro.core.leap_jax`), so the twins' ladders cannot drift. The
+    widths are static, so the ladder unrolls at trace time; the first rung
+    with a verified majority wins (``where`` cascades). As in
+    :func:`find_trend`, the final rung clamps to the full history when pure
+    doubling from ``h_size // n_split`` would overshoot ``h_size``.
     """
-    h_size = state["deltas"].shape[-1]
-    idx = jnp.mod(state["head"] - jnp.arange(h_size), h_size)
-    vals = state["deltas"][idx]                      # newest-first
-    valid = jnp.arange(h_size) < state["count"]      # entries that exist
-
+    h_size = vals.shape[-1]
     best_delta = jnp.int32(0)
     best_found = jnp.zeros((), jnp.bool_)
     w = max(1, h_size // n_split)
-    while w <= h_size:
+    while True:
         in_window = (jnp.arange(h_size) < w) & valid
         cand, found = _masked_boyer_moore(vals, in_window)
         take = found & ~best_found
         best_delta = jnp.where(take, cand, best_delta)
         best_found = best_found | found
-        w *= 2
-    return best_delta, best_found
+        if w >= h_size:
+            return best_delta, best_found
+        w = min(w * 2, h_size)
+
+
+@functools.partial(jax.jit, static_argnames=("n_split",))
+def find_trend_jax(state: dict, n_split: int = DEFAULT_N_SPLIT) -> tuple[jax.Array, jax.Array]:
+    """JAX twin of :func:`find_trend` over a jittable history state."""
+    h_size = state["deltas"].shape[-1]
+    idx = jnp.mod(state["head"] - jnp.arange(h_size), h_size)
+    vals = state["deltas"][idx]                      # newest-first
+    valid = jnp.arange(h_size) < state["count"]      # entries that exist
+    return trend_ladder(vals, valid, n_split)

@@ -12,10 +12,13 @@ Layout (see DESIGN.md §3):
 * :mod:`tenants` — per-tenant specs + runtime (think time, bursts, churn).
 * :mod:`metrics` — per-tenant tail latency, fairness, link utilization.
 * :mod:`sim`     — scenario runner; also backs ``repro.core.simulate``.
+* :mod:`linkstep` — lock-step width-B link twin of the budgeted jitted
+  multi-stream path (DESIGN.md §5); the counts cross-validation bridge.
 """
 
 from .engine import EventEngine
 from .link import ARBITRATIONS, FabricLink, Request
+from .linkstep import LinkStepReport, run_linkstep
 from .metrics import (FabricReport, TenantReport, jain_index,
                       percentile_summary, slowdowns)
 from .sim import FabricScenario, run_fabric, run_single_stream
@@ -23,7 +26,7 @@ from .tenants import Tenant, TenantSpec
 
 __all__ = [
     "ARBITRATIONS", "EventEngine", "FabricLink", "FabricReport",
-    "FabricScenario", "Request", "Tenant", "TenantReport", "TenantSpec",
-    "jain_index", "percentile_summary", "run_fabric", "run_single_stream",
-    "slowdowns",
+    "FabricScenario", "LinkStepReport", "Request", "Tenant", "TenantReport",
+    "TenantSpec", "jain_index", "percentile_summary", "run_fabric",
+    "run_linkstep", "run_single_stream", "slowdowns",
 ]

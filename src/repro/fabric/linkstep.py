@@ -1,0 +1,188 @@
+"""Step-synchronous shared-link reference: width-B fabric in lock-step.
+
+This is the host-side twin of the *budgeted* jitted multi-stream path
+(``repro.paging.prefetch_serving.multi_stream_consume(...,
+link_budget=B)``, DESIGN.md §5): S streams advance in lock-step (one
+slow-tier access per stream per step) over a shared fabric link that can
+move ``budget`` pages per step. Arbitration is demand-first:
+
+1. The link carried last step's demand fetches with strict priority, so
+   prefetch *landing* capacity at step *t* is
+   ``max(0, budget - demand_fetches[t-1])``.
+2. Landing grants go to queued prefetches whose nominal arrival
+   (``issue_step + arrival_delay``) has passed, across all streams in
+   ascending global issue order (FIFO over the link). The surplus stays
+   queued past its arrival time; when such an entry finally completes —
+   by landing or by a demand finishing it early (partial hit) — it
+   counts as **deferred**.
+3. Per-stream controller, residency and in-flight queue stay private
+   (paper §4.1): only bandwidth is shared, never detector state.
+
+It is intentionally *not* the event-driven engine of ``repro.fabric.sim``
+(whose continuous clock ties progress to latency draws): lock-step is
+what makes its per-stream hit / partial / deferral counts *exactly*
+comparable to the jitted scan, giving the first quantitative bridge
+between the two subsystems. The controller is the NumPy
+:class:`repro.core.prefetcher.LeapPrefetcher` (itself pinned
+bit-equivalent to the jitted ``leap_step``), and the counters are
+:class:`repro.core.metrics.PrefetchStats` — the same pieces the event
+engine uses. ``tests/test_link_budget.py`` pins the jitted counts to this
+model across budgets, stream counts and patterns.
+
+Validity domain: the model tracks residency as plain sets, i.e. it
+assumes the hot buffer never evicts (choose ``n_slots`` in the jitted
+geometry large enough that the free stack cannot run dry — e.g.
+``n_slots >= n_pages``). Under eviction pressure the jitted path's FIFO
+pollution kicks in and the two intentionally diverge.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from ..core.history import DEFAULT_H_SIZE
+from ..core.metrics import PrefetchStats
+from ..core.prefetcher import LeapPrefetcher
+from ..core.trend import DEFAULT_N_SPLIT
+from ..core.window import DEFAULT_PW_MAX
+
+
+@dataclasses.dataclass
+class _Inflight:
+    """One queued prefetch transfer on the shared link."""
+
+    page: int
+    ready: int        # nominal arrival step: issue_step + arrival_delay
+    seq: int          # global issue order (step-major, stream, candidate)
+
+
+@dataclasses.dataclass
+class _Stream:
+    prefetcher: LeapPrefetcher
+    stats: PrefetchStats
+    resident: set          # landed, unconsumed prefetched pages (eager)
+    queue: list            # list[_Inflight], bounded by ring_size
+    drops: int = 0         # issues rejected on a full queue
+
+
+@dataclasses.dataclass
+class LinkStepReport:
+    """Per-stream counters + per-step link totals of one lock-step run."""
+
+    per_stream: list               # list[PrefetchStats]
+    drops: list                    # list[int] per stream
+    resident_unused: list          # list[int] per stream (end of run)
+    inflight_at_end: list          # list[int] per stream (end of run)
+    demand_fetches: list           # list[int] per step (all streams)
+    landed: list                   # list[int] per step
+    issued: list                   # list[int] per step
+
+    def stream_summary(self, i: int) -> dict:
+        """Counter dict shaped like ``repro.core.pool.pool_stats``."""
+        s = self.per_stream[i]
+        return {
+            "faults": s.faults,
+            "hits": s.cache_hits,
+            "misses": s.misses,
+            "prefetch_issued": s.prefetch_issued,
+            "prefetch_hits": s.prefetch_hits,
+            "partial_hits": s.partial_hits,
+            "deferred": s.deferred,
+            "pollution": s.pollution,
+            "resident_unused": self.resident_unused[i],
+            "inflight_at_end": self.inflight_at_end[i],
+            "ring_drops": self.drops[i],
+        }
+
+
+def run_linkstep(schedules, n_pages: int, budget: int | None,
+                 ring_size: int, arrival_delay: int = 1,
+                 pw_max: int = DEFAULT_PW_MAX, h_size: int = DEFAULT_H_SIZE,
+                 n_split: int = DEFAULT_N_SPLIT) -> LinkStepReport:
+    """Run ``schedules`` (``[S][T]`` page ids) through the lock-step link.
+
+    ``budget=None`` models private infinite links (every eligible prefetch
+    lands at its nominal arrival — the unbudgeted jitted path).
+    """
+    schedules = [[int(p) for p in row] for row in schedules]
+    S = len(schedules)
+    T = len(schedules[0]) if S else 0
+    arrival_delay = max(arrival_delay, 1)   # mirrors pool_issue's clamp
+    cap_inf = budget is None
+    streams = [_Stream(LeapPrefetcher(h_size=h_size, n_split=n_split,
+                                      pw_max=pw_max),
+                       PrefetchStats(), set(), []) for _ in range(S)]
+    demand_hist, landed_hist, issued_hist = [], [], []
+    d_prev = 0
+
+    for t in range(T):
+        # -- 1. landing grants: leftover budget, global issue order ----------
+        cap = math.inf if cap_inf else max(0, budget - d_prev)
+        eligible = sorted((e.seq, s, e) for s, st in enumerate(streams)
+                          for e in st.queue if e.ready <= t)
+        landed = 0
+        for _, s, e in eligible:
+            if landed >= cap:
+                break
+            st = streams[s]
+            st.queue.remove(e)
+            st.resident.add(e.page)
+            if e.ready < t:
+                st.stats.deferred += 1
+            landed += 1
+        landed_hist.append(landed)
+
+        # -- 2. serve each stream's demand (private residency) ---------------
+        d_t = 0
+        issued_t = 0
+        for s, st in enumerate(streams):
+            page = schedules[s][t]
+            st.stats.faults += 1
+            inflight = next((e for e in st.queue if e.page == page), None)
+            if page in st.resident:
+                # full prefetched hit; eager eviction frees it on first use
+                st.stats.cache_hits += 1
+                st.stats.prefetch_hits += 1
+                st.resident.discard(page)
+                pf_hit = True
+            elif inflight is not None:
+                # partial hit: the demand completes the transfer early and
+                # blocks on the residual only; it consumes demand bandwidth
+                st.queue.remove(inflight)
+                st.stats.cache_hits += 1
+                st.stats.prefetch_hits += 1
+                st.stats.partial_hits += 1
+                if inflight.ready < t:
+                    st.stats.deferred += 1
+                d_t += 1
+                pf_hit = True
+            else:
+                st.stats.misses += 1
+                d_t += 1
+                pf_hit = False
+
+            # -- 3. controller + globally ordered issue ----------------------
+            for k, cand in enumerate(st.prefetcher.on_fault(page, pf_hit)):
+                if cand < 0 or cand >= n_pages:
+                    continue
+                if cand in st.resident or any(e.page == cand
+                                              for e in st.queue):
+                    continue
+                if len(st.queue) >= ring_size:
+                    st.drops += 1
+                    continue
+                st.queue.append(_Inflight(cand, t + arrival_delay,
+                                          (t * S + s) * pw_max + k))
+                st.stats.prefetch_issued += 1
+                issued_t += 1
+        demand_hist.append(d_t)
+        issued_hist.append(issued_t)
+        d_prev = d_t
+
+    return LinkStepReport(
+        per_stream=[st.stats for st in streams],
+        drops=[st.drops for st in streams],
+        resident_unused=[len(st.resident) for st in streams],
+        inflight_at_end=[len(st.queue) for st in streams],
+        demand_fetches=demand_hist, landed=landed_hist, issued=issued_hist)

@@ -21,8 +21,9 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro.models.model import build_model
-from repro.paging.prefetch_serving import (PrefetchedStream, stream_stats,
-                                           stream_consume)
+from repro.paging.prefetch_serving import (PrefetchedStream,
+                                           multi_stream_consume, stream_stats,
+                                           stream_stats_at, stream_consume)
 
 
 def main(argv=None) -> dict:
@@ -43,6 +44,17 @@ def main(argv=None) -> dict:
                          "fraction (DESIGN.md §4)")
     ap.add_argument("--ring-size", type=int, default=8,
                     help="in-flight ring capacity for --async-datapath")
+    ap.add_argument("--streams", type=int, default=1,
+                    help="with --paged: drive this many concurrent page "
+                         "streams (one per request, batch-major) instead of "
+                         "one concatenated schedule — the paper's Fig. 13 "
+                         "multi-stream serving shape")
+    ap.add_argument("--link-budget", type=int, default=None,
+                    help="with --paged --streams > 1: pages/step the shared "
+                         "fabric link can move across all streams; demand "
+                         "fetches are arbitrated first and surplus "
+                         "prefetches arrive late (reported as deferred — "
+                         "DESIGN.md §5). Default: private infinite links")
     ap.add_argument("--page-size", type=int, default=4)
     args = ap.parse_args(argv)
 
@@ -90,18 +102,40 @@ def main(argv=None) -> dict:
                                 * args.page_size,
                                 ring_size=args.ring_size)
         pool = jnp.zeros((geom.n_pages, geom.page_elems), jnp.float32)
-        sched = jnp.asarray(np.concatenate(
-            [np.arange(npages) + b * npages for b in range(B)]), jnp.int32)
-        st, _, info = stream_consume(pool, sched, geom,
-                                     async_datapath=args.async_datapath)
-        s = stream_stats(st)
-        result["paged_prefetch_hit_rate"] = round(s["coverage"], 3)
-        result["paged_pollution"] = s["pollution"]
-        if args.async_datapath:
-            result["paged_partial_hits"] = s["partial_hits"]
-            result["paged_latency_hidden_frac"] = round(
-                s["latency_hidden_frac"], 3)
-            result["paged_inflight_at_end"] = s["inflight_at_end"]
+        if args.streams > 1:
+            # one stream per request (round-robin over the batch), all
+            # sharing the fabric link under the per-step budget
+            S = args.streams
+            scheds = jnp.asarray(np.stack(
+                [np.arange(npages) + (s % B) * npages for s in range(S)]),
+                jnp.int32)
+            st, _, info = multi_stream_consume(
+                pool, scheds, geom, async_datapath=args.async_datapath,
+                link_budget=args.link_budget)
+            per = [stream_stats_at(st, i) for i in range(S)]
+            result["paged_streams"] = S
+            result["paged_prefetch_hit_rate"] = round(
+                float(np.mean([p["coverage"] for p in per])), 3)
+            result["paged_pollution"] = sum(p["pollution"] for p in per)
+            result["paged_partial_hits"] = sum(p["partial_hits"] for p in per)
+            result["paged_deferred"] = sum(p["deferred"] for p in per)
+            result["paged_ring_drops"] = sum(p["ring_drops"] for p in per)
+            if args.link_budget is not None:
+                result["paged_link_budget"] = args.link_budget
+                result["paged_link_demand_fetches"] = int(
+                    np.sum(np.asarray(info["link_demand_fetches"])))
+        else:
+            st, _, info = stream_consume(pool, jnp.asarray(np.concatenate(
+                [np.arange(npages) + b * npages for b in range(B)]),
+                jnp.int32), geom, async_datapath=args.async_datapath)
+            s = stream_stats(st)
+            result["paged_prefetch_hit_rate"] = round(s["coverage"], 3)
+            result["paged_pollution"] = s["pollution"]
+            if args.async_datapath:
+                result["paged_partial_hits"] = s["partial_hits"]
+                result["paged_latency_hidden_frac"] = round(
+                    s["latency_hidden_frac"], 3)
+                result["paged_inflight_at_end"] = s["inflight_at_end"]
 
     print(result)
     return result

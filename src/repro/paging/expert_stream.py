@@ -21,7 +21,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.paging.prefetch_serving import (PrefetchedStream, stream_init,
+from repro.paging.prefetch_serving import (PrefetchedStream,
+                                           multi_stream_consume, stream_init,
                                            stream_step, stream_step_async)
 
 
@@ -39,6 +40,10 @@ class ExpertPrefetcher:
                    blocking batched path (sync-vs-async contract of
                    :mod:`repro.paging.prefetch_serving`).
       ring_size:   in-flight ring capacity for the async path.
+      link_budget: expert blocks/step the shared host link can move across
+                   *all* concurrently consumed streams (DESIGN.md §5);
+                   applies to :meth:`consume_route_traces`. ``None`` =
+                   private infinite links per stream.
     """
     n_experts: int
     n_hot: int                   # experts resident at once
@@ -46,6 +51,7 @@ class ExpertPrefetcher:
     pw_max: int = 2              # experts are big; keep the window tight
     async_datapath: bool = False
     ring_size: int = 4
+    link_budget: int | None = None
 
     def geom(self) -> PrefetchedStream:
         return PrefetchedStream(n_pages=self.n_experts, n_slots=self.n_hot,
@@ -85,3 +91,18 @@ class ExpertPrefetcher:
 
         state, (hits, pref, partial) = jax.lax.scan(body, state, ids)
         return state, {"hit": hits, "pref_hit": pref, "partial_hit": partial}
+
+    def consume_route_traces(self, expert_weights: jax.Array,
+                             ids: jax.Array):
+        """Consume ``int32[S, T]`` routing traces of S concurrent streams.
+
+        One stream per (layer, slot) — §4.1 isolation — but all expert-block
+        fetches share the host↔accelerator link: with ``link_budget`` set,
+        demand block fetches are arbitrated first each routing step and
+        surplus speculated blocks arrive late (``deferred``) — see
+        :func:`repro.paging.prefetch_serving.multi_stream_consume`. Returns
+        its ``(state, data_sums, info)`` (leading ``[S]`` axis).
+        """
+        return multi_stream_consume(expert_weights, ids, self.geom(),
+                                    async_datapath=self.async_datapath,
+                                    link_budget=self.link_budget)

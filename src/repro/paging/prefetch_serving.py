@@ -24,6 +24,17 @@ Two data paths realize the fetches (paper §4.2–4.4, DESIGN.md §4):
 Everything is fixed-shape and lives in one ``lax.scan`` per stream, so the
 whole serving path jits; per-stream isolation (paper §4.1) is ``vmap`` over
 the controller+buffer(+ring) state.
+
+Multi-stream serving can additionally model the *shared* RDMA link the
+paper's §4.4/Fig. 13 contention results are about:
+:func:`multi_stream_consume` with a finite ``link_budget`` runs a single
+``lax.scan`` over time with stacked per-stream states and arbitrates a
+per-step fetch budget across every stream — demand fetches strictly first,
+leftover budget granted to in-flight prefetches in global issue order, the
+surplus deferred in the ring with pushed-out arrivals (DESIGN.md §5).
+Controller, hot buffer and ring stay private per stream (§4.1); only the
+link budget and the issue order are shared. ``link_budget=None`` keeps the
+independent ``vmap`` path (every stream gets a private, infinite link).
 """
 
 from __future__ import annotations
@@ -34,7 +45,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.leap_jax import leap_init, leap_step
+from repro.core.leap_jax import leap_init, leap_step, leap_step_batched
 from repro.core.pool import (pool_access, pool_init, pool_issue, pool_stats,
                              pool_wait, ring_init)
 from repro.core.window import DEFAULT_PW_MAX
@@ -93,9 +104,12 @@ def stream_step(state: dict, pool_data: jax.Array, page: jax.Array,
       page: ``int32`` demand page id.
 
     Returns ``(state, data, info)`` with ``data = [page_elems]`` payload and
-    scalar-bool ``info`` keys ``hit`` / ``pref_hit`` / ``partial_hit``
-    (``partial_hit`` is always False here: the sync batch blocks until every
-    requested byte has landed, so nothing is ever left in flight).
+    scalar ``info`` keys: bools ``hit`` / ``pref_hit`` / ``partial_hit`` /
+    ``fetched`` (``partial_hit`` is always False here: the sync batch blocks
+    until every requested byte has landed, so nothing is ever left in
+    flight; ``fetched`` means the demand page moved over the link) and
+    int32 ``issued`` (candidates fetched this step — on this path they all
+    ride the blocking batch) / ``deferred`` (always 0 here).
 
     Order per fault (paper Fig. 6): look up / demand-fetch the page, notify
     the tracker (with whether it hit a prefetched entry), then issue the
@@ -121,7 +135,10 @@ def stream_step(state: dict, pool_data: jax.Array, page: jax.Array,
     data = hot[jnp.maximum(slots[0], 0)]
     return ({**state, "leap": new_leap, "pool_meta": meta, "hot": hot},
             data, {"hit": info["hit"][0], "pref_hit": info["prefetched_hit"][0],
-                   "partial_hit": jnp.zeros((), bool)})
+                   "partial_hit": jnp.zeros((), bool),
+                   "fetched": info["fetched"][0],
+                   "issued": jnp.sum(info["fetched"][1:].astype(jnp.int32)),
+                   "deferred": jnp.zeros((), jnp.int32)})
 
 
 def stream_step_async(state: dict, pool_data: jax.Array, page: jax.Array,
@@ -152,6 +169,7 @@ def stream_step_async(state: dict, pool_data: jax.Array, page: jax.Array,
 
     meta, ring, hot = state["pool_meta"], state["ring"], state["hot"]
     now = ring["now"]
+    deferred0 = meta["n_deferred"]
     meta, ring, hot, slot, data, winfo = pool_wait(meta, ring, hot, pool_data,
                                                    page, now)
     pref_feedback = winfo["prefetched_hit"] | winfo["partial_hit"]
@@ -159,6 +177,7 @@ def stream_step_async(state: dict, pool_data: jax.Array, page: jax.Array,
                                        n_split=geom.n_split,
                                        pw_max=geom.pw_max)
     val = valid & (cands >= 0) & (cands < geom.n_pages)
+    issued0 = meta["n_prefetch_issued"]
     meta, ring = pool_issue(meta, ring, cands, val, now,
                             jnp.int32(geom.arrival_delay))
     ring = dict(ring)
@@ -166,7 +185,10 @@ def stream_step_async(state: dict, pool_data: jax.Array, page: jax.Array,
     return ({**state, "leap": new_leap, "pool_meta": meta, "hot": hot,
              "ring": ring},
             data, {"hit": winfo["hit"], "pref_hit": winfo["prefetched_hit"],
-                   "partial_hit": winfo["partial_hit"]})
+                   "partial_hit": winfo["partial_hit"],
+                   "fetched": winfo["fetched"],
+                   "issued": meta["n_prefetch_issued"] - issued0,
+                   "deferred": meta["n_deferred"] - deferred0})
 
 
 @functools.partial(jax.jit, static_argnames=("geom", "async_datapath"))
@@ -185,7 +207,11 @@ def stream_consume(pool_data: jax.Array, schedule: jax.Array,
 
     Returns ``(state, data_sums, info)``: ``data_sums`` is a ``[T]`` checksum
     of each served page's payload, ``info`` has bool ``[T]`` arrays ``hit``,
-    ``pref_hit`` and ``partial_hit`` (all-False on the sync path).
+    ``pref_hit``, ``partial_hit`` (all-False on the sync path) and
+    ``fetched`` (demand moved a page over the link), plus int32 ``[T]``
+    arrays ``issued`` (candidates fetched/enqueued per step) and
+    ``deferred`` (prefetches completing past their deadline — only ever
+    non-zero under the budgeted multi-stream path).
     """
     if state is None:
         state = stream_init(geom, pool_data.dtype)
@@ -194,33 +220,159 @@ def stream_consume(pool_data: jax.Array, schedule: jax.Array,
     def body(st, page):
         st, data, info = step_fn(st, pool_data, page, geom)
         return st, (data.sum(), info["hit"], info["pref_hit"],
-                    info["partial_hit"])
+                    info["partial_hit"], info["fetched"], info["issued"],
+                    info["deferred"])
 
-    state, (sums, hits, pref_hits, partials) = jax.lax.scan(
-        body, state, schedule)
+    state, (sums, hits, pref_hits, partials, fetched, issued, deferred) = \
+        jax.lax.scan(body, state, schedule)
     return state, sums, {"hit": hits, "pref_hit": pref_hits,
-                         "partial_hit": partials}
+                         "partial_hit": partials, "fetched": fetched,
+                         "issued": issued, "deferred": deferred}
 
 
 def multi_stream_consume(pool_data: jax.Array, schedules: jax.Array,
                          geom: PrefetchedStream,
-                         async_datapath: bool = False):
-    """Isolated per-stream state over a shared pool: vmap(streams).
+                         async_datapath: bool = False,
+                         link_budget: int | None = None):
+    """Concurrent streams over a shared pool, optionally on a shared link.
 
     Args:
       schedules: ``int32[n_streams, T]`` demand page ids per stream.
       async_datapath: static sync/async selector, as in
         :func:`stream_consume` (one value for all streams).
+      link_budget: static pages/step the shared fabric link can move across
+        *all* streams (DESIGN.md §5). ``None`` models private infinite
+        links: every stream runs independently (``vmap``), exactly the
+        paper's Fig. 13 isolated setup. A finite budget switches to a
+        single ``lax.scan`` over time with stacked per-stream states:
+        demand fetches are served first every step, leftover budget lands
+        in-flight prefetches in global issue order, and the surplus stays
+        in the ring with pushed-out arrivals (counted ``deferred``). A
+        large-enough budget is bit-equivalent to ``link_budget=None``
+        (pinned in ``tests/test_link_budget.py``).
 
-    The paper's Fig. 13 scenario: concurrent streams keep private
-    controller + hot-buffer (+ in-flight ring) state, so different patterns
-    do not pollute each other's detectors.
+    Per-stream state (controller + hot buffer + ring) stays private either
+    way (§4.1): the budget arbitrates *bandwidth*, never detector state, so
+    different patterns still cannot pollute each other's detectors.
+
+    Returns ``(state, data_sums, info)`` shaped like a stacked
+    :func:`stream_consume` (leading ``[n_streams]`` axis). With a budget,
+    ``info`` gains shared per-step int32 ``[T]`` link totals:
+    ``link_demand_fetches``, ``link_prefetch_issued`` and ``link_deferred``
+    (on the sync path the budget cannot change behavior — every fetch
+    already blocks its issuing step — so the totals just price the link).
     """
+    if link_budget is not None and async_datapath and geom.ring_size > 0:
+        return _multi_stream_consume_budgeted(pool_data, schedules, geom,
+                                              int(link_budget))
+
     def one(schedule):
         return stream_consume(pool_data, schedule, geom,
                               async_datapath=async_datapath)
 
-    return jax.vmap(one)(schedules)
+    state, sums, info = jax.vmap(one)(schedules)
+    if link_budget is not None:
+        # Sync (or ring-less) fetches all block their issuing step: a budget
+        # changes the price of a step, not what happens in it. Report the
+        # per-step link totals so callers can price contention.
+        info = dict(info)
+        info["link_demand_fetches"] = jnp.sum(
+            info["fetched"].astype(jnp.int32), axis=0)
+        info["link_prefetch_issued"] = jnp.sum(info["issued"], axis=0)
+        info["link_deferred"] = jnp.sum(info["deferred"], axis=0)
+    return state, sums, info
+
+
+@functools.partial(jax.jit, static_argnames=("geom", "link_budget"))
+def _multi_stream_consume_budgeted(pool_data: jax.Array,
+                                   schedules: jax.Array,
+                                   geom: PrefetchedStream,
+                                   link_budget: int):
+    """Budgeted async multi-stream path: one scan over time, shared link.
+
+    Per step *t* (DESIGN.md §5):
+
+    1. **Grant** — the link moved last step's demand fetches first
+       (strict demand priority), so prefetch landing capacity is
+       ``max(0, link_budget - demand_fetches[t-1])``. Grants go to due ring
+       entries (``deadline <= t``) across all streams in ascending global
+       issue order (``seq``, FIFO over the link); the rest stay in the ring
+       past their deadline (deferred).
+    2. **Wait/serve** — per-stream :func:`repro.core.pool.pool_wait` with
+       the grant mask: land granted entries, serve this step's demand
+       (hit / partial / miss).
+    3. **Issue** — per-stream controllers emit candidates;
+       :func:`repro.core.pool.pool_issue` stamps them with globally ordered
+       ``seq`` (step-major, then stream, then candidate).
+
+    Streams advance in lock-step (one access per step each), which is what
+    makes the per-stream hit/partial/deferral counts directly comparable to
+    a step-synchronous width-``link_budget`` fabric run on the same
+    schedules (``repro.fabric.linkstep``, cross-validated in
+    ``tests/test_link_budget.py``).
+    """
+    S, T = schedules.shape
+    K = geom.pw_max
+    one = stream_init(geom, pool_data.dtype)
+    state0 = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (S,) + x.shape), one)
+    stream_ids = jnp.arange(S, dtype=jnp.int32)
+
+    def _wait(meta, ring, hot, page, now, ok):
+        return pool_wait(meta, ring, hot, pool_data, page, now, land_ok=ok)
+
+    def _issue(meta, ring, cands, val, now, seq):
+        return pool_issue(meta, ring, cands, val, now,
+                          jnp.int32(geom.arrival_delay), seq=seq)
+
+    def body(carry, xs):
+        state, d_prev = carry
+        t, pages = xs
+        meta, ring, hot = state["pool_meta"], state["ring"], state["hot"]
+        now = ring["now"]                                  # int32[S], == t
+        # --- landing grants: leftover budget, global seq order --------------
+        cap = jnp.maximum(jnp.int32(link_budget) - d_prev, 0)
+        due = (ring["page"] >= 0) & (ring["deadline"] <= now[:, None])
+        flat_due = due.reshape(-1)
+        flat_seq = ring["seq"].reshape(-1)
+        rank = jnp.sum(flat_due[None, :]
+                       & (flat_seq[None, :] < flat_seq[:, None]), axis=1)
+        allowed = (flat_due & (rank < cap)).reshape(due.shape)
+        # --- wait/serve ------------------------------------------------------
+        deferred0 = meta["n_deferred"]
+        meta, ring, hot, slot, data, winfo = jax.vmap(_wait)(
+            meta, ring, hot, pages, now, allowed)
+        d_t = jnp.sum(winfo["fetched"].astype(jnp.int32))
+        # --- controllers + globally ordered issue ----------------------------
+        pref_feedback = winfo["prefetched_hit"] | winfo["partial_hit"]
+        new_leap, cands, valid = leap_step_batched(
+            state["leap"], pages, pref_feedback,
+            n_split=geom.n_split, pw_max=geom.pw_max)
+        val = valid & (cands >= 0) & (cands < geom.n_pages)
+        seq = ((t * S + stream_ids)[:, None] * K
+               + jnp.arange(K, dtype=jnp.int32)[None, :])
+        issued0 = meta["n_prefetch_issued"]
+        meta, ring = jax.vmap(_issue)(meta, ring, cands, val, now, seq)
+        ring = dict(ring)
+        ring["now"] = now + 1
+        issued_s = meta["n_prefetch_issued"] - issued0     # int32[S]
+        deferred_s = meta["n_deferred"] - deferred0        # int32[S]
+        state = {"leap": new_leap, "pool_meta": meta, "hot": hot,
+                 "ring": ring}
+        outs = (data.sum(-1), winfo["hit"], winfo["prefetched_hit"],
+                winfo["partial_hit"], winfo["fetched"], issued_s, deferred_s,
+                d_t, jnp.sum(issued_s), jnp.sum(deferred_s))
+        return (state, d_t), outs
+
+    xs = (jnp.arange(T, dtype=jnp.int32), schedules.T)
+    (state, _), (sums, hit, pref, part, fetched, issued, deferred,
+                 link_d, link_i, link_def) = jax.lax.scan(
+        body, (state0, jnp.int32(0)), xs)
+    info = {"hit": hit.T, "pref_hit": pref.T, "partial_hit": part.T,
+            "fetched": fetched.T, "issued": issued.T, "deferred": deferred.T,
+            "link_demand_fetches": link_d, "link_prefetch_issued": link_i,
+            "link_deferred": link_def}
+    return state, sums.T, info
 
 
 def stream_stats(state: dict) -> dict:
@@ -237,3 +389,13 @@ def stream_stats(state: dict) -> dict:
     1.0 vacuously (its fetches all block the issuing step instead).
     """
     return pool_stats(state["pool_meta"], state.get("ring"))
+
+
+def stream_stats_at(state: dict, i: int) -> dict:
+    """:func:`stream_stats` of stream ``i`` in a stacked multi-stream state.
+
+    ``state`` is the leading-``[n_streams]``-axis pytree returned by
+    :func:`multi_stream_consume`; this slices out one stream's counters
+    without callers having to know the stacked layout.
+    """
+    return stream_stats(jax.tree.map(lambda x: x[i], state))

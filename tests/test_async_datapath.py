@@ -1,11 +1,13 @@
-"""Property tests for the async issue/wait data path (DESIGN.md §4).
+"""Property tests for the async issue/wait data path (DESIGN.md §4/§5).
 
 Hypothesis-driven: for arbitrary schedules, (a) hit-rate counters never
 decrease when the in-flight ring gains slack (eviction pressure off — more
-ring capacity can only land a superset of prefetches), and (b) the
-issued-prefetch decomposition sums for every configuration. The
-deterministic slices of these properties also run without hypothesis in
-``tests/test_paging.py``.
+ring capacity can only land a superset of prefetches), (b) the
+issued-prefetch decomposition sums for every configuration, and (c) it
+keeps summing per stream once the shared-link budget introduces
+``deferred`` completions and issue drops. The deterministic slices of
+these properties also run without hypothesis in ``tests/test_paging.py``
+and ``tests/test_link_budget.py``.
 """
 
 import pytest
@@ -15,8 +17,10 @@ import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as hst
 
-from repro.paging.prefetch_serving import (PrefetchedStream, stream_consume,
-                                           stream_stats)
+from repro.paging.prefetch_serving import (PrefetchedStream,
+                                           multi_stream_consume,
+                                           stream_consume, stream_stats,
+                                           stream_stats_at)
 
 N_PAGES = 64
 POOL = jnp.arange(N_PAGES * 4, dtype=jnp.float32).reshape(N_PAGES, 4)
@@ -57,3 +61,31 @@ def test_decomposition_and_data_for_arbitrary_schedules(sched, ring, delay):
                                     + s["resident_unused"]), s
     assert 0 <= s["partial_hits"] <= s["prefetch_hits"]
     assert s["faults"] == len(sched)
+
+
+@settings(max_examples=20, deadline=None)
+@given(scheds=hst.lists(hst.lists(hst.integers(0, N_PAGES - 1),
+                                  min_size=24, max_size=24),
+                        min_size=2, max_size=4),
+       budget=hst.integers(0, 12), ring=hst.integers(1, 8))
+def test_budgeted_decomposition_still_balances(scheds, budget, ring):
+    """DESIGN.md §5: deferred/dropped never unbalance the §4.3 buckets."""
+    geom = PrefetchedStream(n_pages=N_PAGES, n_slots=N_PAGES, page_elems=4,
+                            ring_size=ring)
+    st, sums, info = multi_stream_consume(
+        POOL, jnp.asarray(scheds, jnp.int32), geom, async_datapath=True,
+        link_budget=budget)
+    np.testing.assert_allclose(
+        np.asarray(sums), np.asarray(POOL[np.asarray(scheds)].sum(-1)))
+    for i in range(len(scheds)):
+        s = stream_stats_at(st, i)
+        assert s["prefetch_issued"] == (s["prefetch_hits"] + s["pollution"]
+                                        + s["inflight_at_end"]
+                                        + s["resident_unused"]), s
+        assert 0 <= s["partial_hits"] <= s["prefetch_hits"]
+        assert 0 <= s["deferred"] <= s["prefetch_issued"]
+    # per-step link totals tally with the per-stream info arrays
+    assert int(info["link_demand_fetches"].sum()) == int(
+        np.asarray(info["fetched"]).sum())
+    assert int(info["link_deferred"].sum()) == int(
+        np.asarray(info["deferred"]).sum())

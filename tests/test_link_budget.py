@@ -1,0 +1,194 @@
+"""Shared-link budget arbitration for the jitted multi-stream path (§5).
+
+Pins the three contracts of DESIGN.md §5:
+
+* ``link_budget=None`` is the legacy isolated path — bit-equivalent to an
+  explicit ``vmap(stream_consume)`` — and a large-enough finite budget run
+  through the budgeted ``lax.scan`` is bit-equivalent to that same path
+  (modulo the ring's ``seq`` bookkeeping stamps, which the unbudgeted path
+  never assigns).
+* Under a finite budget, per-stream hit / partial / deferral counts agree
+  exactly with the lock-step width-B fabric reference
+  (``repro.fabric.run_linkstep``) on the same schedules — the quantitative
+  bridge between the jitted path and the fabric subsystem.
+* The issued-prefetch decomposition still balances once ``deferred`` /
+  dropped exist, and demand-first starvation behaves monotonically.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fabric.linkstep import run_linkstep
+from repro.paging.prefetch_serving import (PrefetchedStream,
+                                           multi_stream_consume,
+                                           stream_consume, stream_stats_at)
+
+N_PAGES = 128
+POOL = jnp.arange(N_PAGES * 4, dtype=jnp.float32).reshape(N_PAGES, 4)
+GEOM = PrefetchedStream(n_pages=N_PAGES, n_slots=N_PAGES, page_elems=4,
+                        ring_size=8)
+INF = 1 << 20
+
+
+def _scheds(T: int = 60) -> jnp.ndarray:
+    rng = np.random.default_rng(3)
+    return jnp.asarray(np.stack([
+        np.arange(T) % N_PAGES,
+        (np.arange(T) * 3 + 7) % N_PAGES,
+        (np.arange(T) * 2 + 50) % N_PAGES,
+        rng.integers(0, N_PAGES, T),
+    ]), jnp.int32)
+
+
+def _per_stream(st, i: int) -> dict:
+    return stream_stats_at(st, i)
+
+
+class TestBudgetEquivalence:
+    def test_none_budget_is_the_vmap_path(self):
+        """link_budget=None must be bit-equivalent to vmap(stream_consume)."""
+        scheds = _scheds()
+        st_m, sums_m, info_m = multi_stream_consume(POOL, scheds, GEOM,
+                                                    async_datapath=True,
+                                                    link_budget=None)
+        st_v, sums_v, info_v = jax.vmap(
+            lambda s: stream_consume(POOL, s, GEOM, async_datapath=True)
+        )(scheds)
+        np.testing.assert_array_equal(np.asarray(sums_m), np.asarray(sums_v))
+        for k in info_v:
+            np.testing.assert_array_equal(np.asarray(info_m[k]),
+                                          np.asarray(info_v[k]), err_msg=k)
+        for part in ("pool_meta", "ring", "leap"):
+            for k, v in st_v[part].items():
+                np.testing.assert_array_equal(np.asarray(st_m[part][k]),
+                                              np.asarray(v), err_msg=k)
+        np.testing.assert_array_equal(np.asarray(st_m["hot"]),
+                                      np.asarray(st_v["hot"]))
+
+    @pytest.mark.parametrize("async_dp", [False, True])
+    def test_infinite_budget_bit_equivalent_to_vmap(self, async_dp):
+        """The budgeted scan with budget=inf replays the vmap path exactly."""
+        scheds = _scheds()
+        st_v, sums_v, info_v = multi_stream_consume(POOL, scheds, GEOM,
+                                                    async_datapath=async_dp)
+        st_b, sums_b, info_b = multi_stream_consume(POOL, scheds, GEOM,
+                                                    async_datapath=async_dp,
+                                                    link_budget=INF)
+        np.testing.assert_array_equal(np.asarray(sums_v), np.asarray(sums_b))
+        for k in info_v:
+            np.testing.assert_array_equal(np.asarray(info_v[k]),
+                                          np.asarray(info_b[k]), err_msg=k)
+        for k, v in st_v["pool_meta"].items():
+            np.testing.assert_array_equal(np.asarray(st_b["pool_meta"][k]),
+                                          np.asarray(v), err_msg=k)
+        for k, v in st_v["ring"].items():
+            if k == "seq":       # only the arbiter assigns issue-order stamps
+                continue
+            np.testing.assert_array_equal(np.asarray(st_b["ring"][k]),
+                                          np.asarray(v), err_msg=k)
+        assert int(info_b["link_deferred"].sum()) == 0
+
+    def test_budgeted_data_always_correct(self):
+        scheds = _scheds()
+        for budget in (1, 2, 5):
+            st, sums, _ = multi_stream_consume(POOL, scheds, GEOM,
+                                               async_datapath=True,
+                                               link_budget=budget)
+            expect = POOL[scheds].sum(-1)
+            np.testing.assert_allclose(np.asarray(sums), np.asarray(expect))
+
+
+class TestFabricCrossValidation:
+    """Jitted counts == lock-step width-B fabric reference, per stream."""
+
+    @pytest.mark.parametrize("budget", [None, 1, 2, 3, 6, 64])
+    def test_counts_match_linkstep(self, budget):
+        scheds = _scheds(80)
+        st, _, _ = multi_stream_consume(
+            POOL, scheds, GEOM, async_datapath=True,
+            link_budget=INF if budget is None else budget)
+        rep = run_linkstep(np.asarray(scheds), N_PAGES, budget,
+                           ring_size=GEOM.ring_size,
+                           arrival_delay=GEOM.arrival_delay,
+                           pw_max=GEOM.pw_max, h_size=GEOM.h_size,
+                           n_split=GEOM.n_split)
+        for i in range(scheds.shape[0]):
+            j = _per_stream(st, i)
+            r = rep.stream_summary(i)
+            assert {k: j[k] for k in r} == r, f"stream {i}, budget {budget}"
+
+    def test_crossval_with_longer_arrival_delay(self):
+        import dataclasses
+        geom = dataclasses.replace(GEOM, arrival_delay=2, ring_size=6)
+        scheds = _scheds(50)
+        for budget in (2, 4):
+            st, _, _ = multi_stream_consume(POOL, scheds, geom,
+                                            async_datapath=True,
+                                            link_budget=budget)
+            rep = run_linkstep(np.asarray(scheds), N_PAGES, budget,
+                               ring_size=6, arrival_delay=2,
+                               pw_max=geom.pw_max, h_size=geom.h_size,
+                               n_split=geom.n_split)
+            for i in range(scheds.shape[0]):
+                j = _per_stream(st, i)
+                r = rep.stream_summary(i)
+                assert {k: j[k] for k in r} == r, f"stream {i}, budget {budget}"
+
+
+class TestBudgetSemantics:
+    def test_decomposition_balances_with_deferred_and_drops(self):
+        """deferred annotates buckets; it never breaks the §4.3 sum."""
+        scheds = _scheds(70)
+        for budget in (0, 1, 3, 8):
+            st, _, info = multi_stream_consume(POOL, scheds, GEOM,
+                                               async_datapath=True,
+                                               link_budget=budget)
+            for i in range(scheds.shape[0]):
+                s = _per_stream(st, i)
+                assert s["prefetch_issued"] == (
+                    s["prefetch_hits"] + s["pollution"]
+                    + s["inflight_at_end"] + s["resident_unused"]), s
+                assert 0 <= s["partial_hits"] <= s["prefetch_hits"]
+                # every deferral is a completed (landed or partial) or
+                # still-pending prefetch; it can never exceed what was issued
+                assert 0 <= s["deferred"] <= s["prefetch_issued"]
+
+    def test_zero_budget_starves_prefetch_demand_still_served(self):
+        """B=0: nothing ever lands — every covered access is a partial."""
+        scheds = _scheds(60)
+        st, sums, info = multi_stream_consume(POOL, scheds, GEOM,
+                                              async_datapath=True,
+                                              link_budget=0)
+        np.testing.assert_allclose(np.asarray(sums),
+                                   np.asarray(POOL[scheds].sum(-1)))
+        for i in range(scheds.shape[0]):
+            s = _per_stream(st, i)
+            assert s["prefetch_hits"] == s["partial_hits"]
+            assert s["resident_unused"] == 0 and s["pollution"] == 0
+
+    def test_tighter_budget_never_creates_hits(self):
+        """Landing capacity only ever helps: hits are monotone in budget."""
+        scheds = _scheds(70)
+        prev = None
+        for budget in (0, 1, 2, 4, 8, INF):
+            st, _, _ = multi_stream_consume(POOL, scheds, GEOM,
+                                            async_datapath=True,
+                                            link_budget=budget)
+            full_hits = sum(_per_stream(st, i)["hits"]
+                            - _per_stream(st, i)["partial_hits"]
+                            for i in range(scheds.shape[0]))
+            if prev is not None:
+                assert full_hits >= prev, budget
+            prev = full_hits
+
+    def test_deferred_zero_when_budget_covers_offered_load(self):
+        scheds = _scheds(60)
+        S = scheds.shape[0]
+        budget = S * (1 + GEOM.pw_max)        # demand + every candidate
+        st, _, info = multi_stream_consume(POOL, scheds, GEOM,
+                                           async_datapath=True,
+                                           link_budget=budget)
+        assert int(info["link_deferred"].sum()) == 0
+        assert all(_per_stream(st, i)["deferred"] == 0 for i in range(S))

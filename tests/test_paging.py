@@ -19,7 +19,7 @@ from repro.paging import (ExpertPrefetcher, PageAllocator, append_kv,
                           paged_decode_attention)
 from repro.paging.prefetch_serving import (PrefetchedStream, multi_stream_consume,
                                            stream_consume, stream_init,
-                                           stream_stats)
+                                           stream_stats, stream_stats_at)
 
 
 class TestPagedKV:
@@ -168,6 +168,22 @@ class TestAsyncDatapath:
         assert s["coverage"] > 0.9
         _assert_decomposition(s)
 
+    def test_zero_arrival_delay_never_counts_deferred(self):
+        """Regression: deferred must stay budget-only — issue runs after the
+        step's wait, so a delay-0 deadline is clamped to the next step
+        instead of miscounting every landing as budget-deferred."""
+        geom = dataclasses.replace(self.GEOM, arrival_delay=0)
+        sched = jnp.arange(40, dtype=jnp.int32)
+        st, _, info = stream_consume(self._pool(), sched, geom,
+                                     async_datapath=True)
+        assert int(np.asarray(info["deferred"]).sum()) == 0
+        assert stream_stats(st)["deferred"] == 0
+        # behavior otherwise matches delay=1 (landing cannot be earlier)
+        st1, _, info1 = stream_consume(self._pool(), sched, self.GEOM,
+                                       async_datapath=True)
+        np.testing.assert_array_equal(np.asarray(info["pref_hit"]),
+                                      np.asarray(info1["pref_hit"]))
+
     def test_zero_ring_bit_equivalent_to_sync(self):
         geom = dataclasses.replace(self.GEOM, ring_size=0)
         for sched in (jnp.arange(80, dtype=jnp.int32),
@@ -248,3 +264,18 @@ class TestExpertPaging:
         s = stream_stats(st)
         assert s["prefetch_hits"] > 50
         _assert_decomposition(s)
+
+    def test_budgeted_expert_streams_share_the_link(self):
+        """Two routed streams under a 1-block/step link: blocks still land
+        correctly, surplus speculation defers instead of blocking routing."""
+        ep = ExpertPrefetcher(n_experts=16, n_hot=16, block_elems=8,
+                              async_datapath=True, link_budget=1)
+        weights = jnp.arange(16 * 8, dtype=jnp.float32).reshape(16, 8)
+        ids = jnp.stack([jnp.asarray(np.tile(np.arange(4), 30), jnp.int32),
+                         jnp.asarray(np.tile(np.arange(8), 15), jnp.int32)])
+        st, sums, info = ep.consume_route_traces(weights, ids)
+        np.testing.assert_allclose(np.asarray(sums),
+                                   np.asarray(weights[ids].sum(-1)))
+        assert int(np.asarray(info["deferred"]).sum()) > 0
+        for i in range(2):
+            _assert_decomposition(stream_stats_at(st, i))

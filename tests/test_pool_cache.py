@@ -106,6 +106,54 @@ class TestPageCache:
         assert c.stats.partial_hits == 1 and c.stats.prefetch_hits == 1
         assert c.stats.latency_hidden_frac == 0.0
 
+    def test_double_access_while_in_flight_stays_resident(self):
+        """Regression: an eager partial hit must NOT delete the in-flight
+        entry — a re-access before ready_t previously became a full miss
+        that re-paid the entire fabric fetch, when only the residual
+        transfer was outstanding."""
+        c = PageCache(8, eviction="eager")
+        c.insert_prefetch(5, now=0.0, ready_t=10.0)
+        hit1, pf1, wait1 = c.lookup(5, now=2.0)
+        assert hit1 and pf1 and wait1 == pytest.approx(8.0)
+        assert 5 in c                      # still resident until ready_t
+        hit2, pf2, wait2 = c.lookup(5, now=6.0)
+        assert hit2 and not pf2            # plain hit on the residual
+        assert wait2 == pytest.approx(4.0)
+        assert c.stats.misses == 0 and c.stats.prefetch_hits == 1
+        assert c.stats.partial_hits == 1   # not double-counted
+        # after arrival the next hit frees it (normal eager semantics)
+        hit3, _, wait3 = c.lookup(5, now=11.0)
+        assert hit3 and wait3 == 0.0 and 5 not in c
+
+    def test_arrived_consumed_entries_purged_before_live_prefetches(self):
+        """Regression: once a partial-hit entry's transfer completes it is
+        garbage under eager — it must be purged under pressure rather than
+        squatting on capacity and forcing live prefetches out as
+        pollution."""
+        c = PageCache(4, eviction="eager")
+        for p in range(4):
+            c.insert_prefetch(p, now=0.0, ready_t=5.0)
+            c.lookup(p, now=1.0)               # partial hits, never re-hit
+        assert c.occupancy == 4
+        # long after ready_t, new prefetches must displace the stale
+        # arrived-consumed entries, not each other
+        for p in range(10, 14):
+            assert c.insert_prefetch(p, now=20.0, ready_t=21.0)
+        assert c.stats.pollution == 0
+        assert all(p in c for p in range(10, 14))
+
+    def test_eager_eviction_falls_back_past_inflight_residents(self):
+        """Consumed-but-in-flight residents must not crash eviction when the
+        unconsumed-prefetch FIFO is empty and the cache is full."""
+        c = PageCache(2, eviction="eager")
+        for p in (1, 2):
+            c.insert_prefetch(p, now=0.0, ready_t=10.0)
+            c.lookup(p, now=1.0)           # partial hits: stay resident
+        assert c.occupancy == 2 and not c.prefetch_fifo
+        assert c.insert_prefetch(3, now=2.0, ready_t=12.0)
+        assert c.occupancy <= 2 and 3 in c
+        assert c.stats.pollution == 0      # evictees were already served
+
     def test_arrived_hit_is_not_partial(self):
         c = PageCache(8, eviction="eager")
         c.insert_prefetch(5, now=0.0, ready_t=1.0)
