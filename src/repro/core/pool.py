@@ -38,9 +38,22 @@ Two data paths share this metadata (DESIGN.md §4):
 The async pair also carries the hooks for the *shared-link budget
 arbitration* layer (DESIGN.md §5): :func:`pool_issue` stamps each entry with
 a global issue-order ``seq``, :func:`pool_wait` accepts a per-entry landing
-grant (``land_ok``) computed by the arbiter from the per-step link budget,
-and entries that complete past their nominal deadline count ``n_deferred``.
-Per-stream callers that never budget-gate can ignore all three.
+grant (``land_ok``) computed by the arbiter (:func:`link_grants`) from the
+per-step link budget, and entries that complete past their nominal deadline
+count ``n_deferred``. Per-stream callers that never budget-gate can ignore
+all three.
+
+**Payloads are pytrees** (DESIGN.md §6): ``hot`` and ``pool`` may be single
+arrays (the original contract), structured pytrees whose leaves share a
+leading slot/page axis (e.g. ``{"k": ..., "v": ...}`` KV pages — the leaves
+of one slot always move together), or ``None`` for *metadata-only*
+transactions where the caller moves the bytes itself from the returned
+copy plan (``slots`` + ``fetched``/``landed`` masks) — the tiered-KV layer
+does exactly that through the :mod:`repro.kernels.gather_pages` kernels.
+The wait path additionally supports a multi-page demand batch
+(:func:`pool_wait_batch`) for chunked context sweeps, and
+:func:`pool_invalidate` drops pages whose cold-tier bytes were mutated
+(write coherence for the tiered KV cache).
 """
 
 from __future__ import annotations
@@ -206,6 +219,25 @@ def _tree_where(cond: jax.Array, on_true: dict, on_false: dict) -> dict:
     return jax.tree.map(lambda b, a: jnp.where(cond, b, a), on_true, on_false)
 
 
+# ---- payload pytree helpers -------------------------------------------------
+# ``hot``/``pool`` payloads are pytrees whose leaves share a leading
+# slot/page axis; a bare array is the single-leaf case and ``None`` is the
+# metadata-only mode (every helper passes it through untouched).
+
+def _payload_page(pool, page: jax.Array):
+    """Read one page's payload from every leaf of the slow tier."""
+    return jax.tree.map(lambda p: p[page], pool)
+
+
+def _payload_store(hot, slot: jax.Array, val):
+    """Write a page payload into hot slot ``slot`` across every leaf."""
+    return jax.tree.map(lambda h, v: h.at[slot].set(v), hot, val)
+
+
+def _payload_where(cond: jax.Array, on_true, on_false):
+    return jax.tree.map(lambda b, a: jnp.where(cond, b, a), on_true, on_false)
+
+
 def _alloc_slot(st: dict, lazy: bool) -> tuple[dict, jax.Array]:
     """Unconditionally produce one free, unmapped slot (stack pop or evict).
 
@@ -250,8 +282,11 @@ def pool_access(st: dict, hot: jax.Array, pool: jax.Array,
 
     Args:
       st:   metadata from :func:`pool_init`.
-      hot:  ``[n_slots, ...]`` hot buffer (donated, updated in place).
-      pool: ``[n_pages, ...]`` slow tier.
+      hot:  ``[n_slots, ...]``-leaved payload pytree (donated, updated in
+            place); ``None`` runs the transaction metadata-only — the caller
+            applies the copy plan (``slots`` where ``info["fetched"]``)
+            itself, e.g. through the gather_pages kernels.
+      pool: ``[n_pages, ...]``-leaved slow tier (``None`` with ``hot=None``).
       pages: ``int32[K]`` requested page ids (demand first, then candidates).
       is_prefetch: ``bool[K]`` — True for prefetch candidates.
       valid: ``bool[K]`` request mask.
@@ -309,8 +344,10 @@ def pool_access(st: dict, hot: jax.Array, pool: jax.Array,
                                      + pref.astype(jnp.int32))
         st_m["n_misses"] = st_m["n_misses"] + (~pref).astype(jnp.int32)
         st = jax.tree.map(lambda a, b: jnp.where(need_fetch, b, a), st, st_m)
-        hot = jnp.where(need_fetch,
-                        hot.at[slot_new].set(pool[jnp.maximum(page, 0)]), hot)
+        hot = _payload_where(
+            need_fetch,
+            _payload_store(hot, slot_new,
+                           _payload_page(pool, jnp.maximum(page, 0))), hot)
 
         # Demand fetch under eager policy: consumed-on-arrival -> unmap now
         # (demand pages are never tracked by the cache, §4.3) and return the
@@ -411,85 +448,64 @@ def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
     return jax.lax.fori_loop(0, K, body, (st, ring))
 
 
-@functools.partial(jax.jit, static_argnames=("lazy",), donate_argnums=(0, 1, 2))
-def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
-              page: jax.Array, now: jax.Array, lazy: bool = False,
-              land_ok: jax.Array | None = None,
-              ) -> tuple[dict, dict, jax.Array, jax.Array, jax.Array, dict]:
-    """Wait-phase of the async data path: land arrivals, serve one demand.
+def _land_due(st: dict, ring: dict, hot, pool, now: jax.Array, lazy: bool,
+              land_ok: jax.Array | None):
+    """Phase 1 of the wait path: land every due (and granted) ring entry.
 
-    Args:
-      st:   pool metadata from :func:`pool_init`.
-      ring: in-flight ring from :func:`ring_init` (capacity >= 1).
-      hot:  ``[n_slots, ...]`` hot buffer (updated functionally).
-      pool: ``[n_pages, ...]`` slow tier.
-      page: ``int32`` demand page id of this step.
-      now:  ``int32`` step clock (compared against ring deadlines).
-      land_ok: optional ``bool[capacity]`` landing grant from the shared-link
-        arbitration layer (DESIGN.md §5): a due entry whose grant is False
-        stays in the ring — the link had no spare budget for it this step.
-        ``None`` grants everything (the unbudgeted per-stream path).
+    Returns ``(st, ring, hot, landed_pages, landed_slots)`` where the two
+    ``int32[capacity]`` arrays record which page landed into which hot slot
+    this call (``-1`` = no landing at that ring position) — the landing half
+    of the copy plan for metadata-only callers.
+    """
+    R = ring["page"].shape[0]
+    landed_pages = jnp.full((R,), NO_PAGE, jnp.int32)
+    landed_slots = jnp.full((R,), NO_SLOT, jnp.int32)
+    if R == 0:
+        return st, ring, hot, landed_pages, landed_slots
+    if land_ok is None:
+        land_ok = jnp.ones((R,), bool)
 
-    Two phases, mirroring the swap-in path over an async queue:
+    def land(i, carry):
+        st, ring, hot, lp, ls = carry
+        p = ring["page"][i]
+        due = (p >= 0) & (ring["deadline"][i] <= now) & land_ok[i]
+        p_safe = jnp.maximum(p, 0)
+        resident = st["page_slot"][p_safe] >= 0
+        commit = due & ~resident
+        st_c, slot = _alloc_slot(st, lazy)
+        st_c = dict(st_c)
+        st_c["clock"] = st_c["clock"] + 1
+        st_c = _map_slot(st_c, slot, p_safe, jnp.ones((), bool))
+        hot_c = _payload_store(hot, slot, _payload_page(pool, p_safe))
+        st = _tree_where(commit, st_c, st)
+        hot = _payload_where(commit, hot_c, hot)
+        lp = lp.at[i].set(jnp.where(commit, p_safe, NO_PAGE))
+        ls = ls.at[i].set(jnp.where(commit, slot, NO_SLOT))
+        # A due entry whose page somehow became resident is dropped and
+        # counted as pollution so the issue decomposition still sums.
+        st = dict(st)
+        st["n_pollution"] = st["n_pollution"] + (due & resident).astype(jnp.int32)
+        # Landing past the deadline = the shared-link budget deferred it.
+        st["n_deferred"] = (st["n_deferred"]
+                            + (due & (ring["deadline"][i] < now)).astype(jnp.int32))
+        ring = dict(ring)
+        ring["page"] = ring["page"].at[i].set(jnp.where(due, NO_PAGE, p))
+        return st, ring, hot, lp, ls
 
-    1. **Land** every ring entry with ``deadline <= now`` (and a landing
-       grant): allocate a slot (free stack, else eager FIFO / lazy LRU
-       eviction), copy the page in, and track it as an unconsumed prefetch —
-       this models DMA that completed during the *previous* step's compute.
-       An entry landing at ``now > deadline`` was budget-deferred and counts
-       ``n_deferred``.
-    2. **Serve** the demand. Hot-resident -> hit (a first hit on a
-       prefetched slot counts ``n_prefetch_hits`` and eager-frees it).
-       Still in the ring -> **partial hit**: the entry is completed
-       immediately (removed from the ring, data copied), counting both
-       ``n_prefetch_hits`` and ``n_partial_hits`` — the consumer blocked on
-       the residual transfer only (a partial completing past its deadline
-       also counts ``n_deferred``). Otherwise -> demand miss and fetch.
+    return jax.lax.fori_loop(0, R, land,
+                             (st, ring, hot, landed_pages, landed_slots))
 
-    Returns ``(st, ring, hot, slot, data, info)`` where ``slot`` is the hot
-    slot serving the demand (-1 if out of range), ``data`` is
-    ``hot[slot]``, and ``info`` has scalar bool ``hit`` (resident full hit),
-    ``prefetched_hit`` (full hit on an unconsumed prefetch), ``partial_hit``
-    and ``fetched`` (this demand moved a page over the link: miss or
-    partial). As with :func:`pool_access`, slots eager-freed here are
-    unmapped immediately but stay readable until the next pool call.
+
+def _serve_demand(st: dict, ring: dict, hot, pool, page: jax.Array,
+                  now: jax.Array, lazy: bool):
+    """Phase 2 of the wait path: serve one demand access.
+
+    Shared by :func:`pool_wait` (single demand) and :func:`pool_wait_batch`
+    (chunked demand); behavior-preserving extraction of the original
+    ``pool_wait`` demand phase.
     """
     R = ring["page"].shape[0]
     n_pages = st["page_slot"].shape[0]
-
-    # ---- phase 1: land due arrivals -----------------------------------------
-    if R > 0:
-        if land_ok is None:
-            land_ok = jnp.ones((R,), bool)
-
-        def land(i, carry):
-            st, ring, hot = carry
-            p = ring["page"][i]
-            due = (p >= 0) & (ring["deadline"][i] <= now) & land_ok[i]
-            p_safe = jnp.maximum(p, 0)
-            resident = st["page_slot"][p_safe] >= 0
-            commit = due & ~resident
-            st_c, slot = _alloc_slot(st, lazy)
-            st_c = dict(st_c)
-            st_c["clock"] = st_c["clock"] + 1
-            st_c = _map_slot(st_c, slot, p_safe, jnp.ones((), bool))
-            hot_c = hot.at[slot].set(pool[p_safe])
-            st = _tree_where(commit, st_c, st)
-            hot = jnp.where(commit, hot_c, hot)
-            # A due entry whose page somehow became resident is dropped and
-            # counted as pollution so the issue decomposition still sums.
-            st = dict(st)
-            st["n_pollution"] = st["n_pollution"] + (due & resident).astype(jnp.int32)
-            # Landing past the deadline = the shared-link budget deferred it.
-            st["n_deferred"] = (st["n_deferred"]
-                                + (due & (ring["deadline"][i] < now)).astype(jnp.int32))
-            ring = dict(ring)
-            ring["page"] = ring["page"].at[i].set(jnp.where(due, NO_PAGE, p))
-            return st, ring, hot
-
-        st, ring, hot = jax.lax.fori_loop(0, R, land, (st, ring, hot))
-
-    # ---- phase 2: serve the demand access -----------------------------------
     in_range = (page >= 0) & (page < n_pages)
     p_safe = jnp.clip(page, 0, n_pages - 1)
     st = dict(st)
@@ -538,9 +554,9 @@ def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
     need_fetch = partial | miss
     st_f, slot_new = _alloc_slot(st, lazy)
     st_f = _map_slot(st_f, slot_new, p_safe, jnp.zeros((), bool))
-    hot_f = hot.at[slot_new].set(pool[p_safe])
+    hot_f = _payload_store(hot, slot_new, _payload_page(pool, p_safe))
     st = _tree_where(need_fetch, st_f, st)
-    hot = jnp.where(need_fetch, hot_f, hot)
+    hot = _payload_where(need_fetch, hot_f, hot)
 
     # eager policy: demand pages are consumed-on-arrival and never tracked —
     # unmap now, return the staging slot at the end of the call
@@ -556,10 +572,178 @@ def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
 
     out_slot = jnp.where(resident, slot0,
                          jnp.where(need_fetch, slot_new, NO_SLOT))
-    data = hot[jnp.maximum(out_slot, 0)]
+    data = jax.tree.map(lambda h: h[jnp.maximum(out_slot, 0)], hot)
     info = {"hit": resident, "prefetched_hit": was_pref_hit,
             "partial_hit": partial, "fetched": need_fetch}
     return st, ring, hot, out_slot, data, info
+
+
+@functools.partial(jax.jit, static_argnames=("lazy",), donate_argnums=(0, 1, 2))
+def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
+              page: jax.Array, now: jax.Array, lazy: bool = False,
+              land_ok: jax.Array | None = None,
+              ) -> tuple[dict, dict, jax.Array, jax.Array, jax.Array, dict]:
+    """Wait-phase of the async data path: land arrivals, serve one demand.
+
+    Args:
+      st:   pool metadata from :func:`pool_init`.
+      ring: in-flight ring from :func:`ring_init` (capacity >= 1).
+      hot:  ``[n_slots, ...]`` hot buffer (updated functionally).
+      pool: ``[n_pages, ...]`` slow tier.
+      page: ``int32`` demand page id of this step.
+      now:  ``int32`` step clock (compared against ring deadlines).
+      land_ok: optional ``bool[capacity]`` landing grant from the shared-link
+        arbitration layer (DESIGN.md §5): a due entry whose grant is False
+        stays in the ring — the link had no spare budget for it this step.
+        ``None`` grants everything (the unbudgeted per-stream path).
+
+    Two phases, mirroring the swap-in path over an async queue:
+
+    1. **Land** every ring entry with ``deadline <= now`` (and a landing
+       grant): allocate a slot (free stack, else eager FIFO / lazy LRU
+       eviction), copy the page in, and track it as an unconsumed prefetch —
+       this models DMA that completed during the *previous* step's compute.
+       An entry landing at ``now > deadline`` was budget-deferred and counts
+       ``n_deferred``.
+    2. **Serve** the demand. Hot-resident -> hit (a first hit on a
+       prefetched slot counts ``n_prefetch_hits`` and eager-frees it).
+       Still in the ring -> **partial hit**: the entry is completed
+       immediately (removed from the ring, data copied), counting both
+       ``n_prefetch_hits`` and ``n_partial_hits`` — the consumer blocked on
+       the residual transfer only (a partial completing past its deadline
+       also counts ``n_deferred``). Otherwise -> demand miss and fetch.
+
+    Returns ``(st, ring, hot, slot, data, info)`` where ``slot`` is the hot
+    slot serving the demand (-1 if out of range), ``data`` is
+    ``hot[slot]``, and ``info`` has scalar bool ``hit`` (resident full hit),
+    ``prefetched_hit`` (full hit on an unconsumed prefetch), ``partial_hit``
+    and ``fetched`` (this demand moved a page over the link: miss or
+    partial), plus the landing half of the copy plan: ``landed_pages`` /
+    ``landed_slots`` ``int32[capacity]`` (``-1`` = no landing) and the
+    matching bool mask ``landed``. As with :func:`pool_access`, slots
+    eager-freed here are unmapped immediately but stay readable until the
+    next pool call. ``hot``/``pool`` may be payload pytrees or ``None``
+    (metadata-only) as in :func:`pool_access`.
+    """
+    st, ring, hot, landed_pages, landed_slots = _land_due(
+        st, ring, hot, pool, now, lazy, land_ok)
+    st, ring, hot, out_slot, data, info = _serve_demand(
+        st, ring, hot, pool, page, now, lazy)
+    info = dict(info, landed=landed_pages >= 0, landed_pages=landed_pages,
+                landed_slots=landed_slots)
+    return st, ring, hot, out_slot, data, info
+
+
+@functools.partial(jax.jit, static_argnames=("lazy",), donate_argnums=(0, 1, 2))
+def pool_wait_batch(st: dict, ring: dict, hot, pool, pages: jax.Array,
+                    valid: jax.Array, now: jax.Array, lazy: bool = False,
+                    land_ok: jax.Array | None = None,
+                    ) -> tuple[dict, dict, jax.Array, jax.Array, dict]:
+    """Wait-phase with a *multi-page demand batch* (chunked context sweep).
+
+    Lands due ring arrivals once (exactly :func:`pool_wait` phase 1, with
+    the same optional ``land_ok`` budget grants), then serves ``pages``
+    (``int32[D]``, masked by ``valid``) as D sequential demand accesses —
+    one step of a chunked sweep that touches D context pages at a time
+    (DESIGN.md §6). Invalid entries are no-ops that leave every counter
+    untouched.
+
+    Returns ``(st, ring, hot, slots, info)``: ``slots int32[D]`` is where
+    each valid demand's data now resides; ``info`` has per-demand ``bool[D]``
+    masks ``hit`` / ``prefetched_hit`` / ``partial_hit`` / ``fetched`` plus
+    the landing copy plan ``landed`` / ``landed_pages`` / ``landed_slots``
+    (``[capacity]``). Metadata-only callers (``hot=None``) replay the full
+    copy plan themselves: first the landings, then the demand fetches
+    (``pages``/``slots`` where ``fetched``), matching the internal order.
+    Callers should size ``n_slots`` so one batch's evictions never race its
+    allocations (see :func:`pool_access`).
+    """
+    st, ring, hot, landed_pages, landed_slots = _land_due(
+        st, ring, hot, pool, now, lazy, land_ok)
+
+    def body(carry, d):
+        st, ring, hot = carry
+        page = jnp.where(valid[d], pages[d], NO_PAGE)
+        st, ring, hot, slot, _, info = _serve_demand(
+            st, ring, hot, pool, page, now, lazy)
+        return (st, ring, hot), (slot, info["hit"], info["prefetched_hit"],
+                                 info["partial_hit"], info["fetched"])
+
+    (st, ring, hot), (slots, hit, pref, part, fetched) = jax.lax.scan(
+        body, (st, ring, hot), jnp.arange(pages.shape[0]))
+    info = {"hit": hit, "prefetched_hit": pref, "partial_hit": part,
+            "fetched": fetched, "landed": landed_pages >= 0,
+            "landed_pages": landed_pages, "landed_slots": landed_slots}
+    return st, ring, hot, slots, info
+
+
+@functools.partial(jax.jit, donate_argnums=(0, 1))
+def pool_invalidate(st: dict, ring: dict, pages: jax.Array,
+                    valid: jax.Array) -> tuple[dict, dict]:
+    """Drop pages from the hot tier and the in-flight ring (write coherence).
+
+    The tiered-KV write path calls this after mutating a page's cold-tier
+    bytes (e.g. ``append_kv`` into the active tail page): a stale hot copy
+    or an already-issued fetch of the old bytes must never serve a later
+    access. Per valid, in-range page:
+
+    * hot-resident -> unmap + return the slot to the free stack; an
+      unconsumed prefetch counts ``n_pollution`` (fetched, never used).
+    * still in the in-flight ring -> the entry is removed and counts
+      ``n_pollution`` too, so the issued-prefetch decomposition of
+      :func:`pool_stats` keeps summing.
+
+    Returns ``(st, ring)``.
+    """
+    R = ring["page"].shape[0]
+    n_pages = st["page_slot"].shape[0]
+
+    def body(k, carry):
+        st, ring = carry
+        page = pages[k]
+        ok = valid[k] & (page >= 0) & (page < n_pages)
+        p_safe = jnp.clip(page, 0, n_pages - 1)
+        slot = st["page_slot"][p_safe]
+        resident = ok & (slot >= 0)
+        s_safe = jnp.maximum(slot, 0)
+        was_unconsumed = (resident & st["slot_prefetched"][s_safe]
+                          & ~st["slot_consumed"][s_safe])
+        st_u = _free_push(_unmap(dict(st), s_safe), s_safe)
+        st = _tree_where(resident, st_u, st)
+        st = dict(st)
+        st["n_pollution"] = st["n_pollution"] + was_unconsumed.astype(jnp.int32)
+        if R > 0:
+            match = (ring["page"] == page) & (ring["page"] >= 0) & ok
+            inflight = jnp.any(match)
+            mi = jnp.argmax(match)
+            ring = dict(ring)
+            ring["page"] = jnp.where(
+                inflight, ring["page"].at[mi].set(NO_PAGE), ring["page"])
+            st["n_pollution"] = st["n_pollution"] + inflight.astype(jnp.int32)
+        return st, ring
+
+    return jax.lax.fori_loop(0, pages.shape[0], body, (st, ring))
+
+
+def link_grants(ring: dict, now: jax.Array, cap: jax.Array) -> jax.Array:
+    """Budgeted landing grants across stacked rings (DESIGN.md §5).
+
+    ``ring`` is a leading-``[S]``-axis stack of :func:`ring_init` states,
+    ``now`` the ``int32[S]`` per-stream step clocks, ``cap`` the scalar
+    int32 number of prefetch landings the shared link can complete this
+    step (budget minus last step's demand fetches). Grants go to due
+    entries (``deadline <= now``) in ascending global issue order (``seq``,
+    FIFO over the link); everything else stays in the ring past its
+    deadline and will count ``n_deferred`` when it finally lands. Returns
+    ``bool[S, capacity]`` for :func:`pool_wait`/:func:`pool_wait_batch`'s
+    ``land_ok``.
+    """
+    due = (ring["page"] >= 0) & (ring["deadline"] <= now[:, None])
+    flat_due = due.reshape(-1)
+    flat_seq = ring["seq"].reshape(-1)
+    rank = jnp.sum(flat_due[None, :]
+                   & (flat_seq[None, :] < flat_seq[:, None]), axis=1)
+    return (flat_due & (rank < cap)).reshape(due.shape)
 
 
 def pool_stats(st: dict, ring: dict | None = None) -> dict:

@@ -1,13 +1,21 @@
-"""Batched serving driver: prefill + decode with paged KV and Leap stats.
+"""Batched serving driver: prefill + decode with tiered paged-KV serving.
 
 Serves batched requests against a (smoke-scale on CPU) model: prefill the
-prompt batch, then greedy-decode N tokens. ``--paged`` additionally mirrors
-every decoded step's KV-page appends into a paged pool and drives the
-Leap-prefetched hot-buffer stream over the page access schedule, reporting
-the prefetch hit rate — the serving-side integration of the paper.
+prompt batch, then greedy-decode N tokens. ``--paged`` additionally serves
+decode attention through the **tiered paged-KV cache**
+(:mod:`repro.paging.tiered_kv`): the model's real decoded K/V is mirrored
+into the cold paged pool, each decode step appends the new token's KV page
+bytes (invalidating the stale hot copy), every request's stream sweeps its
+context pages through a Leap-managed hot pool — sync batched or async
+issue/wait (``--async-datapath``), optionally under a shared link budget
+(``--streams`` / ``--link-budget``, DESIGN.md §5) — and attention runs over
+hot slots via the remapped page table. The driver pins the headline
+equivalence every step: tiered logits must be bit-identical to the
+flat-pool :func:`repro.paging.kv_cache.paged_decode_attention`
+(non-zero exit on mismatch, so CI can gate on it).
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_5_3b --smoke \
-      --batch 4 --prompt-len 32 --gen 16 --paged
+      --batch 4 --prompt-len 32 --gen 16 --paged --async-datapath
 """
 
 from __future__ import annotations
@@ -21,9 +29,30 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro.models.model import build_model
-from repro.paging.prefetch_serving import (PrefetchedStream,
-                                           multi_stream_consume, stream_stats,
-                                           stream_stats_at, stream_consume)
+from repro.paging.kv_cache import (append_kv, init_paged_kv,
+                                   linear_page_table, paged_decode_attention)
+from repro.paging.tiered_kv import (TieredKV, tiered_attention, tiered_init,
+                                    tiered_invalidate, tiered_min_slots,
+                                    tiered_stats, tiered_sweep)
+
+
+def _find_dense_kv(state) -> tuple[jax.Array, jax.Array] | tuple[None, None]:
+    """Pull one attention block's dense KV cache out of a decode state.
+
+    Returns ``(k, v)`` each ``[B, T, Hkv, dh]`` (first attention layer of
+    the scan period / the self-attention stack), or ``(None, None)`` for
+    cache-free families (pure mamba/xlstm) — the caller then mirrors
+    synthetic KV so the tiered data path is still exercised end to end.
+    """
+    cands = []
+    if isinstance(state, dict):
+        cands.extend(b for b in state.get("blocks", ()) if isinstance(b, dict))
+        if isinstance(state.get("self_kv"), dict):
+            cands.append(state["self_kv"])
+    for b in cands:
+        if "k" in b and "v" in b and getattr(b["k"], "ndim", 0) == 5:
+            return b["k"][0], b["v"][0]
+    return None, None
 
 
 def main(argv=None) -> dict:
@@ -34,25 +63,27 @@ def main(argv=None) -> dict:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--paged", action="store_true",
-                    help="drive the Leap-prefetched page stream alongside "
-                         "(see --async-datapath for the issue/wait variant)")
+                    help="serve decode attention through the tiered paged-KV "
+                         "cache (Leap-managed hot pool over the cold paged "
+                         "pool) and pin it bit-identical to the flat pool")
     ap.add_argument("--async-datapath", action="store_true",
-                    help="with --paged: fetch prefetch candidates through "
-                         "the issue/wait in-flight ring so their DMA "
-                         "overlaps the next decode step instead of blocking "
-                         "this one; reports partial hits + latency-hidden "
-                         "fraction (DESIGN.md §4)")
+                    help="with --paged: sweep context pages through the "
+                         "issue/wait in-flight ring so prefetch DMA "
+                         "overlaps the next chunk instead of blocking this "
+                         "one; reports partial hits (DESIGN.md §4/§6)")
     ap.add_argument("--ring-size", type=int, default=8,
                     help="in-flight ring capacity for --async-datapath")
+    ap.add_argument("--chunk", type=int, default=4,
+                    help="context pages demanded per sweep step (the "
+                         "multi-page demand batch of the tiered cache)")
     ap.add_argument("--streams", type=int, default=1,
-                    help="with --paged: drive this many concurrent page "
-                         "streams (one per request, batch-major) instead of "
-                         "one concatenated schedule — the paper's Fig. 13 "
-                         "multi-stream serving shape")
+                    help="with --paged: number of per-request page streams "
+                         "(stream s sweeps request s %% batch). Default/1 = "
+                         "one stream per request in the batch")
     ap.add_argument("--link-budget", type=int, default=None,
-                    help="with --paged --streams > 1: pages/step the shared "
-                         "fabric link can move across all streams; demand "
-                         "fetches are arbitrated first and surplus "
+                    help="with --paged: pages/step the shared fabric link "
+                         "can move across all streams' prefetches; demand "
+                         "chunks are arbitrated first and surplus "
                          "prefetches arrive late (reported as deferred — "
                          "DESIGN.md §5). Default: private infinite links")
     ap.add_argument("--page-size", type=int, default=4)
@@ -62,13 +93,13 @@ def main(argv=None) -> dict:
            else cfglib.get_config(args.arch))
     model = build_model(cfg)
     params, _ = model.init_params(jax.random.PRNGKey(0))
-    B, S = args.batch, args.prompt_len
-    max_len = S + args.gen
+    B, prompt_len = args.batch, args.prompt_len
+    max_len = prompt_len + args.gen
     rng = jax.random.PRNGKey(1)
-    prompts = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    prompts = jax.random.randint(rng, (B, prompt_len), 0, cfg.vocab_size)
     batch = {"tokens": prompts}
     if cfg.family == "encdec":
-        batch["frames"] = jax.random.normal(rng, (B, S, cfg.d_model),
+        batch["frames"] = jax.random.normal(rng, (B, prompt_len, cfg.d_model),
                                             jnp.dtype(cfg.dtype))
 
     decode = jax.jit(model.decode_step)
@@ -93,52 +124,120 @@ def main(argv=None) -> dict:
     }
 
     if args.paged:
-        # page access schedule of a chunked context sweep per request:
-        # sequential page ids — Leap detects, prefetches one step ahead.
-        npages = max_len // args.page_size + 1
-        geom = PrefetchedStream(n_pages=npages * B,
-                                n_slots=min(4 * 8 + 2, npages * B),
-                                page_elems=cfg.n_kv_heads * cfg.head_dim
-                                * args.page_size,
-                                ring_size=args.ring_size)
-        pool = jnp.zeros((geom.n_pages, geom.page_elems), jnp.float32)
-        if args.streams > 1:
-            # one stream per request (round-robin over the batch), all
-            # sharing the fabric link under the per-step budget
-            S = args.streams
-            scheds = jnp.asarray(np.stack(
-                [np.arange(npages) + (s % B) * npages for s in range(S)]),
-                jnp.int32)
-            st, _, info = multi_stream_consume(
-                pool, scheds, geom, async_datapath=args.async_datapath,
-                link_budget=args.link_budget)
-            per = [stream_stats_at(st, i) for i in range(S)]
-            result["paged_streams"] = S
-            result["paged_prefetch_hit_rate"] = round(
-                float(np.mean([p["coverage"] for p in per])), 3)
-            result["paged_pollution"] = sum(p["pollution"] for p in per)
-            result["paged_partial_hits"] = sum(p["partial_hits"] for p in per)
-            result["paged_deferred"] = sum(p["deferred"] for p in per)
-            result["paged_ring_drops"] = sum(p["ring_drops"] for p in per)
-            if args.link_budget is not None:
-                result["paged_link_budget"] = args.link_budget
-                result["paged_link_demand_fetches"] = int(
-                    np.sum(np.asarray(info["link_demand_fetches"])))
-        else:
-            st, _, info = stream_consume(pool, jnp.asarray(np.concatenate(
-                [np.arange(npages) + b * npages for b in range(B)]),
-                jnp.int32), geom, async_datapath=args.async_datapath)
-            s = stream_stats(st)
-            result["paged_prefetch_hit_rate"] = round(s["coverage"], 3)
-            result["paged_pollution"] = s["pollution"]
-            if args.async_datapath:
-                result["paged_partial_hits"] = s["partial_hits"]
-                result["paged_latency_hidden_frac"] = round(
-                    s["latency_hidden_frac"], 3)
-                result["paged_inflight_at_end"] = s["inflight_at_end"]
+        result.update(_serve_tiered(cfg, state, args, B, prompt_len, max_len))
+        if not result["tiered_equiv_ok"]:
+            print(result)
+            raise SystemExit("tiered/flat decode attention mismatch")
 
     print(result)
     return result
+
+
+def _serve_tiered(cfg, state, args, B: int, prompt_len: int,
+                  max_len: int) -> dict:
+    """Replay the decode window through the tiered paged-KV data path.
+
+    Mirrors the model's real decoded K/V into the cold paged pool, then per
+    decode step: append the step's KV (``append_kv``), invalidate the
+    written page in every stream's hot tier, demand-sweep each request's
+    context pages through its hot pool, and serve attention from hot slots
+    — asserting bit-identity against the flat pool every step.
+    """
+    ps = args.page_size
+    npps = -(-max_len // ps)
+    n_pages = B * npps
+    hkv, hq, dh = cfg.n_kv_heads, cfg.n_heads, cfg.head_dim
+    n_streams = args.streams if args.streams > 1 else B
+
+    kd, vd = _find_dense_kv(state)
+    if kd is None:
+        # cache-free family: synthetic KV, the data path is still real
+        kd = jax.random.normal(jax.random.PRNGKey(7),
+                               (B, max_len, hkv, dh), jnp.dtype(cfg.dtype))
+        vd = jax.random.normal(jax.random.PRNGKey(8),
+                               (B, max_len, hkv, dh), jnp.dtype(cfg.dtype))
+
+    def pad_to(x, T):
+        if x.shape[1] >= T:
+            return x[:, :T]
+        return jnp.concatenate(
+            [x, jnp.zeros((B, T - x.shape[1]) + x.shape[2:], x.dtype)], 1)
+
+    kd, vd = pad_to(kd, npps * ps), pad_to(vd, npps * ps)
+    pt_full = linear_page_table(B, npps)
+
+    # Cold tier: mirror the prompt prefix now; decode positions are appended
+    # step by step inside the replay loop (the real write path).
+    pool = init_paged_kv(1, n_pages, ps, hkv, dh, kd.dtype)
+    pos_ids = jnp.arange(npps * ps)
+    prefix = lambda x: jnp.where((pos_ids < prompt_len)[None, :, None, None],
+                                 x, 0)
+    to_pages = lambda x: x.reshape(B * npps, ps, hkv, dh)
+    pool = {"k": pool["k"].at[0, pt_full.reshape(-1)].set(
+                to_pages(prefix(kd))),
+            "v": pool["v"].at[0, pt_full.reshape(-1)].set(
+                to_pages(prefix(vd)))}
+
+    # Satellite fix: n_slots derived from the sweep geometry (the documented
+    # residency floor), not a hardcoded constant that ignores pw_max/ring.
+    proto = TieredKV(n_pages, 1, ps, hkv, dh, chunk=args.chunk,
+                     ring_size=args.ring_size)
+    geom = TieredKV(n_pages, tiered_min_slots(npps, proto), ps, hkv, dh,
+                    chunk=args.chunk, ring_size=args.ring_size)
+    tstate = tiered_init(geom, n_streams, kd.dtype)
+    rows = jnp.stack([pt_full[s % B] for s in range(n_streams)])
+
+    equiv_ok = True
+    deferred = partials = 0
+    t_tiered = 0.0
+    for t in range(args.gen - 1):
+        pos = prompt_len + t
+        pool = append_kv(pool, jnp.int32(0), kd[:, pos], vd[:, pos],
+                         pt_full, jnp.int32(pos))
+        written = pt_full[:, pos // ps]                      # [B]
+        tstate = tiered_invalidate(
+            tstate, jnp.stack([written[s % B] for s in range(n_streams)]
+                              )[:, None])
+        cold = {"k": pool["k"][0], "v": pool["v"][0]}
+        lengths = jnp.full((n_streams,), pos + 1, jnp.int32)
+        q = jax.random.normal(jax.random.PRNGKey(100 + t),
+                              (n_streams, 1, hq, dh), jnp.dtype(cfg.dtype))
+        # timed window covers only the serving path (sweep + attention);
+        # the flat-pool reference and the bitwise pin check run outside it
+        t0 = time.perf_counter()
+        tstate, info = tiered_sweep(tstate, cold, rows, geom,
+                                    async_datapath=args.async_datapath,
+                                    link_budget=args.link_budget)
+        tiered, resident = tiered_attention(q, tstate, rows, lengths)
+        jax.block_until_ready(tiered)
+        t_tiered += time.perf_counter() - t0
+        flat = paged_decode_attention(
+            q, pool, jnp.int32(0), rows, lengths)
+        equiv_ok &= bool(resident) and bool(
+            (np.asarray(tiered) == np.asarray(flat)).all())
+        deferred += int(np.asarray(info["deferred"]).sum())
+        partials += int(np.asarray(info["partial_hit"]).sum())
+
+    per = [tiered_stats(tstate, s) for s in range(n_streams)]
+    out = {
+        "tiered_equiv_ok": equiv_ok,
+        "tiered_streams": n_streams,
+        "tiered_n_slots": geom.n_slots,
+        "tiered_hot_frac": round(n_streams * geom.n_slots / n_pages, 3),
+        "tiered_decode_s": round(t_tiered, 3),
+        "paged_prefetch_hit_rate": round(
+            float(np.mean([p["coverage"] for p in per])), 3),
+        "paged_pollution": sum(p["pollution"] for p in per),
+        "paged_ring_drops": sum(p["ring_drops"] for p in per),
+    }
+    if args.async_datapath:
+        out["paged_partial_hits"] = partials
+        out["paged_latency_hidden_frac"] = round(
+            float(np.mean([p["latency_hidden_frac"] for p in per])), 3)
+    if args.link_budget is not None:
+        out["paged_link_budget"] = args.link_budget
+        out["paged_deferred"] = deferred
+    return out
 
 
 if __name__ == "__main__":

@@ -5,8 +5,10 @@ vLLM-style paged KV pool (page dim mesh-shardable = the remote tier);
 ``prefetch_serving`` wires the jittable Leap controller + hot-buffer pool +
 gather_pages kernel into a page-stream consumer, with a sync (blocking
 batched fetch) and an async (issue/wait in-flight ring, DESIGN.md §4) data
-path; ``expert_stream`` applies the same controller to MoE expert-id
-streams (weight paging).
+path; ``tiered_kv`` puts a Leap-managed HBM hot pool in front of the cold
+KV pool and serves real decode attention from it (chunked demand sweep +
+remapped page table, DESIGN.md §6); ``expert_stream`` applies the same
+controller to MoE expert-id streams (weight paging).
 """
 
 from .kv_cache import (PageAllocator, append_kv, init_paged_kv,
@@ -14,10 +16,16 @@ from .kv_cache import (PageAllocator, append_kv, init_paged_kv,
 from .prefetch_serving import (PrefetchedStream, multi_stream_consume,
                                stream_consume, stream_init, stream_step,
                                stream_step_async, stream_stats)
+from .tiered_kv import (TieredKV, tiered_attention, tiered_decode_step,
+                        tiered_init, tiered_invalidate, tiered_min_slots,
+                        tiered_slot_table, tiered_stats, tiered_sweep)
 from .expert_stream import ExpertPrefetcher
 
 __all__ = ["PageAllocator", "append_kv", "init_paged_kv",
            "linear_page_table", "paged_decode_attention",
            "PrefetchedStream", "multi_stream_consume", "stream_consume",
            "stream_init", "stream_step", "stream_step_async", "stream_stats",
+           "TieredKV", "tiered_attention", "tiered_decode_step",
+           "tiered_init", "tiered_invalidate", "tiered_min_slots",
+           "tiered_slot_table", "tiered_stats", "tiered_sweep",
            "ExpertPrefetcher"]

@@ -17,10 +17,10 @@ Two allocators:
 from __future__ import annotations
 
 import dataclasses
+import math
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.kernels.paged_attention import paged_attention
 
@@ -42,12 +42,25 @@ def kv_pool_specs(n_layers: int) -> dict:
 
 def linear_page_table(batch: int, n_pages_per_seq: int,
                       stride: int = 1) -> jax.Array:
-    """Static allocation: seq b's logical page j -> b*npps + j (strided).
+    """Static allocation: seq b's logical page j -> b*npps + (j*stride % npps).
+
+    ``stride`` spreads a sequence's logical pages over its physical range
+    (consecutive logical pages land ``stride`` physical pages apart, e.g. on
+    different shards). ``j -> j*stride % npps`` is a permutation of
+    ``[0, npps)`` only when ``gcd(stride, npps) == 1``; any other stride
+    collides physical pages within the sequence (stride=2, npps=4 maps
+    logical pages to 0,2,0,2 — two logical pages silently sharing storage),
+    so non-coprime strides are rejected.
 
     Returns ``int32[batch, n_pages_per_seq]`` of physical page ids.
     """
+    if math.gcd(stride, n_pages_per_seq) != 1:
+        raise ValueError(
+            f"stride={stride} is not coprime with n_pages_per_seq="
+            f"{n_pages_per_seq}: j*stride % npps would collide physical "
+            "pages within a sequence")
     base = jnp.arange(batch)[:, None] * n_pages_per_seq
-    return (base + jnp.arange(n_pages_per_seq)[None, :] * stride
+    return (base + (jnp.arange(n_pages_per_seq)[None, :] * stride)
             % n_pages_per_seq).astype(jnp.int32)
 
 

@@ -46,9 +46,14 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.leap_jax import leap_init, leap_step, leap_step_batched
-from repro.core.pool import (pool_access, pool_init, pool_issue, pool_stats,
-                             pool_wait, ring_init)
+from repro.core.pool import (link_grants, pool_access, pool_init, pool_issue,
+                             pool_stats, pool_wait, ring_init)
 from repro.core.window import DEFAULT_PW_MAX
+
+
+def _payload_checksum(data):
+    """Scalar checksum of a served payload (array or pytree of arrays)."""
+    return sum(jax.tree.leaves(jax.tree.map(lambda d: d.sum(), data)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,18 +83,30 @@ class PrefetchedStream:
     arrival_delay: int = 1
 
 
-def stream_init(geom: PrefetchedStream, dtype=jnp.float32) -> dict:
+def stream_init(geom: PrefetchedStream, dtype=jnp.float32,
+                payload_like=None) -> dict:
     """Fresh stream state: controller + pool metadata + hot buffer + ring.
 
     Returns a pytree dict with keys ``leap`` (controller state),
     ``pool_meta`` (:func:`repro.core.pool.pool_init`), ``hot``
     (``[n_slots, page_elems]`` of ``dtype``) and ``ring``
     (:func:`repro.core.pool.ring_init`, inert on the sync path).
+
+    ``payload_like`` switches the hot buffer to a structured payload: pass
+    the slow-tier pytree (leaves ``[n_pages, ...]``, e.g. a ``{"k","v"}``
+    KV-page pair) and each hot leaf becomes ``[n_slots, ...]`` of the
+    matching trailing shape/dtype — the pool layer moves all leaves of a
+    slot together (DESIGN.md §6). ``geom.page_elems``/``dtype`` are ignored
+    in that mode.
     """
+    hot = (jnp.zeros((geom.n_slots, geom.page_elems), dtype)
+           if payload_like is None else
+           jax.tree.map(lambda c: jnp.zeros((geom.n_slots,) + c.shape[1:],
+                                            c.dtype), payload_like))
     return {
         "leap": leap_init(geom.h_size),
         "pool_meta": pool_init(geom.n_pages, geom.n_slots),
-        "hot": jnp.zeros((geom.n_slots, geom.page_elems), dtype),
+        "hot": hot,
         "ring": ring_init(geom.ring_size),
     }
 
@@ -132,7 +149,7 @@ def stream_step(state: dict, pool_data: jax.Array, page: jax.Array,
                            valid & (cands >= 0) & (cands < geom.n_pages)])
     meta, hot, slots, info = pool_access(meta, state["hot"], pool_data,
                                          pages, is_pf, val)
-    data = hot[jnp.maximum(slots[0], 0)]
+    data = jax.tree.map(lambda h: h[jnp.maximum(slots[0], 0)], hot)
     return ({**state, "leap": new_leap, "pool_meta": meta, "hot": hot},
             data, {"hit": info["hit"][0], "pref_hit": info["prefetched_hit"][0],
                    "partial_hit": jnp.zeros((), bool),
@@ -198,7 +215,10 @@ def stream_consume(pool_data: jax.Array, schedule: jax.Array,
     """Run a whole access schedule through the stream; scan-jitted.
 
     Args:
-      pool_data: ``[n_pages, page_elems]`` slow tier.
+      pool_data: ``[n_pages, page_elems]`` slow tier — or a payload pytree
+        whose leaves share the leading page axis (``{"k","v"}`` KV pages);
+        the hot buffer mirrors its structure (:func:`stream_init`
+        ``payload_like``) and all leaves of a page move together.
       schedule: ``int32[T]`` demand page ids.
       state: optional stream state to continue from (default: fresh).
       async_datapath: static switch — False replays the sync batched path
@@ -206,7 +226,8 @@ def stream_consume(pool_data: jax.Array, schedule: jax.Array,
         (:func:`stream_step_async`).
 
     Returns ``(state, data_sums, info)``: ``data_sums`` is a ``[T]`` checksum
-    of each served page's payload, ``info`` has bool ``[T]`` arrays ``hit``,
+    of each served page's payload (summed across leaves for structured
+    payloads), ``info`` has bool ``[T]`` arrays ``hit``,
     ``pref_hit``, ``partial_hit`` (all-False on the sync path) and
     ``fetched`` (demand moved a page over the link), plus int32 ``[T]``
     arrays ``issued`` (candidates fetched/enqueued per step) and
@@ -214,12 +235,14 @@ def stream_consume(pool_data: jax.Array, schedule: jax.Array,
     non-zero under the budgeted multi-stream path).
     """
     if state is None:
-        state = stream_init(geom, pool_data.dtype)
+        state = (stream_init(geom, pool_data.dtype)
+                 if isinstance(pool_data, jax.Array)
+                 else stream_init(geom, payload_like=pool_data))
     step_fn = stream_step_async if async_datapath else stream_step
 
     def body(st, page):
         st, data, info = step_fn(st, pool_data, page, geom)
-        return st, (data.sum(), info["hit"], info["pref_hit"],
+        return st, (_payload_checksum(data), info["hit"], info["pref_hit"],
                     info["partial_hit"], info["fetched"], info["issued"],
                     info["deferred"])
 
@@ -313,7 +336,9 @@ def _multi_stream_consume_budgeted(pool_data: jax.Array,
     """
     S, T = schedules.shape
     K = geom.pw_max
-    one = stream_init(geom, pool_data.dtype)
+    one = (stream_init(geom, pool_data.dtype)
+           if isinstance(pool_data, jax.Array)
+           else stream_init(geom, payload_like=pool_data))
     state0 = jax.tree.map(
         lambda x: jnp.broadcast_to(x[None], (S,) + x.shape), one)
     stream_ids = jnp.arange(S, dtype=jnp.int32)
@@ -332,12 +357,7 @@ def _multi_stream_consume_budgeted(pool_data: jax.Array,
         now = ring["now"]                                  # int32[S], == t
         # --- landing grants: leftover budget, global seq order --------------
         cap = jnp.maximum(jnp.int32(link_budget) - d_prev, 0)
-        due = (ring["page"] >= 0) & (ring["deadline"] <= now[:, None])
-        flat_due = due.reshape(-1)
-        flat_seq = ring["seq"].reshape(-1)
-        rank = jnp.sum(flat_due[None, :]
-                       & (flat_seq[None, :] < flat_seq[:, None]), axis=1)
-        allowed = (flat_due & (rank < cap)).reshape(due.shape)
+        allowed = link_grants(ring, now, cap)
         # --- wait/serve ------------------------------------------------------
         deferred0 = meta["n_deferred"]
         meta, ring, hot, slot, data, winfo = jax.vmap(_wait)(
@@ -359,7 +379,9 @@ def _multi_stream_consume_budgeted(pool_data: jax.Array,
         deferred_s = meta["n_deferred"] - deferred0        # int32[S]
         state = {"leap": new_leap, "pool_meta": meta, "hot": hot,
                  "ring": ring}
-        outs = (data.sum(-1), winfo["hit"], winfo["prefetched_hit"],
+        sums = sum(jax.tree.leaves(jax.tree.map(
+            lambda d: d.reshape(S, -1).sum(-1), data)))
+        outs = (sums, winfo["hit"], winfo["prefetched_hit"],
                 winfo["partial_hit"], winfo["fetched"], issued_s, deferred_s,
                 d_t, jnp.sum(issued_s), jnp.sum(deferred_s))
         return (state, d_t), outs

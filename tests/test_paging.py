@@ -52,6 +52,54 @@ class TestPagedKV:
         with pytest.raises(MemoryError):
             al.alloc_seq(4, 1)
 
+    def test_allocator_random_ops_round_trip(self):
+        """Property-style alloc/extend/free round trip: no page is ever
+        owned twice, ``in_use`` tracks exactly the outstanding pages, and
+        exhaustion raises without corrupting state."""
+        import random
+        rng = random.Random(0)
+        n_pages = 24
+        al = PageAllocator(n_pages)
+        owned: dict[int, list[int]] = {}
+        for step in range(300):
+            op = rng.random()
+            if op < 0.45:
+                seq, n = rng.randrange(8), rng.randrange(1, 4)
+                if n <= n_pages - sum(map(len, owned.values())):
+                    pages = (al.extend_seq(seq, n) if seq in owned
+                             else al.alloc_seq(seq, n))
+                    assert len(pages) == n
+                    owned.setdefault(seq, []).extend(pages)
+                else:
+                    with pytest.raises(MemoryError):
+                        al.alloc_seq(seq, n)
+            elif op < 0.8 and owned:
+                seq = rng.choice(list(owned))
+                assert al.free_seq(seq) == len(owned.pop(seq))
+            else:
+                assert al.free_seq(999) == 0        # unknown seq is a no-op
+            flat = [p for ps in owned.values() for p in ps]
+            assert len(flat) == len(set(flat))      # no double allocation
+            assert all(0 <= p < n_pages for p in flat)
+            assert al.in_use == len(flat)
+        for seq in list(owned):
+            al.free_seq(seq)
+        assert al.in_use == 0
+        assert sorted(al.alloc_seq(0, n_pages)) == list(range(n_pages))
+
+    def test_linear_page_table_strided_is_permutation(self):
+        """Regression (kv_cache stride bug): ``j*stride % npps`` must be a
+        within-sequence permutation — the old precedence bug collided
+        physical pages whenever gcd(stride, npps) != 1."""
+        for npps, stride in ((8, 3), (8, 5), (9, 2), (7, 6), (8, 1)):
+            pt = np.asarray(linear_page_table(3, npps, stride))
+            for b in range(3):
+                assert sorted(pt[b]) == list(range(b * npps, (b + 1) * npps))
+        with pytest.raises(ValueError, match="coprime"):
+            linear_page_table(2, 4, 2)              # 0,2,0,2 collision
+        with pytest.raises(ValueError, match="coprime"):
+            linear_page_table(1, 6, 9)
+
 
 class TestPrefetchedStream:
     GEOM = PrefetchedStream(n_pages=128, n_slots=24, page_elems=4)
@@ -77,6 +125,20 @@ class TestPrefetchedStream:
         sched = jax.random.randint(jax.random.PRNGKey(1), (150,), 0, 128)
         st, _, _ = stream_consume(self._pool(), sched, self.GEOM)
         assert stream_stats(st)["prefetch_issued"] < 15
+
+    def test_structured_kv_payload_moves_leaves_together(self):
+        """DESIGN.md §6: a {"k","v"} payload pytree rides the same stream —
+        both leaves of a page move together and the checksum sums them."""
+        kv = {"k": jnp.arange(128 * 4, dtype=jnp.float32).reshape(128, 4),
+              "v": -jnp.arange(128 * 4, dtype=jnp.float32).reshape(128, 4)}
+        sched = jnp.arange(60, dtype=jnp.int32)
+        for async_dp in (False, True):
+            st, sums, info = stream_consume(kv, sched, self.GEOM,
+                                            async_datapath=async_dp)
+            expect = (kv["k"][sched] + kv["v"][sched]).sum(-1)
+            np.testing.assert_allclose(np.asarray(sums), np.asarray(expect))
+            assert st["hot"]["k"].shape == (self.GEOM.n_slots, 4)
+        assert float(info["pref_hit"][20:].mean()) > 0.9
 
     def test_multi_stream_isolation(self):
         """Paper Fig. 13: concurrent streams keep their own detectors."""
