@@ -14,7 +14,7 @@ import time
 from . import (datapath_overlap, fabric_scale, fig2_microbenchmark,
                fig3_patterns, fig8_slow_storage, fig9_10_prefetchers,
                fig11_apps, fig12_cache_size, fig13_multiapp, jax_stream,
-               link_contention, roofline, tiered_kv)
+               link_contention, roofline, sharded_pool, tiered_kv)
 from .common import fmt_table
 
 SUITES = {
@@ -29,6 +29,7 @@ SUITES = {
     "jax_stream": jax_stream.run,
     "datapath_overlap": datapath_overlap.run,
     "link_contention": link_contention.run,
+    "sharded_pool": sharded_pool.run,
     "tiered_kv": tiered_kv.run,
     "roofline": roofline.run,
 }

@@ -67,6 +67,48 @@ NO_PAGE = jnp.int32(-1)
 NO_SLOT = jnp.int32(-1)
 
 
+# ---- home-shard metadata (DESIGN.md §7) -------------------------------------
+# The cold pool may be sharded over a device mesh's ``fabric`` axis: every
+# page has a *home shard* (the device whose HBM slice physically holds it,
+# behind that device's NIC). Two placement policies:
+#
+# * ``"block"``      — shard g holds the contiguous id range
+#                      ``[g*pps, (g+1)*pps)`` (pps = n_pages // n_shards).
+# * ``"interleave"`` — page p lives on shard ``p % n_shards`` (consecutive
+#                      ids round-robin across NICs).
+#
+# ``page_home``/``page_local`` are the single source of the mapping — the
+# jitted sharded data path, the per-shard link arbiter and the lock-step
+# fabric mirror (``repro.fabric.shardstep``) all call them.
+
+PLACEMENTS = ("block", "interleave")
+
+
+def page_home(pages: jax.Array, n_pages: int, n_shards: int,
+              placement: str) -> jax.Array:
+    """Home shard of each page id (same shape; invalid ids map to shard of
+    their clipped value — callers mask with their own validity)."""
+    if placement not in PLACEMENTS:
+        raise ValueError(f"placement must be one of {PLACEMENTS}, "
+                         f"got {placement!r}")
+    p = jnp.clip(pages, 0, n_pages - 1)
+    if placement == "interleave":
+        return jnp.mod(p, n_shards).astype(jnp.int32)
+    return (p // (n_pages // n_shards)).astype(jnp.int32)
+
+
+def page_local(pages: jax.Array, n_pages: int, n_shards: int,
+               placement: str) -> jax.Array:
+    """Index of each page within its home shard's ``[pps, ...]`` slice."""
+    if placement not in PLACEMENTS:
+        raise ValueError(f"placement must be one of {PLACEMENTS}, "
+                         f"got {placement!r}")
+    p = jnp.clip(pages, 0, n_pages - 1)
+    if placement == "interleave":
+        return (p // n_shards).astype(jnp.int32)
+    return jnp.mod(p, n_pages // n_shards).astype(jnp.int32)
+
+
 def pool_init(n_pages: int, n_slots: int) -> dict:
     """Metadata state for an ``n_pages`` pool cached by ``n_slots`` hot slots.
 
@@ -219,6 +261,35 @@ def _tree_where(cond: jax.Array, on_true: dict, on_false: dict) -> dict:
     return jax.tree.map(lambda b, a: jnp.where(cond, b, a), on_true, on_false)
 
 
+def _check_batch_geometry(st: dict, K: int, lazy: bool, fn: str) -> None:
+    """Trace-time enforcement of the per-batch hot-buffer floor.
+
+    * **eager** (``lazy=False``): slots freed during a batch (consumed
+      prefetches, demand staging) are only pushed back onto the free stack
+      at the end of the call, so a batch of K requests can transiently pin
+      up to ``2*K`` slots (K live + K pending frees). A smaller buffer
+      forces the allocator to evict a slot whose deferred free is still
+      queued — the later push then hands the same slot out twice and the
+      page<->slot metadata silently corrupts.
+    * **lazy** (LRU): nothing is freed mid-batch, but with fewer than
+      ``K`` slots the LRU argmin must evict a slot *mapped earlier in the
+      same batch* (everything older is already gone), clobbering data the
+      caller was promised to read back — so the floor is ``K``.
+
+    Shapes are static under jit: raises at trace time, never on device.
+    """
+    n_slots = st["slot_page"].shape[-1]
+    if lazy:
+        need, why = f"K={K}", "the lazy LRU would re-evict same-batch slots"
+    else:
+        need = f"2*K={2 * K}"
+        why = "a batch can pin 2*K slots (live + deferred eager frees)"
+    if n_slots < (K if lazy else 2 * K):
+        raise ValueError(
+            f"{fn}: n_slots={n_slots} < {need} — {why}; "
+            "size the hot buffer up or split the batch")
+
+
 # ---- payload pytree helpers -------------------------------------------------
 # ``hot``/``pool`` payloads are pytrees whose leaves share a leading
 # slot/page axis; a bare array is the single-leaf case and ``None`` is the
@@ -299,10 +370,14 @@ def pool_access(st: dict, hot: jax.Array, pool: jax.Array,
     Slots eager-freed during this batch (consumed prefetches, demand staging)
     are *unmapped immediately* but only returned to the free stack at the end
     of the batch, so their data stays readable until the next call — the
-    caller reads ``hot[slots]`` between calls. Callers should size
-    ``n_slots >= 2*K`` so eviction never races a same-batch allocation.
+    caller reads ``hot[slots]`` between calls. Callers must size
+    ``n_slots >= 2*K`` (eager; deferred frees can pin a second K) or
+    ``>= K`` (lazy; the LRU must never re-evict a same-batch slot) —
+    violating geometries raise at trace time instead of silently
+    corrupting the page<->slot mapping.
     """
     K = pages.shape[0]
+    _check_batch_geometry(st, K, lazy, "pool_access")
 
     def step(carry, k):
         st, hot = carry
@@ -392,14 +467,17 @@ def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
       pages: ``int32[K]`` candidate page ids.
       valid: ``bool[K]`` request mask.
       now:   ``int32`` step clock of the issuing step.
-      delay: ``int32`` steps until arrival; entries get
-             ``deadline = now + delay`` and are landed by the first
-             :func:`pool_wait` whose ``now`` reaches it (``delay=1`` =
-             double-buffered: issued at *t*, consumable at *t+1*). Clamped
-             to >= 1: issue runs after the step's wait, so no landing can
-             precede the next step's wait anyway, and an unreachable
-             deadline in the past would miscount every landing as
-             budget-``deferred``.
+      delay: ``int32`` scalar — or ``int32[K]`` *per-candidate* — steps
+             until arrival; entries get ``deadline = now + delay`` and are
+             landed by the first :func:`pool_wait` whose ``now`` reaches it
+             (``delay=1`` = double-buffered: issued at *t*, consumable at
+             *t+1*). The vector form carries the sharded fabric's near/far
+             asymmetry (DESIGN.md §7): a candidate homed on the consumer's
+             own shard arrives after ``near_delay`` steps, a cross-shard
+             candidate after ``far_delay``. Clamped to >= 1: issue runs
+             after the step's wait, so no landing can precede the next
+             step's wait anyway, and an unreachable deadline in the past
+             would miscount every landing as budget-``deferred``.
       seq:   optional ``int32[K]`` global issue-order stamps used by the
              shared-link arbitration layer (ascending across every issue on
              the link; see DESIGN.md §5). ``None`` stamps zeros — fine for
@@ -418,7 +496,7 @@ def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
         return st, ring
     K = pages.shape[0]
     n_pages = st["page_slot"].shape[0]
-    delay = jnp.maximum(delay, 1)
+    delay = jnp.broadcast_to(jnp.maximum(delay, 1), (K,))
     if seq is None:
         seq = jnp.zeros((K,), jnp.int32)
 
@@ -435,7 +513,7 @@ def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
         pos = jnp.argmax(free_mask)
         ring_new = dict(ring)
         ring_new["page"] = ring["page"].at[pos].set(p_safe)
-        ring_new["deadline"] = ring["deadline"].at[pos].set(now + delay)
+        ring_new["deadline"] = ring["deadline"].at[pos].set(now + delay[k])
         ring_new["seq"] = ring["seq"].at[pos].set(seq[k])
         take = want & have_space
         ring = _tree_where(take, ring_new, ring)
@@ -655,9 +733,11 @@ def pool_wait_batch(st: dict, ring: dict, hot, pool, pages: jax.Array,
     (``[capacity]``). Metadata-only callers (``hot=None``) replay the full
     copy plan themselves: first the landings, then the demand fetches
     (``pages``/``slots`` where ``fetched``), matching the internal order.
-    Callers should size ``n_slots`` so one batch's evictions never race its
-    allocations (see :func:`pool_access`).
+    Callers must size ``n_slots >= 2*D`` (eager) / ``>= D`` (lazy) so one
+    batch's evictions never race its allocations (see
+    :func:`pool_access`); violating geometries raise at trace time.
     """
+    _check_batch_geometry(st, pages.shape[0], lazy, "pool_wait_batch")
     st, ring, hot, landed_pages, landed_slots = _land_due(
         st, ring, hot, pool, now, lazy, land_ok)
 
@@ -744,6 +824,38 @@ def link_grants(ring: dict, now: jax.Array, cap: jax.Array) -> jax.Array:
     rank = jnp.sum(flat_due[None, :]
                    & (flat_seq[None, :] < flat_seq[:, None]), axis=1)
     return (flat_due & (rank < cap)).reshape(due.shape)
+
+
+def link_grants_sharded(ring: dict, now: jax.Array, caps: jax.Array,
+                        homes: jax.Array) -> jax.Array:
+    """Per-shard landing grants: one §5 demand-first arbiter per NIC.
+
+    The mesh-sharded cold pool (DESIGN.md §7) has one link *per shard*
+    rather than one global link: a prefetch of page p occupies the NIC of
+    p's home shard, so grants are ranked and capped independently per
+    shard. Args mirror :func:`link_grants` except:
+
+    * ``caps`` is ``int32[n_shards]`` — shard g's landing capacity this
+      step (its budget minus last step's demand fetches *on g*).
+    * ``homes`` is ``int32[S, capacity]`` — the home shard of each ring
+      entry's page (value irrelevant for empty entries: ``due`` masks
+      them).
+
+    Within each shard the discipline is exactly :func:`link_grants`: due
+    entries in ascending global ``seq`` up to the shard's cap. With
+    ``n_shards == 1`` (all homes 0, ``caps = [cap]``) this reduces
+    bit-exactly to :func:`link_grants` — the shards=1 equivalence pin
+    rides on that reduction. Returns ``bool[S, capacity]``.
+    """
+    due = (ring["page"] >= 0) & (ring["deadline"] <= now[:, None])
+    flat_due = due.reshape(-1)
+    flat_seq = ring["seq"].reshape(-1)
+    flat_home = homes.reshape(-1)
+    same_shard = flat_home[None, :] == flat_home[:, None]
+    rank = jnp.sum(flat_due[None, :] & same_shard
+                   & (flat_seq[None, :] < flat_seq[:, None]), axis=1)
+    cap_of = caps[jnp.clip(flat_home, 0, caps.shape[0] - 1)]
+    return (flat_due & (rank < cap_of)).reshape(due.shape)
 
 
 def pool_stats(st: dict, ring: dict | None = None) -> dict:

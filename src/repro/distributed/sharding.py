@@ -44,6 +44,13 @@ RULES_TRAIN = {
 }
 
 RULES_SERVE = dict(RULES_TRAIN)
+# serving: the paged cold-KV pool's page axis goes to the disaggregated
+# 'fabric' axis (DESIGN.md §7) when the mesh has one, else to 'data'. A
+# *list* is a preference order (exactly one axis is chosen) — unlike a
+# tuple, which shards over the product of its axes; splitting pages over
+# fabric x data would break the home-major placement invariant (each
+# fabric shard must own its whole n_pages/n_shards slice).
+RULES_SERVE["pages"] = ["fabric", "data"]
 
 
 def rules_for(mode: str, multi_pod: bool) -> dict:
@@ -71,11 +78,16 @@ def named_sharding_for(axes: tuple, shape: tuple, mesh: Mesh,
     parts = []
     for dim, name in zip(shape, axes):
         ax = rules.get(name) if name else None
+        if isinstance(ax, list):
+            # preference order: the first axis this mesh actually has
+            ax = next((a for a in ax if a in mesh.shape), None)
         if ax is None:
             parts.append(None)
             continue
         ax_t = (ax,) if isinstance(ax, str) else tuple(ax)
-        ax_t = tuple(a for a in ax_t if a not in used)
+        # axes the mesh doesn't have are dropped (e.g. 'fabric' on a pure
+        # compute mesh), like the divisibility fallback below
+        ax_t = tuple(a for a in ax_t if a not in used and a in mesh.shape)
         size = _axes_size(mesh, ax_t)
         if not ax_t or size <= 1 or dim % size != 0:
             parts.append(None)

@@ -14,6 +14,10 @@ Layout (see DESIGN.md §3):
 * :mod:`sim`     — scenario runner; also backs ``repro.core.simulate``.
 * :mod:`linkstep` — lock-step width-B link twin of the budgeted jitted
   multi-stream path (DESIGN.md §5); the counts cross-validation bridge.
+* :mod:`shardstep` — lock-step *sharded*-fabric twin (one NIC per home
+  shard, near/far arrival, DESIGN.md §7) of the mesh-sharded cold pool;
+  the event engine mirrors the same placement via per-tenant home nodes
+  (``TenantSpec.home_node`` + ``FabricScenario.n_nodes``).
 """
 
 from .engine import EventEngine
@@ -21,6 +25,7 @@ from .link import ARBITRATIONS, FabricLink, Request
 from .linkstep import LinkStepReport, run_linkstep
 from .metrics import (FabricReport, TenantReport, jain_index,
                       percentile_summary, slowdowns)
+from .shardstep import run_shardstep
 from .sim import FabricScenario, run_fabric, run_single_stream
 from .tenants import Tenant, TenantSpec
 
@@ -28,5 +33,5 @@ __all__ = [
     "ARBITRATIONS", "EventEngine", "FabricLink", "FabricReport",
     "FabricScenario", "LinkStepReport", "Request", "Tenant", "TenantReport",
     "TenantSpec", "jain_index", "percentile_summary", "run_fabric",
-    "run_linkstep", "run_single_stream", "slowdowns",
+    "run_linkstep", "run_shardstep", "run_single_stream", "slowdowns",
 ]

@@ -1,0 +1,151 @@
+"""Step-synchronous sharded-fabric reference: one NIC per home shard.
+
+The lock-step twin of the *mesh-sharded* jitted path
+(``repro.paging.sharded_pool.sharded_multi_stream_consume``, DESIGN.md §7),
+extending :mod:`repro.fabric.linkstep` from one global link to a fabric of
+``n_shards`` NICs:
+
+* every page has a **home shard** — the same ``block``/``interleave``
+  placement rule as :func:`repro.core.pool.page_home` — and every transfer
+  of that page (demand or prefetch) occupies its home shard's NIC;
+* arbitration is the §5 demand-first discipline *per NIC*: shard g's
+  prefetch landing capacity at step *t* is
+  ``max(0, budget - demand_fetches_on_g[t-1])``, granted to queued
+  prefetches homed on g whose nominal arrival has passed, in ascending
+  global issue order;
+* prefetch arrival is **distance-dependent**: a candidate homed on the
+  issuing stream's own shard (stream s lives on shard ``s % n_shards``)
+  is ready after ``near_delay`` steps, a cross-shard candidate after
+  ``far_delay`` — mirroring the per-candidate deadline vector the jitted
+  path feeds :func:`repro.core.pool.pool_issue`.
+
+Same validity domain as linkstep (residency tracked as sets — size the
+jitted ``n_slots`` so the free stack never runs dry) and the same
+counters/report shape. ``tests/test_sharded_pool.py`` pins the jitted
+per-stream hit / partial / deferred / drop counts to this model across
+placements, budgets, shard counts and patterns; ``n_shards=1`` reduces to
+``run_linkstep`` exactly (also pinned).
+"""
+
+from __future__ import annotations
+
+import math
+
+from ..core.history import DEFAULT_H_SIZE
+from ..core.metrics import PrefetchStats
+from ..core.prefetcher import LeapPrefetcher
+from ..core.trend import DEFAULT_N_SPLIT
+from ..core.window import DEFAULT_PW_MAX
+from .linkstep import LinkStepReport, _Inflight, _Stream
+
+
+def home_of(page: int, n_pages: int, n_shards: int, placement: str) -> int:
+    """Python twin of :func:`repro.core.pool.page_home` (host-side ints)."""
+    p = min(max(int(page), 0), n_pages - 1)
+    if placement == "interleave":
+        return p % n_shards
+    return p // (n_pages // n_shards)
+
+
+def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
+                  budget: int | None, ring_size: int,
+                  near_delay: int = 1, far_delay: int = 2,
+                  pw_max: int = DEFAULT_PW_MAX, h_size: int = DEFAULT_H_SIZE,
+                  n_split: int = DEFAULT_N_SPLIT) -> LinkStepReport:
+    """Run ``schedules`` (``[S][T]`` page ids) through the sharded fabric.
+
+    ``budget`` is *per NIC* (``None`` = infinite NICs: every eligible
+    prefetch lands at its nominal distance-dependent arrival). Returns a
+    :class:`repro.fabric.linkstep.LinkStepReport`; the per-step link
+    histograms aggregate over all NICs.
+    """
+    if placement not in ("block", "interleave"):
+        raise ValueError(f"unknown placement {placement!r}")
+    if n_pages % n_shards:
+        raise ValueError(f"n_pages={n_pages} not divisible by "
+                         f"n_shards={n_shards}")
+    schedules = [[int(p) for p in row] for row in schedules]
+    S = len(schedules)
+    T = len(schedules[0]) if S else 0
+    near_delay = max(near_delay, 1)     # mirrors pool_issue's clamp
+    far_delay = max(far_delay, near_delay)
+    cap_inf = budget is None
+    home = lambda p: home_of(p, n_pages, n_shards, placement)
+    streams = [_Stream(LeapPrefetcher(h_size=h_size, n_split=n_split,
+                                      pw_max=pw_max),
+                       PrefetchStats(), set(), []) for _ in range(S)]
+    demand_hist, landed_hist, issued_hist = [], [], []
+    d_prev = [0] * n_shards
+
+    for t in range(T):
+        # -- 1. per-NIC landing grants: leftover budget, global seq order ----
+        caps = [math.inf if cap_inf else max(0, budget - d) for d in d_prev]
+        eligible = sorted((e.seq, s, e) for s, st in enumerate(streams)
+                          for e in st.queue if e.ready <= t)
+        landed = 0
+        for _, s, e in eligible:
+            g = home(e.page)
+            if caps[g] <= 0:
+                continue                 # this NIC is out of budget; others
+            caps[g] -= 1                 # may still land later-seq entries
+            st = streams[s]
+            st.queue.remove(e)
+            st.resident.add(e.page)
+            if e.ready < t:
+                st.stats.deferred += 1
+            landed += 1
+        landed_hist.append(landed)
+
+        # -- 2. serve each stream's demand (private residency) ---------------
+        d_t = [0] * n_shards
+        issued_t = 0
+        for s, st in enumerate(streams):
+            page = schedules[s][t]
+            my_shard = s % n_shards
+            st.stats.faults += 1
+            inflight = next((e for e in st.queue if e.page == page), None)
+            if page in st.resident:
+                st.stats.cache_hits += 1
+                st.stats.prefetch_hits += 1
+                st.resident.discard(page)
+                pf_hit = True
+            elif inflight is not None:
+                # partial hit: completes early on the page's home NIC
+                st.queue.remove(inflight)
+                st.stats.cache_hits += 1
+                st.stats.prefetch_hits += 1
+                st.stats.partial_hits += 1
+                if inflight.ready < t:
+                    st.stats.deferred += 1
+                d_t[home(page)] += 1
+                pf_hit = True
+            else:
+                st.stats.misses += 1
+                d_t[home(page)] += 1
+                pf_hit = False
+
+            # -- 3. controller + distance-delayed, globally ordered issue ----
+            for k, cand in enumerate(st.prefetcher.on_fault(page, pf_hit)):
+                if cand < 0 or cand >= n_pages:
+                    continue
+                if cand in st.resident or any(e.page == cand
+                                              for e in st.queue):
+                    continue
+                if len(st.queue) >= ring_size:
+                    st.drops += 1
+                    continue
+                delay = (near_delay if home(cand) == my_shard else far_delay)
+                st.queue.append(_Inflight(cand, t + delay,
+                                          (t * S + s) * pw_max + k))
+                st.stats.prefetch_issued += 1
+                issued_t += 1
+        demand_hist.append(sum(d_t))
+        issued_hist.append(issued_t)
+        d_prev = d_t
+
+    return LinkStepReport(
+        per_stream=[st.stats for st in streams],
+        drops=[st.drops for st in streams],
+        resident_unused=[len(st.resident) for st in streams],
+        inflight_at_end=[len(st.queue) for st in streams],
+        demand_fetches=demand_hist, landed=landed_hist, issued=issued_hist)

@@ -31,10 +31,12 @@ import math
 import numpy as np
 
 from ..core.cache import PageCache
+from ..core.pool import PLACEMENTS
 from ..core.prefetcher import make_prefetcher
 from .engine import EventEngine
 from .link import FabricLink, Request
 from .metrics import FabricReport, TenantReport, percentile_summary
+from .shardstep import home_of
 from .tenants import Tenant, TenantSpec, tier_of
 
 _PENDING = math.inf     # ready_t of an entry whose transfer is in flight
@@ -71,6 +73,16 @@ class FabricScenario:
     shared_eviction: str = "lru"
     shared_model: object = "rdma_block"
     seed: int = 0
+    # -- multi-node fabric (DESIGN.md §7's event-driven mirror) --------------
+    # n_nodes > 1 splits every tier into one link per memory node: a page
+    # lives on home node page_home(page) (same block/interleave rule as the
+    # jitted sharded pool) and every transfer of it — demand or prefetch —
+    # rides that node's NIC. A tenant whose spec.home_node differs from the
+    # page's home pays far_factor on the transfer time (near/far asymmetry).
+    n_nodes: int = 1
+    n_pages: int = 0                     # required when n_nodes > 1
+    placement: str = "block"             # "block" | "interleave"
+    far_factor: float = 1.0
 
 
 def _resolve_model(model):
@@ -81,11 +93,32 @@ def _resolve_model(model):
 class _FabricSim:
     """Event handlers wiring tenants, caches and links together."""
 
-    def __init__(self, engine: EventEngine):
+    def __init__(self, engine: EventEngine, n_nodes: int = 1,
+                 n_pages: int = 0, placement: str = "block",
+                 far_factor: float = 1.0):
         self.engine = engine
         self.links: dict[str, FabricLink] = {}
         # (cache id, page) -> _Transfer for every *tracked* in-flight fill
         self.inflight: dict[tuple[int, int], _Transfer] = {}
+        self.n_nodes = int(n_nodes)
+        self.n_pages = int(n_pages)
+        self.placement = placement
+        self.far_factor = float(far_factor)
+
+    # -- multi-node routing (no-ops at n_nodes == 1) -------------------------
+    def _node_of(self, page: int) -> int:
+        return home_of(page, self.n_pages, self.n_nodes, self.placement)
+
+    def _link_for(self, ten: Tenant, page: int) -> FabricLink:
+        if self.n_nodes <= 1:
+            return self.links[ten.tier]
+        return self.links[f"{ten.tier}@n{self._node_of(page)}"]
+
+    def _xfer_time(self, ten: Tenant, page: int) -> float:
+        if self.n_nodes <= 1:
+            return ten.model.t_xfer
+        far = self._node_of(page) != ten.spec.home_node
+        return ten.model.t_xfer * (self.far_factor if far else 1.0)
 
     def start_tenant(self, ten: Tenant) -> None:
         t0 = float(ten.spec.start_time)
@@ -130,8 +163,8 @@ class _FabricSim:
         if entry is not None:
             drec = _Transfer(entry)
             self.inflight[key] = drec
-        self.links[ten.tier].submit(Request(
-            ten.name, page, "demand", ten.model.t_xfer,
+        self._link_for(ten, page).submit(Request(
+            ten.name, page, "demand", self._xfer_time(ten, page),
             lambda t_done, ten=ten, page=page, key=key, drec=drec,
             t_start=t_start, dp=dp, stall=stall:
                 self._demand_done(ten, page, key, drec, t_start, dp,
@@ -178,8 +211,8 @@ class _FabricSim:
             key = (id(cache), cand)
             rec = _Transfer(cache.entries[cand])
             self.inflight[key] = rec
-            self.links[ten.tier].submit(Request(
-                ten.name, cand, "prefetch", ten.model.t_xfer,
+            self._link_for(ten, cand).submit(Request(
+                ten.name, cand, "prefetch", self._xfer_time(ten, cand),
                 lambda t_done, ten=ten, cand=cand, key=key, rec=rec:
                     self._prefetch_done(ten, cand, key, rec, t_done)))
 
@@ -203,8 +236,30 @@ def run_fabric(scenario: FabricScenario) -> FabricReport:
     if scenario.data_path not in ("isolated", "shared"):
         raise ValueError(f"data_path must be 'isolated' or 'shared', "
                          f"got {scenario.data_path!r}")
+    if scenario.n_nodes > 1:
+        if scenario.n_pages <= 0:
+            raise ValueError("n_nodes > 1 needs n_pages for page placement")
+        if scenario.n_pages % scenario.n_nodes:
+            # same up-front rejection as every other §7 entry point — a
+            # ragged block split would compute home nodes >= n_nodes
+            raise ValueError(f"n_pages={scenario.n_pages} not divisible by "
+                             f"n_nodes={scenario.n_nodes}")
+        if scenario.placement not in PLACEMENTS:
+            # home_of would silently fall through to block on a typo
+            raise ValueError(f"placement must be one of {PLACEMENTS}, "
+                             f"got {scenario.placement!r}")
+        for spec in scenario.tenants:
+            if not 0 <= spec.home_node < scenario.n_nodes:
+                # an out-of-range home never equals any page's home node,
+                # so every transfer would silently pay far_factor
+                raise ValueError(
+                    f"tenant {spec.name!r}: home_node={spec.home_node} "
+                    f"outside [0, {scenario.n_nodes})")
     engine = EventEngine(scenario.seed)
-    sim = _FabricSim(engine)
+    sim = _FabricSim(engine, n_nodes=scenario.n_nodes,
+                     n_pages=scenario.n_pages,
+                     placement=scenario.placement,
+                     far_factor=scenario.far_factor)
     arb = scenario.arbitration or (
         "per_tenant_qp" if scenario.data_path == "isolated" else "fifo")
 
@@ -234,12 +289,19 @@ def run_fabric(scenario: FabricScenario) -> FabricReport:
                               shared=shared_cache is not None,
                               tier=shared_tier))
 
+    # one link per tier — or per (tier, memory node) on a multi-node fabric:
+    # each node's NIC is its own width/arbitration domain (DESIGN.md §7)
+    node_tags = ([""] if scenario.n_nodes <= 1
+                 else [f"@n{g}" for g in range(scenario.n_nodes)])
     for tier in sorted({t.tier for t in tenants}):
-        sim.links[tier] = FabricLink(engine, tier, width=scenario.link_width,
-                                     arbitration=arb, n_qps=scenario.n_qps)
+        for tag in node_tags:
+            sim.links[tier + tag] = FabricLink(
+                engine, tier + tag, width=scenario.link_width,
+                arbitration=arb, n_qps=scenario.n_qps)
     for ten in tenants:
         if arb == "per_tenant_qp":
-            sim.links[ten.tier].register_tenant(ten.name)
+            for tag in node_tags:
+                sim.links[ten.tier + tag].register_tenant(ten.name)
         sim.start_tenant(ten)
     engine.run()
 

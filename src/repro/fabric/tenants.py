@@ -58,6 +58,10 @@ class TenantSpec:
     churn_downtime: float = 500.0
     start_time: float = 0.0
     seed: int | None = None             # None: derived from scenario seed
+    home_node: int = 0                  # fabric node this tenant runs on —
+    # under a multi-node scenario (FabricScenario.n_nodes > 1) a page access
+    # rides the NIC of the *page's* home node and cross-node transfers pay
+    # the scenario's far_factor (DESIGN.md §7's event-driven mirror)
 
     def resolved_tier(self) -> str:
         if self.tier is not None:

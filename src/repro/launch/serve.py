@@ -31,6 +31,7 @@ from repro import configs as cfglib
 from repro.models.model import build_model
 from repro.paging.kv_cache import (append_kv, init_paged_kv,
                                    linear_page_table, paged_decode_attention)
+from repro.paging.sharded_pool import ShardedPoolCfg
 from repro.paging.tiered_kv import (TieredKV, tiered_attention, tiered_init,
                                     tiered_invalidate, tiered_min_slots,
                                     tiered_stats, tiered_sweep)
@@ -85,7 +86,26 @@ def main(argv=None) -> dict:
                          "can move across all streams' prefetches; demand "
                          "chunks are arbitrated first and surplus "
                          "prefetches arrive late (reported as deferred — "
-                         "DESIGN.md §5). Default: private infinite links")
+                         "DESIGN.md §5). With --shards > 1 the budget is "
+                         "*per shard NIC* (one §5 arbiter each, DESIGN.md "
+                         "§7). Default: private infinite links")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="with --paged: shard the cold paged-KV pool over "
+                         "this many devices on a 'fabric' mesh axis "
+                         "(DESIGN.md §7): each page lives on a home shard "
+                         "behind its own NIC, the sweep runs under "
+                         "shard_map, and cross-shard pages move by "
+                         "collective permutes. Needs >= this many devices "
+                         "(CPU: XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N). Default 1 = flat cold pool")
+    ap.add_argument("--placement", choices=("block", "interleave"),
+                    default="interleave",
+                    help="with --shards: page -> home-shard policy "
+                         "(interleave spreads consecutive pages across "
+                         "NICs; block keeps contiguous ranges together)")
+    ap.add_argument("--far-delay", type=int, default=2,
+                    help="with --shards: prefetch arrival delay in chunk "
+                         "steps for cross-shard pages (near pages take 1)")
     ap.add_argument("--page-size", type=int, default=4)
     args = ap.parse_args(argv)
 
@@ -187,8 +207,26 @@ def _serve_tiered(cfg, state, args, B: int, prompt_len: int,
     tstate = tiered_init(geom, n_streams, kd.dtype)
     rows = jnp.stack([pt_full[s % B] for s in range(n_streams)])
 
+    fabric = mesh = None
+    if args.shards > 1:
+        from repro.launch.mesh import make_fabric_mesh
+        if n_pages % args.shards:
+            raise SystemExit(f"--shards {args.shards} must divide the "
+                             f"{n_pages}-page cold pool")
+        fabric = ShardedPoolCfg(n_shards=args.shards,
+                                placement=args.placement,
+                                link_budget=args.link_budget,
+                                near_delay=1, far_delay=args.far_delay)
+        mesh = make_fabric_mesh(args.shards)
+        # append_kv mutates the cold pool every step, so tiered_sweep
+        # re-places the whole pool home-major per call — fine for this
+        # pin-every-step smoke driver (which also recomputes the flat
+        # reference each step); a production loop would keep the pool
+        # permanently placed and route append_kv writes through place_perm
+
     equiv_ok = True
     deferred = partials = 0
+    shard_demand = np.zeros(args.shards, np.int64)
     t_tiered = 0.0
     for t in range(args.gen - 1):
         pos = prompt_len + t
@@ -207,7 +245,8 @@ def _serve_tiered(cfg, state, args, B: int, prompt_len: int,
         t0 = time.perf_counter()
         tstate, info = tiered_sweep(tstate, cold, rows, geom,
                                     async_datapath=args.async_datapath,
-                                    link_budget=args.link_budget)
+                                    link_budget=args.link_budget,
+                                    fabric=fabric, mesh=mesh)
         tiered, resident = tiered_attention(q, tstate, rows, lengths)
         jax.block_until_ready(tiered)
         t_tiered += time.perf_counter() - t0
@@ -217,6 +256,8 @@ def _serve_tiered(cfg, state, args, B: int, prompt_len: int,
             (np.asarray(tiered) == np.asarray(flat)).all())
         deferred += int(np.asarray(info["deferred"]).sum())
         partials += int(np.asarray(info["partial_hit"]).sum())
+        if fabric is not None:
+            shard_demand += np.asarray(info["shard_demand_fetches"]).sum(0)
 
     per = [tiered_stats(tstate, s) for s in range(n_streams)]
     out = {
@@ -237,6 +278,10 @@ def _serve_tiered(cfg, state, args, B: int, prompt_len: int,
     if args.link_budget is not None:
         out["paged_link_budget"] = args.link_budget
         out["paged_deferred"] = deferred
+    if args.shards > 1:
+        out["paged_shards"] = args.shards
+        out["paged_placement"] = args.placement
+        out["paged_shard_demand"] = shard_demand.tolist()
     return out
 
 

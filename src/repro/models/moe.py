@@ -97,13 +97,35 @@ def _dispatch_group(xg, wg_, idsg, p, top_k, C, act):
 
 
 def apply_moe(p: dict, x: jax.Array, top_k: int, capacity_factor: float = 1.25,
-              act: str = "silu") -> tuple[jax.Array, jax.Array]:
-    """x [B,S,D] -> (y [B,S,D], aux_loss scalar). Grouped dispatch (group=row)."""
+              act: str = "silu", dropless: bool = False
+              ) -> tuple[jax.Array, jax.Array]:
+    """x [B,S,D] -> (y [B,S,D], aux_loss scalar). Grouped dispatch (group=row).
+
+    ``dropless=True`` sizes the expert capacity to the group's worst case
+    (``S`` — top-k experts are distinct per token) so no token is ever
+    dropped. Capacity dropping is a
+    *training-time* load-balancing behavior: whether a token survives
+    depends on which other tokens share its group, so a prefill group of S
+    tokens and a decode group of 1 token can route the same token
+    differently. Inference paths (prefill / decode_step) therefore route
+    droplessly — that is what makes prefill and decode_step produce
+    identical logits for the same token (the per-arch smoke consistency
+    pin; the llama4 interleaved dense/MoE config is where grouped drops
+    first bit).
+    """
     B, S, D = x.shape
     E = p["wr"].shape[1]
     xf = x.reshape(B * S, D)
     w, ids, aux = _router(xf, p["wr"], top_k)
-    C = max(1, int(-(-S * top_k // E) * capacity_factor))
+    # dropless sizes C to the static worst case: top_k picks *distinct*
+    # experts per token, so one expert can receive at most S of a row's
+    # assignments — C = S guarantees rank < C for every token. The
+    # [E, C, D] buffers and expert einsums still carry padding vs the
+    # actual (usually balanced) load — the jit-shape price of the
+    # consistency pin; a segment-based dispatch over occupied rows would
+    # remove it without changing the routing
+    C = (S if dropless
+         else max(1, int(-(-S * top_k // E) * capacity_factor)))
     y = jax.vmap(
         lambda xg, wg_, idsg: _dispatch_group(xg, wg_, idsg, p, top_k, C, act)
     )(x, w.reshape(B, S, top_k), ids.reshape(B, S, top_k))

@@ -142,11 +142,14 @@ def _qkv(p, cfg: ModelConfig, y, angles):
     return q, k, v
 
 
-def _block_apply(p, kind, cfg: ModelConfig, x, angles, collect_state: bool):
+def _block_apply(p, kind, cfg: ModelConfig, x, angles, collect_state: bool,
+                 dropless: bool = False):
     """One block, train/prefill. Returns (x, aux_loss, state_or_None).
 
     ``collect_state`` (prefill) captures what decode needs: roped K/V for
     attention positions, the final recurrent carry for mamba/xlstm positions.
+    ``dropless`` routes MoE blocks without capacity drops (inference paths;
+    see :func:`repro.models.moe.apply_moe`).
     """
     from repro.perf_flags import enabled as _perf
     from repro.distributed.activations import matmul_input_constraint
@@ -188,13 +191,14 @@ def _block_apply(p, kind, cfg: ModelConfig, x, angles, collect_state: bool):
         y2 = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
         if _perf("mm_gather"):
             y2 = matmul_input_constraint(y2)
-        o, a = apply_moe(p["ff"], y2, cfg.top_k, cfg.capacity_factor, cfg.act)
+        o, a = apply_moe(p["ff"], y2, cfg.top_k, cfg.capacity_factor, cfg.act,
+                         dropless=dropless)
         x, aux = x + o, aux + a
     return x, aux, st
 
 
 def forward_hidden(params, cfg: ModelConfig, x, positions, batch=None,
-                   collect_state: bool = False):
+                   collect_state: bool = False, dropless: bool = False):
     """Trunk: embedded input [B,S,D] -> (hidden, aux, per-position states)."""
     P = cfg.scan_period()
     kinds = cfg.layer_kinds()[:P]
@@ -207,7 +211,7 @@ def forward_hidden(params, cfg: ModelConfig, x, positions, batch=None,
         sts = []
         for pos in range(P):
             x, a, st = _block_apply(pp[pos], kinds[pos], cfg, x,
-                                    angles, collect_state)
+                                    angles, collect_state, dropless)
             aux = aux + a
             sts.append(st)
         return (activation_constraint(x), aux), tuple(sts)
@@ -356,7 +360,7 @@ def decode_step(params, cfg: ModelConfig, token, state, embeds=None):
             elif kind["ff"] == "moe":
                 y2 = apply_norm(p["norm2"], x, cfg.norm, cfg.norm_eps)
                 o, _ = apply_moe(p["ff"], y2, cfg.top_k, cfg.capacity_factor,
-                                 cfg.act)
+                                 cfg.act, dropless=True)
                 x = x + o
             new_states.append(st)
         return x, tuple(new_states)
@@ -375,7 +379,7 @@ def prefill(params, cfg: ModelConfig, tokens, max_len: int, batch=None):
          if batch and "embeds" in batch else embed_tokens(params, cfg, tokens))
     positions = jnp.arange(S)
     h, _, state_stacks = forward_hidden(params, cfg, x, positions, batch,
-                                        collect_state=True)
+                                        collect_state=True, dropless=True)
     state = init_decode_state(cfg, B, max_len)
     T = _cache_len(cfg, max_len)
     P = cfg.scan_period()

@@ -45,9 +45,9 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.core.leap_jax import leap_init, leap_step, leap_step_batched
-from repro.core.pool import (link_grants, pool_access, pool_init, pool_issue,
-                             pool_stats, pool_wait, ring_init)
+from repro.core.leap_jax import leap_init, leap_step
+from repro.core.pool import (pool_access, pool_init, pool_issue, pool_stats,
+                             pool_wait, ring_init)
 from repro.core.window import DEFAULT_PW_MAX
 
 
@@ -306,7 +306,6 @@ def multi_stream_consume(pool_data: jax.Array, schedules: jax.Array,
     return state, sums, info
 
 
-@functools.partial(jax.jit, static_argnames=("geom", "link_budget"))
 def _multi_stream_consume_budgeted(pool_data: jax.Array,
                                    schedules: jax.Array,
                                    geom: PrefetchedStream,
@@ -333,68 +332,22 @@ def _multi_stream_consume_budgeted(pool_data: jax.Array,
     a step-synchronous width-``link_budget`` fabric run on the same
     schedules (``repro.fabric.linkstep``, cross-validated in
     ``tests/test_link_budget.py``).
+
+    Since the mesh-sharded cold pool landed (DESIGN.md §7) this is the
+    degenerate one-shard case of
+    :func:`repro.paging.sharded_pool.sharded_multi_stream_consume` — a
+    single "fabric" of one NIC carrying the whole budget, every page near
+    — and it delegates there. The §5 pins in ``tests/test_link_budget.py``
+    (vmap bit-equivalence at infinite budget, exact linkstep counts at
+    finite budgets) gate that reduction.
     """
-    S, T = schedules.shape
-    K = geom.pw_max
-    one = (stream_init(geom, pool_data.dtype)
-           if isinstance(pool_data, jax.Array)
-           else stream_init(geom, payload_like=pool_data))
-    state0 = jax.tree.map(
-        lambda x: jnp.broadcast_to(x[None], (S,) + x.shape), one)
-    stream_ids = jnp.arange(S, dtype=jnp.int32)
-
-    def _wait(meta, ring, hot, page, now, ok):
-        return pool_wait(meta, ring, hot, pool_data, page, now, land_ok=ok)
-
-    def _issue(meta, ring, cands, val, now, seq):
-        return pool_issue(meta, ring, cands, val, now,
-                          jnp.int32(geom.arrival_delay), seq=seq)
-
-    def body(carry, xs):
-        state, d_prev = carry
-        t, pages = xs
-        meta, ring, hot = state["pool_meta"], state["ring"], state["hot"]
-        now = ring["now"]                                  # int32[S], == t
-        # --- landing grants: leftover budget, global seq order --------------
-        cap = jnp.maximum(jnp.int32(link_budget) - d_prev, 0)
-        allowed = link_grants(ring, now, cap)
-        # --- wait/serve ------------------------------------------------------
-        deferred0 = meta["n_deferred"]
-        meta, ring, hot, slot, data, winfo = jax.vmap(_wait)(
-            meta, ring, hot, pages, now, allowed)
-        d_t = jnp.sum(winfo["fetched"].astype(jnp.int32))
-        # --- controllers + globally ordered issue ----------------------------
-        pref_feedback = winfo["prefetched_hit"] | winfo["partial_hit"]
-        new_leap, cands, valid = leap_step_batched(
-            state["leap"], pages, pref_feedback,
-            n_split=geom.n_split, pw_max=geom.pw_max)
-        val = valid & (cands >= 0) & (cands < geom.n_pages)
-        seq = ((t * S + stream_ids)[:, None] * K
-               + jnp.arange(K, dtype=jnp.int32)[None, :])
-        issued0 = meta["n_prefetch_issued"]
-        meta, ring = jax.vmap(_issue)(meta, ring, cands, val, now, seq)
-        ring = dict(ring)
-        ring["now"] = now + 1
-        issued_s = meta["n_prefetch_issued"] - issued0     # int32[S]
-        deferred_s = meta["n_deferred"] - deferred0        # int32[S]
-        state = {"leap": new_leap, "pool_meta": meta, "hot": hot,
-                 "ring": ring}
-        sums = sum(jax.tree.leaves(jax.tree.map(
-            lambda d: d.reshape(S, -1).sum(-1), data)))
-        outs = (sums, winfo["hit"], winfo["prefetched_hit"],
-                winfo["partial_hit"], winfo["fetched"], issued_s, deferred_s,
-                d_t, jnp.sum(issued_s), jnp.sum(deferred_s))
-        return (state, d_t), outs
-
-    xs = (jnp.arange(T, dtype=jnp.int32), schedules.T)
-    (state, _), (sums, hit, pref, part, fetched, issued, deferred,
-                 link_d, link_i, link_def) = jax.lax.scan(
-        body, (state0, jnp.int32(0)), xs)
-    info = {"hit": hit.T, "pref_hit": pref.T, "partial_hit": part.T,
-            "fetched": fetched.T, "issued": issued.T, "deferred": deferred.T,
-            "link_demand_fetches": link_d, "link_prefetch_issued": link_i,
-            "link_deferred": link_def}
-    return state, sums.T, info
+    from repro.paging.sharded_pool import (ShardedPoolCfg,
+                                           sharded_multi_stream_consume)
+    delay = max(geom.arrival_delay, 1)    # pool_issue clamps to >= 1 anyway
+    fabric = ShardedPoolCfg(n_shards=1, placement="interleave",
+                            link_budget=int(link_budget),
+                            near_delay=delay, far_delay=delay)
+    return sharded_multi_stream_consume(pool_data, schedules, geom, fabric)
 
 
 def stream_stats(state: dict) -> dict:

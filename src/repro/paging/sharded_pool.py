@@ -1,0 +1,412 @@
+"""Mesh-sharded cold pool: per-shard NICs, placement, near/far asymmetry.
+
+Until now the serving path pretended the cold tier is one flat local array
+behind one link. Rack-scale disaggregation has real topology: the cold pool
+is *sharded* over a device mesh's ``fabric`` axis — each device owns a
+``[n_pages / n_shards, ...]`` slice of every payload leaf behind its own
+NIC — and a page's cost depends on *where it lives* (DESIGN.md §7):
+
+* **Placement** maps each page id to a home shard
+  (:func:`repro.core.pool.page_home`): ``"block"`` keeps contiguous id
+  ranges together, ``"interleave"`` round-robins consecutive ids across
+  shards. Placement is a policy knob precisely because it changes contention:
+  strided multi-stream traffic hammers one block shard while interleave
+  spreads the same accesses over every NIC (``benchmarks/sharded_pool.py``).
+* **Per-shard link budgets** replace the single global link of §5: each
+  shard's NIC moves ``link_budget`` pages/step, arbitrated demand-first by
+  :func:`repro.core.pool.link_grants_sharded` — the same discipline as
+  :func:`repro.core.pool.link_grants`, ranked and capped per home shard.
+* **Near/far delay asymmetry**: a prefetch of a page homed on the
+  consuming stream's own shard arrives after ``near_delay`` steps; a
+  cross-shard prefetch rides the fabric and arrives after ``far_delay``.
+  The per-candidate delay vector threads straight into
+  :func:`repro.core.pool.pool_issue` deadlines.
+
+Two data planes move the same bytes (pinned bit-equal in
+``tests/test_sharded_pool.py``):
+
+* **Flat** (no mesh): the cold pool is a local array, pages are gathered by
+  plain indexing — placement/budgets/delays still shape the *metadata*
+  (what lands when), so the scheduling model runs anywhere, single-device
+  CPU included.
+* **Sharded** (mesh with a ``fabric`` axis): the whole consume scan runs
+  under ``shard_map``; each device holds its home slice
+  (:func:`place_cold` permutes pages home-major so ``P('fabric')`` on the
+  page axis lands every page on its home shard) and cross-shard pages move
+  via a ring of ``lax.ppermute`` collective permutes — shard slices rotate
+  around the fabric and every consumer picks up the pages homed on the
+  currently-visiting shard.
+
+``n_shards=1`` reduces bit-exactly to the §5 single-link path:
+``repro.paging.prefetch_serving.multi_stream_consume(..., link_budget=B)``
+now *delegates* here with the degenerate config, so the existing
+``tests/test_link_budget.py`` pins (vmap equivalence, linkstep
+cross-validation) gate this module too. The lock-step fabric mirror for
+``n_shards > 1`` is :func:`repro.fabric.shardstep.run_shardstep`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.leap_jax import leap_step_batched
+from repro.core.pool import (NO_PAGE, PLACEMENTS, link_grants_sharded,
+                             page_home, page_local, pool_issue, pool_wait)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedPoolCfg:
+    """Static fabric topology of the sharded cold pool.
+
+    Attributes:
+      n_shards:    devices the cold pool's page axis is sharded over (one
+                   NIC each). ``1`` is the degenerate single-link fabric.
+      placement:   page -> home shard policy, ``"block"`` or
+                   ``"interleave"`` (:func:`repro.core.pool.page_home`).
+      link_budget: pages/step *each shard's NIC* can move (demand-first,
+                   DESIGN.md §5 per shard). ``None`` = infinite NICs —
+                   only the delay asymmetry is modeled.
+      near_delay:  prefetch arrival delay (steps) from the consumer's own
+                   shard.
+      far_delay:   arrival delay for cross-shard prefetches (>= near).
+    """
+    n_shards: int = 1
+    placement: str = "interleave"
+    link_budget: int | None = None
+    near_delay: int = 1
+    far_delay: int = 2
+
+    def __post_init__(self):
+        if self.placement not in PLACEMENTS:
+            raise ValueError(f"placement must be one of {PLACEMENTS}, "
+                             f"got {self.placement!r}")
+        if self.n_shards < 1:
+            raise ValueError("n_shards must be >= 1")
+        if not 1 <= self.near_delay <= self.far_delay:
+            raise ValueError("need 1 <= near_delay <= far_delay "
+                             f"(got {self.near_delay}/{self.far_delay})")
+
+
+def stream_homes(n_streams: int, n_shards: int) -> jax.Array:
+    """Home shard of each stream: ``s % n_shards`` (fixed round-robin —
+    the lock-step mirror uses the same mapping)."""
+    return jnp.mod(jnp.arange(n_streams, dtype=jnp.int32), n_shards)
+
+
+def place_perm(n_pages: int, fabric: ShardedPoolCfg) -> np.ndarray:
+    """Permutation putting pages in home-major order.
+
+    ``placed[i] = cold[perm[i]]``: shard g's slice ``[g*pps, (g+1)*pps)``
+    of the placed array holds exactly the pages homed on g, each at its
+    :func:`repro.core.pool.page_local` index — so sharding the placed
+    array's page axis over the ``fabric`` mesh axis gives every page to
+    its home shard.
+    """
+    if n_pages % fabric.n_shards:
+        raise ValueError(f"n_pages={n_pages} not divisible by "
+                         f"n_shards={fabric.n_shards}")
+    pages = np.arange(n_pages)
+    pps = n_pages // fabric.n_shards
+    if fabric.placement == "interleave":
+        home, local = pages % fabric.n_shards, pages // fabric.n_shards
+    else:
+        home, local = pages // pps, pages % pps
+    perm = np.empty(n_pages, np.int64)
+    perm[home * pps + local] = pages
+    return perm
+
+
+def place_cold(cold, n_pages: int, fabric: ShardedPoolCfg):
+    """Permute every payload leaf's page axis into home-major order."""
+    perm = jnp.asarray(place_perm(n_pages, fabric))
+    return jax.tree.map(lambda c: c[perm], cold)
+
+
+def check_fabric_topology(n_pages: int, fabric: ShardedPoolCfg,
+                          mesh=None) -> None:
+    """Shared entry-point validation: the pool must split evenly over the
+    shards, and a mesh (if given) must carry a matching ``fabric`` axis.
+    One implementation so every §7 entry point rejects with the same
+    message."""
+    if n_pages % fabric.n_shards:
+        raise ValueError(f"n_pages={n_pages} not divisible by "
+                         f"n_shards={fabric.n_shards}")
+    if mesh is not None and fabric.n_shards > 1 \
+            and mesh.shape.get("fabric") != fabric.n_shards:
+        raise ValueError(f"mesh fabric axis {mesh.shape.get('fabric')} != "
+                         f"n_shards {fabric.n_shards}")
+
+
+# --------------------------------------------------------------------------
+# data planes
+# --------------------------------------------------------------------------
+def _gather_flat(cold, pages: jax.Array):
+    """Plain local gather (single-device cold pool, original page order)."""
+    safe = jnp.maximum(pages, 0)
+    return jax.tree.map(lambda c: c[safe], cold)
+
+
+def fabric_ring_gather(buf: jax.Array, local: jax.Array, homes: jax.Array,
+                       n_shards: int, pick) -> jax.Array:
+    """One-leaf collective gather over the ``fabric`` axis (inside shard_map).
+
+    Ring algorithm: the home slice ``buf`` rotates one hop per round via
+    ``lax.ppermute``; at round r every device is visited by shard
+    ``(me - r) % n_shards``'s slice and keeps the entries homed there
+    (``homes``), read at their within-shard ``local`` indices by
+    ``pick(buf, local)`` — a plain ``buf[local]`` for jnp gathers, or one
+    of the :mod:`repro.kernels.gather_pages` kernels so the bytes still
+    move through the DMA-pipelined gather within each round. After
+    ``n_shards`` rounds every device holds all requested entries — the
+    replicated result the (replicated) metadata scan consumes, bit-
+    identical to the flat gather on the unplaced pool. This is the single
+    implementation of the §7 ring discipline — the stream consume and the
+    tiered sweep both ride it, so their bit-equivalence pins share one
+    rotation order.
+    """
+    me = jax.lax.axis_index("fabric")
+    perm = [(i, (i + 1) % n_shards) for i in range(n_shards)]
+    out = None
+    for r in range(n_shards):
+        take = homes == jnp.mod(me - r, n_shards)
+        picked = pick(buf, local)
+        mask = take.reshape(take.shape + (1,) * (picked.ndim - take.ndim))
+        out = jnp.where(mask, picked, 0 if out is None else out)
+        if r < n_shards - 1:
+            buf = jax.lax.ppermute(buf, "fabric", perm)
+    return out
+
+
+def _gather_fabric(cold_local, pages: jax.Array, n_pages: int,
+                   fabric: ShardedPoolCfg):
+    """Collective gather of ``pages`` from the sharded cold pool: the
+    :func:`fabric_ring_gather` ring with plain indexing per leaf."""
+    G = fabric.n_shards
+    pps = n_pages // G
+    home = page_home(pages, n_pages, G, fabric.placement)
+    local = jnp.clip(page_local(pages, n_pages, G, fabric.placement),
+                     0, pps - 1)
+    return jax.tree.map(
+        lambda c: fabric_ring_gather(c, local, home, G,
+                                     lambda b, ix: b[ix]), cold_local)
+
+
+def scatter_hot(hot, data, dst: jax.Array, mask: jax.Array):
+    """Scatter gathered page payloads (leaves ``[S, K, ...page]``) into the
+    stacked ``[S, n_slots, ...]`` hot pool at per-stream slots ``dst
+    [S, K]``; masked-out entries scatter out of bounds and drop. The single
+    OOB-drop scatter discipline — the stream consume and the tiered sweep
+    both apply their copy plans through it."""
+    S, n_slots = jax.tree.leaves(hot)[0].shape[:2]
+    gdst = (jnp.arange(S, dtype=jnp.int32)[:, None] * n_slots
+            + jnp.maximum(dst, 0)).reshape(-1)
+    gdst = jnp.where(mask.reshape(-1), gdst, S * n_slots)
+
+    def one(h, d):
+        flat = h.reshape((S * n_slots,) + h.shape[2:])
+        d = d.reshape((-1,) + d.shape[2:])
+        return flat.at[gdst].set(d.astype(h.dtype),
+                                 mode="drop").reshape(h.shape)
+
+    return jax.tree.map(one, hot, data)
+
+
+# --------------------------------------------------------------------------
+# the sharded consume scan
+# --------------------------------------------------------------------------
+def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
+                  sharded: bool):
+    """Lock-step multi-stream consume over the (possibly sharded) cold pool.
+
+    Generalizes the §5 budgeted scan (DESIGN.md §5 -> §7): per-step,
+
+    1. **Grant** — shard g's NIC moved last step's demand fetches homed on
+       g first, so its prefetch landing capacity is
+       ``max(0, link_budget - demand_on_g[t-1])``; grants go to due ring
+       entries homed on g in ascending global ``seq``
+       (:func:`repro.core.pool.link_grants_sharded`).
+    2. **Wait/serve** — per-stream metadata-only
+       :func:`repro.core.pool.pool_wait` with the grant mask; the copy
+       plan (landings + demand fetch) is applied by the data plane (flat
+       gather, or ring-``ppermute`` collective gather when ``sharded``).
+    3. **Issue** — controllers emit candidates; each is stamped with the
+       global ``seq`` and a *distance-dependent* deadline: ``near_delay``
+       if its home shard is the stream's own, else ``far_delay``.
+
+    ``fabric.n_shards == 1`` with ``near_delay == geom.arrival_delay``
+    reduces bit-exactly to the single-link §5 scan.
+    """
+    from repro.paging.prefetch_serving import stream_init
+
+    S, T = schedules.shape
+    K = geom.pw_max
+    G = fabric.n_shards
+    n_pages = geom.n_pages
+    budget = fabric.link_budget
+    homes_s = stream_homes(S, G)
+    stream_ids = jnp.arange(S, dtype=jnp.int32)
+    gather = (functools.partial(_gather_fabric, n_pages=n_pages,
+                                fabric=fabric) if sharded else _gather_flat)
+
+    # payload_like trailing shapes are per-page, hence shard-invariant —
+    # the local [pps, ...] slice seeds the same hot-buffer layout the full
+    # [n_pages, ...] pool would.
+    one = (stream_init(geom, cold.dtype) if isinstance(cold, jax.Array)
+           else stream_init(geom, payload_like=cold))
+    state0 = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (S,) + x.shape), one)
+
+    def _wait(meta, ring, page, now, ok):
+        return pool_wait(meta, ring, None, None, page, now, land_ok=ok)
+
+    def _issue(meta, ring, cands, val, now, seq, delay):
+        return pool_issue(meta, ring, cands, val, now, delay, seq=seq)
+
+    def body(carry, xs):
+        state, d_prev = carry                      # d_prev: int32[G]
+        t, pages = xs
+        meta, ring, hot = state["pool_meta"], state["ring"], state["hot"]
+        now = ring["now"]                          # int32[S], == t
+        # --- per-shard landing grants (leftover NIC budget, global seq) -----
+        if budget is None:
+            allowed = jnp.ones(ring["page"].shape, bool)
+        else:
+            caps = jnp.maximum(jnp.int32(budget) - d_prev, 0)
+            homes_ring = page_home(ring["page"], n_pages, G, fabric.placement)
+            allowed = link_grants_sharded(ring, now, caps, homes_ring)
+        # --- wait/serve (metadata-only; copy plan applied below) ------------
+        deferred0 = meta["n_deferred"]
+        meta, ring, _, slot, _, winfo = jax.vmap(_wait)(
+            meta, ring, pages, now, allowed)
+        homes_d = page_home(pages, n_pages, G, fabric.placement)
+        d_t = jnp.zeros((G,), jnp.int32).at[homes_d].add(
+            winfo["fetched"].astype(jnp.int32), mode="drop")
+        # --- controllers + globally ordered, distance-delayed issue ---------
+        pref_feedback = winfo["prefetched_hit"] | winfo["partial_hit"]
+        new_leap, cands, valid = leap_step_batched(
+            state["leap"], pages, pref_feedback,
+            n_split=geom.n_split, pw_max=geom.pw_max)
+        val = valid & (cands >= 0) & (cands < n_pages)
+        seq = ((t * S + stream_ids)[:, None] * K
+               + jnp.arange(K, dtype=jnp.int32)[None, :])
+        homes_c = page_home(cands, n_pages, G, fabric.placement)
+        delay = jnp.where(homes_c == homes_s[:, None],
+                          jnp.int32(fabric.near_delay),
+                          jnp.int32(fabric.far_delay))
+        issued0 = meta["n_prefetch_issued"]
+        meta, ring = jax.vmap(_issue)(meta, ring, cands, val, now, seq, delay)
+        ring = dict(ring)
+        ring["now"] = now + 1
+        issued_s = meta["n_prefetch_issued"] - issued0
+        deferred_s = meta["n_deferred"] - deferred0
+        # --- data plane: replay the copy plan (landings, then demand) -------
+        src = jnp.concatenate(
+            [winfo["landed_pages"],
+             jnp.where(winfo["fetched"], pages, NO_PAGE)[:, None]], axis=1)
+        dst = jnp.concatenate([winfo["landed_slots"], slot[:, None]], axis=1)
+        msk = jnp.concatenate([winfo["landed"],
+                               winfo["fetched"][:, None]], axis=1)
+        data = gather(cold, src)                   # [S, R+1, ...page]
+        hot = scatter_hot(hot, data, dst, msk)
+        served = jax.tree.map(
+            lambda h: h[stream_ids, jnp.maximum(slot, 0)], hot)
+        sums = sum(jax.tree.leaves(jax.tree.map(
+            lambda d: d.reshape(S, -1).sum(-1), served)))
+        state = {"leap": new_leap, "pool_meta": meta, "hot": hot,
+                 "ring": ring}
+        outs = (sums, winfo["hit"], winfo["prefetched_hit"],
+                winfo["partial_hit"], winfo["fetched"], issued_s, deferred_s,
+                d_t, jnp.sum(issued_s), jnp.sum(deferred_s))
+        return (state, d_t), outs
+
+    xs = (jnp.arange(T, dtype=jnp.int32), schedules.T)
+    (state, _), (sums, hit, pref, part, fetched, issued, deferred,
+                 shard_d, link_i, link_def) = jax.lax.scan(
+        body, (state0, jnp.zeros((G,), jnp.int32)), xs)
+    info = {"hit": hit.T, "pref_hit": pref.T, "partial_hit": part.T,
+            "fetched": fetched.T, "issued": issued.T, "deferred": deferred.T,
+            "shard_demand_fetches": shard_d,           # [T, G]
+            "link_demand_fetches": shard_d.sum(axis=1),
+            "link_prefetch_issued": link_i, "link_deferred": link_def}
+    return state, sums.T, info
+
+
+@functools.partial(jax.jit, static_argnames=("geom", "fabric"))
+def _consume_flat(cold, schedules, geom, fabric):
+    return _consume_impl(cold, schedules, geom, fabric, sharded=False)
+
+
+_SHARD_MAP_CACHE: dict = {}
+
+
+def cached_shard_map(key: tuple, make_fn, in_specs):
+    """Memoized ``jax.jit(shard_map(...))`` wrapper for one static topology.
+
+    The single implementation of the §7 wrap idiom (cold sharded over the
+    ``fabric`` axis, every other input and all outputs replicated,
+    ``check_rep=False`` because the replication of the metadata scan is by
+    construction, not provable) — the stream consume and the tiered sweep
+    both build their mesh runners through it. ``key`` must start with the
+    mesh and include a caller tag plus every static config the wrapped
+    ``make_fn()`` closes over; entries live for the process, like jit's
+    own executable cache.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    if key not in _SHARD_MAP_CACHE:
+        _SHARD_MAP_CACHE[key] = jax.jit(shard_map(
+            make_fn(), mesh=key[0], in_specs=in_specs, out_specs=P(),
+            check_rep=False))
+    return _SHARD_MAP_CACHE[key]
+
+
+def _consume_sharded_fn(mesh, geom, fabric: ShardedPoolCfg):
+    """The jitted shard_map consume for one topology (memoized)."""
+    from jax.sharding import PartitionSpec as P
+
+    return cached_shard_map(
+        (mesh, "consume", geom, fabric),
+        lambda: functools.partial(_consume_impl, geom=geom, fabric=fabric,
+                                  sharded=True),
+        (P("fabric"), P()))
+
+
+def sharded_multi_stream_consume(cold, schedules: jax.Array, geom,
+                                 fabric: ShardedPoolCfg, mesh=None):
+    """Concurrent streams over a mesh-sharded cold pool.
+
+    Args:
+      cold: ``[n_pages, page_elems]`` payload array or pytree of
+        ``[n_pages, ...]`` leaves, in *original page-id order* (placement
+        permutation is internal).
+      schedules: ``int32[n_streams, T]`` demand page ids per stream.
+      geom: :class:`repro.paging.prefetch_serving.PrefetchedStream`; the
+        async issue/wait path is implied (``ring_size`` must be > 0) —
+        per-NIC budgets arbitrate *landings*, which only exist with a ring.
+      fabric: :class:`ShardedPoolCfg` topology.
+      mesh: optional ``jax.sharding.Mesh`` with a ``"fabric"`` axis of size
+        ``fabric.n_shards``; when given (and ``n_shards > 1``) the scan
+        runs under ``shard_map`` — each device owns its home slice of
+        ``cold`` and cross-shard pages move by ``lax.ppermute`` ring
+        rotations. Without a mesh the same scheduling model runs against a
+        local cold pool (bit-identical results, pinned).
+
+    Returns ``(state, data_sums, info)`` exactly like the §5 budgeted
+    ``multi_stream_consume`` with additionally ``info["shard_demand_fetches"]
+    int32[T, n_shards]`` (per-NIC demand traffic). Stream s is homed on
+    shard ``s % n_shards`` (:func:`stream_homes`).
+    """
+    if geom.ring_size <= 0:
+        raise ValueError("sharded consume needs the async issue/wait ring "
+                         "(geom.ring_size > 0)")
+    check_fabric_topology(geom.n_pages, fabric, mesh)
+    if mesh is not None and fabric.n_shards > 1:
+        placed = place_cold(cold, geom.n_pages, fabric)
+        return _consume_sharded_fn(mesh, geom, fabric)(placed, schedules)
+    return _consume_flat(cold, schedules, geom, fabric)

@@ -43,6 +43,16 @@ Streams advance in lock-step over chunk steps, so a finite ``link_budget``
 composes with the DESIGN.md §5 arbitration unchanged: demand chunk fetches
 complete in-step, leftover budget lands in-flight prefetches across all
 streams in global issue order, the surplus defers in the ring.
+
+The sweep also composes with the **mesh-sharded cold pool** (DESIGN.md §7,
+:mod:`repro.paging.sharded_pool`): hot pools stay local per stream, the
+cold ``{"k","v"}`` pool shards over the mesh's ``fabric`` axis. Pass a
+:class:`repro.paging.sharded_pool.ShardedPoolCfg` (and a mesh) to
+:func:`tiered_sweep` — the per-chunk budget becomes *per NIC* (one §5
+arbiter per home shard), prefetch deadlines gain the near/far asymmetry,
+and the chunk copy plans gather cross-shard pages with ``lax.ppermute``
+ring rotations under ``shard_map``. ``shards=1`` (or no fabric) reduces
+bit-exactly to the single-link path above.
 """
 
 from __future__ import annotations
@@ -54,13 +64,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.leap_jax import leap_init, leap_step
-from repro.core.pool import (NO_PAGE, link_grants, pool_access, pool_init,
+from repro.core.pool import (NO_PAGE, link_grants_sharded, page_home,
+                             page_local, pool_access, pool_init,
                              pool_invalidate, pool_issue, pool_wait_batch,
                              ring_init)
 from repro.core.window import DEFAULT_PW_MAX
 from repro.kernels.gather_pages import gather_pages, gather_pages_async
 from repro.kernels.paged_attention import paged_attention
 from repro.paging.prefetch_serving import stream_stats_at
+from repro.paging.sharded_pool import (ShardedPoolCfg, cached_shard_map,
+                                       check_fabric_topology,
+                                       fabric_ring_gather, place_cold,
+                                       scatter_hot, stream_homes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -135,8 +150,9 @@ def tiered_init(geom: TieredKV, n_streams: int, dtype=jnp.bfloat16) -> dict:
 
 
 def _apply_copies(hot: dict, cold: dict, src: jax.Array, dst: jax.Array,
-                  mask: jax.Array, *, asynchronous: bool,
-                  use_kernel: bool) -> dict:
+                  mask: jax.Array, *, asynchronous: bool, use_kernel: bool,
+                  fabric: ShardedPoolCfg | None = None,
+                  sharded: bool = False, n_pages: int = 0) -> dict:
     """Data plane: move ``cold[src] -> hot[dst]`` where ``mask``, k+v together.
 
     ``src``/``dst``/``mask`` are ``[S, K]`` (per-stream copy plans from the
@@ -145,21 +161,32 @@ def _apply_copies(hot: dict, cold: dict, src: jax.Array, dst: jax.Array,
     double-buffered DMA) on the sync path, ``gather_pages_async`` (explicit
     issue/wait pairs) on the async path — scattered into the stacked hot
     pool. Masked-out entries scatter out of bounds and are dropped.
+
+    ``sharded=True`` (inside ``shard_map``, cold leaves ``[pps, ...]``
+    home-major): the gather becomes a ring of ``lax.ppermute`` rotations
+    over the ``fabric`` axis — each rotation runs the same gather kernel
+    against the visiting shard's slice at :func:`repro.core.pool.page_local`
+    indices and keeps the pages homed there (DESIGN.md §7). Bytes are
+    bit-identical to the flat gather.
     """
-    S, n_slots = jax.tree.leaves(hot)[0].shape[:2]
+    S = src.shape[0]
     gfn = gather_pages_async if asynchronous else gather_pages
-    flat_src = jnp.maximum(src, 0).reshape(-1)
-    gdst = (jnp.arange(S, dtype=jnp.int32)[:, None] * n_slots
-            + jnp.maximum(dst, 0)).reshape(-1)
-    gdst = jnp.where(mask.reshape(-1), gdst, S * n_slots)   # OOB -> dropped
+    if not sharded:
+        flat_src = jnp.maximum(src, 0).reshape(-1)
+        gather = lambda c: gfn(c, flat_src, use_kernel=use_kernel)
+    else:
+        G = fabric.n_shards
+        pps = n_pages // G
+        homes = page_home(src, n_pages, G, fabric.placement).reshape(-1)
+        local = jnp.clip(page_local(src, n_pages, G, fabric.placement),
+                         0, pps - 1).reshape(-1)
+        gather = lambda c: fabric_ring_gather(
+            c, local, homes, G,
+            lambda b, ix: gfn(b, ix, use_kernel=use_kernel))
 
-    def one(h, c):
-        data = gfn(c, flat_src, use_kernel=use_kernel)      # [S*K, ...page]
-        flat = h.reshape((S * n_slots,) + h.shape[2:])
-        return flat.at[gdst].set(data.astype(h.dtype),
-                                 mode="drop").reshape(h.shape)
-
-    return jax.tree.map(one, hot, cold)
+    data = jax.tree.map(
+        lambda c: gather(c).reshape((S, -1) + c.shape[1:]), cold)
+    return scatter_hot(hot, data, dst, mask)
 
 
 def _leap_chunk(leap: dict, pages: jax.Array, feedback: jax.Array,
@@ -213,10 +240,13 @@ def _chunk_sync(leap: dict, meta: dict, pages: jax.Array, geom: TieredKV):
 
 
 def _chunk_async(leap: dict, meta: dict, ring: dict, pages: jax.Array,
-                 land_ok: jax.Array, seq: jax.Array, geom: TieredKV):
+                 land_ok: jax.Array, seq: jax.Array, home_s: jax.Array,
+                 geom: TieredKV, fabric: ShardedPoolCfg):
     """One async chunk step for one stream: wait (land + serve the chunk's
     demands), controller, issue (mirrors :func:`stream_step_async`,
-    metadata-only)."""
+    metadata-only). ``home_s`` is the stream's home shard — candidates
+    homed there get ``fabric.near_delay`` deadlines, cross-shard ones
+    ``fabric.far_delay`` (DESIGN.md §7; degenerate at one shard)."""
     now = ring["now"]
     valid_d = pages >= 0
     deferred0 = meta["n_deferred"]
@@ -227,8 +257,11 @@ def _chunk_async(leap: dict, meta: dict, ring: dict, pages: jax.Array,
     fb = winfo["prefetched_hit"] | winfo["partial_hit"]
     leap, cands, cvalid = _leap_chunk(leap, pages, fb, valid_d, geom)
     cval = cvalid & (cands >= 0) & (cands < geom.n_pages)
-    meta, ring = pool_issue(meta, ring, cands, cval, now,
-                            jnp.int32(geom.arrival_delay), seq=seq)
+    homes_c = page_home(cands, geom.n_pages, fabric.n_shards,
+                        fabric.placement)
+    delay = jnp.where(homes_c == home_s, jnp.int32(fabric.near_delay),
+                      jnp.int32(fabric.far_delay))
+    meta, ring = pool_issue(meta, ring, cands, cval, now, delay, seq=seq)
     ring = dict(ring)
     ring["now"] = now + 1
     issued = meta["n_prefetch_issued"] - issued0
@@ -236,23 +269,34 @@ def _chunk_async(leap: dict, meta: dict, ring: dict, pages: jax.Array,
     return leap, meta, ring, slots, winfo, issued, deferred
 
 
-@functools.partial(jax.jit,
-                   static_argnames=("geom", "async_datapath", "link_budget"))
-def _sweep_impl(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
-                async_datapath: bool, link_budget: int | None):
-    """Jitted lock-step sweep over ``sched [n_chunks, S, chunk]``."""
+def _sweep_fn(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
+              async_datapath: bool, fabric: ShardedPoolCfg, sharded: bool):
+    """Lock-step sweep over ``sched [n_chunks, S, chunk]``.
+
+    ``fabric`` is always present: the single-link path is the degenerate
+    one-shard fabric (whole budget on one NIC, every page near — reduces
+    bit-exactly to the pre-§7 behavior). ``sharded=True`` means the
+    function runs inside ``shard_map`` with ``cold`` leaves holding the
+    local ``[pps, ...]`` home slice.
+    """
     n_chunks, S, C = sched.shape
+    G = fabric.n_shards
     stream_ids = jnp.arange(S, dtype=jnp.int32)
+    homes_s = stream_homes(S, G)
 
     def body(carry, pages):
-        state, d_prev = carry                                # pages: [S, C]
+        state, d_prev = carry                # pages: [S, C]; d_prev int32[G]
         leap, meta = state["leap"], state["pool_meta"]
         ring, hot = state["ring"], state["hot"]
         if async_datapath:
             now = ring["now"]                                # int32[S]
-            if link_budget is not None:
-                cap = jnp.maximum(jnp.int32(link_budget) - d_prev, 0)
-                ok = link_grants(ring, now, cap)
+            if fabric.link_budget is not None:
+                # per-NIC leftover budget: shard g's demand traffic last
+                # chunk step comes off shard g's landing capacity
+                caps = jnp.maximum(jnp.int32(fabric.link_budget) - d_prev, 0)
+                homes_ring = page_home(ring["page"], geom.n_pages, G,
+                                       fabric.placement)
+                ok = link_grants_sharded(ring, now, caps, homes_ring)
             else:
                 ok = jnp.ones(ring["page"].shape, bool)
             # seq rides the persistent per-stream clock (not the per-call
@@ -262,8 +306,8 @@ def _sweep_impl(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
             seq = ((now * S + stream_ids)[:, None] * geom.pw_max
                    + jnp.arange(geom.pw_max, dtype=jnp.int32)[None, :])
             leap, meta, ring, slots, info, issued, deferred = jax.vmap(
-                functools.partial(_chunk_async, geom=geom))(
-                leap, meta, ring, pages, ok, seq)
+                functools.partial(_chunk_async, geom=geom, fabric=fabric))(
+                leap, meta, ring, pages, ok, seq, homes_s)
             # copy plan: landings first, then demand fetches (internal order)
             src = jnp.concatenate(
                 [info["landed_pages"],
@@ -281,32 +325,59 @@ def _sweep_impl(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
             deferred = jnp.zeros((S,), jnp.int32)
         hot = _apply_copies(hot, cold, src, dst, mask,
                             asynchronous=async_datapath,
-                            use_kernel=geom.use_kernel)
+                            use_kernel=geom.use_kernel,
+                            fabric=fabric, sharded=sharded,
+                            n_pages=geom.n_pages)
         state = {"leap": leap, "pool_meta": meta, "ring": ring, "hot": hot}
         cnt = lambda m: jnp.sum(m.astype(jnp.int32), axis=1)  # [S]
         d_t = cnt(info["fetched"])
+        homes_d = page_home(pages, geom.n_pages, G, fabric.placement)
+        d_t_shard = jnp.zeros((G,), jnp.int32).at[homes_d.reshape(-1)].add(
+            info["fetched"].reshape(-1).astype(jnp.int32), mode="drop")
         outs = (cnt(info["hit"]), cnt(info["prefetched_hit"]),
                 cnt(info["partial_hit"]), d_t, issued, deferred,
-                jnp.sum(d_t))
-        return (state, jnp.sum(d_t)), outs
+                jnp.sum(d_t), d_t_shard)
+        return (state, d_t_shard), outs
 
-    (state, _), (hit, pref, part, fetched, issued, deferred, link_d) = \
-        jax.lax.scan(body, (state, jnp.int32(0)), sched)
+    (state, _), (hit, pref, part, fetched, issued, deferred, link_d,
+                 shard_d) = jax.lax.scan(
+        body, (state, jnp.zeros((G,), jnp.int32)), sched)
     info = {"hit": hit.T, "pref_hit": pref.T, "partial_hit": part.T,
             "fetched": fetched.T, "issued": issued.T, "deferred": deferred.T,
-            "link_demand_fetches": link_d}
+            "link_demand_fetches": link_d,
+            "shard_demand_fetches": shard_d}                  # [n_chunks, G]
     return state, info
+
+
+_sweep_impl = jax.jit(_sweep_fn, static_argnames=("geom", "async_datapath",
+                                                  "fabric", "sharded"))
+
+def _sweep_sharded(mesh, geom: TieredKV, async_datapath: bool,
+                   fabric: ShardedPoolCfg):
+    """The jitted shard_map sweep for one topology (memoized through
+    :func:`repro.paging.sharded_pool.cached_shard_map`: cold sharded over
+    the mesh's ``fabric`` axis, everything else replicated)."""
+    from jax.sharding import PartitionSpec as P
+
+    return cached_shard_map(
+        (mesh, "tiered_sweep", geom, async_datapath, fabric),
+        lambda: functools.partial(_sweep_fn, geom=geom,
+                                  async_datapath=async_datapath,
+                                  fabric=fabric, sharded=True),
+        (P(), P("fabric"), P()))
 
 
 def tiered_sweep(state: dict, cold: dict, page_rows: jax.Array,
                  geom: TieredKV, *, async_datapath: bool = False,
-                 link_budget: int | None = None) -> tuple[dict, dict]:
+                 link_budget: int | None = None,
+                 fabric: ShardedPoolCfg | None = None,
+                 mesh=None) -> tuple[dict, dict]:
     """Sweep every stream's context pages through its hot pool, chunked.
 
     Args:
       state: stacked tiered state from :func:`tiered_init`.
       cold:  ``{"k","v"}: [n_pages, page_size, Hkv, dh]`` cold tier (one
-             layer slice of the paged KV pool).
+             layer slice of the paged KV pool), in original page-id order.
       page_rows: ``int32[S, npps]`` physical page ids per stream (the
              page-table rows of the requests each stream serves; ``-1``
              entries are skipped).
@@ -315,11 +386,23 @@ def tiered_sweep(state: dict, cold: dict, page_rows: jax.Array,
              convention as the stream layer).
       link_budget: optional pages/step the shared link moves across all
              streams' prefetches (DESIGN.md §5); demand chunks always
-             complete in-step.
+             complete in-step. Ignored when ``fabric`` is given (its
+             ``link_budget`` — *per NIC* — takes over).
+      fabric: optional :class:`repro.paging.sharded_pool.ShardedPoolCfg` —
+             the cold pool is sharded over ``fabric.n_shards`` home shards
+             (DESIGN.md §7): per-NIC §5 budgets, near/far prefetch
+             deadlines (stream s homed on shard ``s % n_shards``).
+      mesh:  optional ``jax.sharding.Mesh`` with a ``"fabric"`` axis of
+             size ``fabric.n_shards``; the sweep then runs under
+             ``shard_map`` with each device owning its home slice of
+             ``cold`` and cross-shard chunk copies riding ``lax.ppermute``
+             ring rotations. Without a mesh the same fabric scheduling
+             model runs against the local cold pool (bit-identical).
 
     Returns ``(state, info)`` with per-stream ``int32[S, n_chunks]`` counts
     ``hit`` / ``pref_hit`` / ``partial_hit`` / ``fetched`` / ``issued`` /
-    ``deferred`` plus the shared ``link_demand_fetches [n_chunks]``. After
+    ``deferred`` plus the shared ``link_demand_fetches [n_chunks]`` and
+    per-NIC ``shard_demand_fetches [n_chunks, n_shards]``. After
     the sweep every valid page of ``page_rows`` is hot-resident, so
     :func:`tiered_attention` can serve decode attention from hot slots.
     """
@@ -331,6 +414,15 @@ def tiered_sweep(state: dict, cold: dict, page_rows: jax.Array,
             "would not stay resident for attention")
     if async_datapath and geom.ring_size == 0:
         async_datapath = False
+    if fabric is None:
+        # degenerate one-shard fabric: whole budget on one NIC, every page
+        # near — bit-exact reduction to the pre-§7 single-link sweep
+        delay = max(geom.arrival_delay, 1)
+        fabric = ShardedPoolCfg(
+            n_shards=1, placement="interleave",
+            link_budget=None if link_budget is None else int(link_budget),
+            near_delay=delay, far_delay=delay)
+    check_fabric_topology(geom.n_pages, fabric, mesh)
     C = geom.chunk
     n_chunks = -(-npps // C)
     pad = n_chunks * C - npps
@@ -338,8 +430,12 @@ def tiered_sweep(state: dict, cold: dict, page_rows: jax.Array,
         [page_rows.astype(jnp.int32),
          jnp.full((S, pad), NO_PAGE, jnp.int32)], axis=1)
     sched = sched.reshape(S, n_chunks, C).transpose(1, 0, 2)
-    return _sweep_impl(state, cold, sched, geom, async_datapath,
-                       None if link_budget is None else int(link_budget))
+    if mesh is not None and fabric.n_shards > 1:
+        placed = place_cold(cold, geom.n_pages, fabric)
+        return _sweep_sharded(mesh, geom, async_datapath, fabric)(
+            state, placed, sched)
+    return _sweep_impl(state, cold, sched, geom, async_datapath, fabric,
+                       False)
 
 
 def tiered_slot_table(state: dict, page_rows: jax.Array
@@ -391,6 +487,7 @@ def tiered_decode_step(state: dict, cold: dict, q: jax.Array,
                        page_rows: jax.Array, lengths: jax.Array,
                        geom: TieredKV, *, async_datapath: bool = False,
                        link_budget: int | None = None,
+                       fabric: ShardedPoolCfg | None = None, mesh=None,
                        attn_kernel: bool = False):
     """One tiered decode step: demand-sweep the context, attend over hot.
 
@@ -399,7 +496,8 @@ def tiered_decode_step(state: dict, cold: dict, q: jax.Array,
     """
     state, info = tiered_sweep(state, cold, page_rows, geom,
                                async_datapath=async_datapath,
-                               link_budget=link_budget)
+                               link_budget=link_budget, fabric=fabric,
+                               mesh=mesh)
     out, ok = tiered_attention(q, state, page_rows, lengths,
                                use_kernel=attn_kernel)
     return state, out, info, ok

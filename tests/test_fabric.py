@@ -226,3 +226,68 @@ class TestMetrics:
         assert set(s) == {"p50", "p90", "p99", "p99.9", "avg", "max"}
         assert s["p50"] <= s["p90"] <= s["p99"] <= s["p99.9"] <= s["max"]
         assert percentile_summary([])["p99"] == 0.0
+
+
+# -- multi-node fabric: per-tenant home nodes (DESIGN.md §7 mirror) -----------
+class TestMultiNodeFabric:
+    """The event engine's side of the sharded cold pool: pages live on home
+    nodes (block/interleave placement), every transfer rides the page's
+    node NIC, and cross-node transfers pay ``far_factor``."""
+
+    @staticmethod
+    def _spec(name, home, n=600):
+        return TenantSpec(name, traces.sequential(n, start=0),
+                          policy="leap", cache_capacity=64,
+                          model="rdma_lean", home_node=home)
+
+    def test_one_node_is_the_legacy_scenario(self):
+        base = run_fabric(FabricScenario([_victim_spec()], seed=3))
+        multi = run_fabric(FabricScenario([_victim_spec()], seed=3,
+                                          n_nodes=1, n_pages=1 << 20,
+                                          far_factor=4.0))
+        assert base.makespan == multi.makespan
+        assert base.tenants[0].latency == multi.tenants[0].latency
+
+    def test_per_node_links_and_far_penalty(self):
+        # block placement over 2 nodes: the whole sequential trace lives on
+        # node 0 — the tenant homed there runs faster than the one paying
+        # far_factor on every transfer from across the fabric
+        n_pages = 2048
+        rep = run_fabric(FabricScenario(
+            [self._spec("near", 0), self._spec("far", 1)],
+            data_path="isolated", arbitration="per_tenant_qp",
+            link_width=2, seed=7, n_nodes=2, n_pages=n_pages,
+            placement="block", far_factor=3.0))
+        near = rep.tenant("near")
+        far = rep.tenant("far")
+        assert near.completion_time < far.completion_time
+        # both NICs exist per tier; only node 0's carried traffic
+        assert any(k.endswith("@n0") for k in rep.link_stats)
+        assert any(k.endswith("@n1") for k in rep.link_stats)
+        moved = {k: v["completed"] for k, v in rep.link_stats.items()}
+        assert sum(v for k, v in moved.items() if k.endswith("@n0")) > 0
+        assert sum(v for k, v in moved.items() if k.endswith("@n1")) == 0
+
+    def test_multi_node_requires_n_pages(self):
+        with pytest.raises(ValueError, match="n_pages"):
+            run_fabric(FabricScenario([_victim_spec()], n_nodes=2))
+
+    def test_multi_node_requires_divisible_pool(self):
+        # a ragged block split would map the last pages to node n_nodes
+        with pytest.raises(ValueError, match="divisible"):
+            run_fabric(FabricScenario([_victim_spec()], n_nodes=7,
+                                      n_pages=600))
+
+    def test_multi_node_rejects_placement_typo(self):
+        # home_of would silently treat an unknown string as "block"
+        with pytest.raises(ValueError, match="placement"):
+            run_fabric(FabricScenario([_victim_spec()], n_nodes=2,
+                                      n_pages=1024,
+                                      placement="interleaved"))
+
+    def test_multi_node_rejects_out_of_range_home_node(self):
+        # a home outside [0, n_nodes) would silently pay far_factor on
+        # every transfer instead of erroring
+        with pytest.raises(ValueError, match="home_node"):
+            run_fabric(FabricScenario([self._spec("t0", 2)], n_nodes=2,
+                                      n_pages=1024))

@@ -5,7 +5,8 @@ import numpy as np
 import pytest
 
 from repro.core.cache import PageCache
-from repro.core.pool import pool_access, pool_init, pool_stats
+from repro.core.pool import (pool_access, pool_init, pool_stats,
+                             pool_wait_batch, ring_init)
 
 
 def _serve(stp, hot, pool, pages, is_pf, lazy=False):
@@ -88,6 +89,57 @@ class TestPool:
                                       [True, True, False])
         s = pool_stats(st)
         assert s["prefetch_issued"] == 0 and s["misses"] == 1
+
+
+class TestBatchGeometryPrecondition:
+    """The documented per-batch hot-buffer floor is *enforced* at trace
+    time instead of silently corrupting slot metadata: ``2*K`` under eager
+    eviction (a batch pins K live + K deferred-free slots), ``K`` under
+    lazy LRU (fewer and the batch re-evicts its own slots)."""
+
+    def test_pool_access_rejects_undersized_hot_buffer(self):
+        st = pool_init(64, 8)                    # 8 slots, K=5 -> needs 10
+        hot = jnp.zeros((8, 4))
+        pool = jnp.zeros((64, 4))
+        pages = jnp.arange(5, dtype=jnp.int32)
+        with pytest.raises(ValueError, match="n_slots=8 < 2\\*K=10"):
+            pool_access(st, hot, pool, pages, jnp.zeros((5,), bool),
+                        jnp.ones((5,), bool))
+
+    def test_pool_wait_batch_rejects_undersized_hot_buffer(self):
+        st, ring = pool_init(64, 4), ring_init(4)
+        hot = jnp.zeros((4, 4))
+        pool = jnp.zeros((64, 4))
+        pages = jnp.arange(3, dtype=jnp.int32)   # D=3 -> needs 6 > 4
+        with pytest.raises(ValueError, match="n_slots=4 < 2\\*K=6"):
+            pool_wait_batch(st, ring, hot, pool, pages,
+                            jnp.ones((3,), bool), jnp.int32(0))
+
+    def test_lazy_floor_is_k_not_2k(self):
+        # lazy LRU never defers frees: K <= n_slots < 2*K is legal (the
+        # tiered sync sweep runs exactly such geometries) ...
+        st = pool_init(64, 8)
+        hot = jnp.zeros((8, 4))
+        pool = jnp.arange(64 * 4, dtype=jnp.float32).reshape(64, 4)
+        st, hot, slots, info = _serve(st, hot, pool, [1, 2, 3, 4, 5, 6],
+                                      [False] * 6, lazy=True)
+        for i, p in enumerate([1, 2, 3, 4, 5, 6]):
+            assert (hot[slots[i]] == pool[p]).all()
+        # ... but below K the batch would re-evict its own slots
+        st2 = pool_init(64, 4)
+        with pytest.raises(ValueError, match="n_slots=4 < K=6"):
+            pool_access(st2, jnp.zeros((4, 4)), pool,
+                        jnp.arange(6, dtype=jnp.int32),
+                        jnp.zeros((6,), bool), jnp.ones((6,), bool),
+                        lazy=True)
+
+    def test_boundary_geometry_still_accepted(self):
+        st = pool_init(64, 8)                    # exactly 2*K is legal
+        hot = jnp.zeros((8, 4))
+        pool = jnp.arange(64 * 4, dtype=jnp.float32).reshape(64, 4)
+        st, hot, slots, info = _serve(st, hot, pool, [1, 2, 3, 4],
+                                      [False, True, True, True])
+        assert bool(info["fetched"].all())
 
 
 class TestPageCache:

@@ -7,7 +7,9 @@ pytest.importorskip("hypothesis")
 from hypothesis import given, strategies as st
 
 from repro.core.history import AccessHistory
-from repro.core.window import PrefetchWindow, round_up_pow2, _round_up_pow2_jax
+from repro.core.window import (PrefetchWindow, _round_up_pow2_jax,
+                               init_window_state, next_window_size,
+                               note_prefetch_hits, round_up_pow2)
 
 
 @given(st.lists(st.integers(0, 1 << 20), min_size=1, max_size=100))
@@ -73,3 +75,52 @@ class TestPrefetchWindow:
                 w.note_prefetch_hit()
             pw = w.next_size(follows)
             assert 0 <= pw <= 8
+
+
+class TestTwinEquivalence:
+    """``PrefetchWindow.next_size`` and the JAX ``next_window_size`` are
+    twins: identical window sequence and identical carried state over any
+    hit/trend history — including the shrink-smoothly branch
+    (``pw < pw_prev // 2``, Alg. 2 line 13-14) that spot checks only graze.
+    """
+
+    @staticmethod
+    def _step_both(ref, state, hits, follows, pw_max):
+        import jax.numpy as jnp
+        for _ in range(hits):
+            ref.note_prefetch_hit()
+        state = note_prefetch_hits(state, jnp.int32(hits))
+        state, pw_j = next_window_size(state, jnp.asarray(follows), pw_max)
+        pw_r = ref.next_size(follows)
+        assert int(pw_j) == pw_r
+        assert int(state["pw_prev"]) == ref.pw_prev
+        assert int(state["c_hit"]) == ref.c_hit == 0
+        return state, pw_r
+
+    @given(st.lists(st.tuples(st.integers(0, 20), st.booleans()),
+                    min_size=1, max_size=60),
+           st.sampled_from([4, 8, 16, 64]))
+    def test_twins_agree_on_random_histories(self, events, pw_max):
+        ref = PrefetchWindow(pw_max=pw_max)
+        state = init_window_state()
+        for hits, follows in events:
+            state, _ = self._step_both(ref, state, hits, follows, pw_max)
+
+    @given(st.integers(7, 40), st.integers(1, 2), st.booleans())
+    def test_twins_agree_through_the_shrink_branch(self, big, small,
+                                                   follows):
+        """Grow to pw_prev == pw_max, then starve: c_hit=1 would collapse to
+        2 but must floor at pw_prev // 2 = 4 in BOTH twins (c_hit=2 sits
+        exactly on the boundary and must NOT clamp)."""
+        ref = PrefetchWindow(pw_max=8)
+        state = init_window_state()
+        # big >= 7 -> round_up_pow2(big + 1) >= 8 -> window pegged at cap
+        state, pw = self._step_both(ref, state, big, True, 8)
+        assert pw == 8
+        state, pw = self._step_both(ref, state, small, follows, 8)
+        # c_hit=1: pow2(2)=2 floored at 4; c_hit=2: pow2(3)=4, boundary,
+        # no clamp — both land on 4 through *different* branches
+        assert pw == 4
+        # and the floor keeps halving smoothly, never cliff-dropping
+        state, pw = self._step_both(ref, state, 1, follows, 8)
+        assert pw == 2
