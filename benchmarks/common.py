@@ -3,10 +3,15 @@
 from __future__ import annotations
 
 import csv
+import math
 import os
+import subprocess
 import time
 
 RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+
+#: machine-readable bench result schema version (``benchmarks.run --json``)
+BENCH_SCHEMA = "repro-bench/v1"
 
 # CI smoke mode: every suite registered in benchmarks.run executes end-to-end
 # at tiny sizes so new benchmarks cannot rot unexercised. Headline numbers are
@@ -50,3 +55,81 @@ class timer:
 
     def __exit__(self, *a):
         self.dt = time.perf_counter() - self.t0
+
+
+# -- machine-readable bench results (benchmarks.run --json) -------------------
+def git_sha() -> str:
+    """Current commit sha, or ``"unknown"`` outside a git checkout."""
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def jsonable(v):
+    """Coerce a result value to plain JSON types (NaN -> None, numpy ->
+    python scalars, nested containers recursively)."""
+    if isinstance(v, dict):
+        return {str(k): jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [jsonable(x) for x in v]
+    if isinstance(v, bool) or v is None or isinstance(v, (int, str)):
+        return v
+    if isinstance(v, float):
+        return None if math.isnan(v) or math.isinf(v) else v
+    if hasattr(v, "item"):                 # numpy / jax scalar
+        return jsonable(v.item())
+    if hasattr(v, "tolist"):               # numpy / jax array
+        return jsonable(v.tolist())
+    return str(v)
+
+
+def bench_json_doc(tag: str, suites: list[dict],
+                   failures: list[tuple]) -> dict:
+    """The ``repro-bench/v1`` document ``benchmarks.run --json`` writes.
+
+    ``suites`` entries carry ``{"suite", "wall_s", "rows", "derived"}``.
+    """
+    return {
+        "schema": BENCH_SCHEMA,
+        "tag": tag,
+        "git_sha": git_sha(),
+        "created_unix": time.time(),
+        "smoke": SMOKE,
+        "suites": jsonable(suites),
+        "failures": [[name, err] for name, err in failures],
+    }
+
+
+def validate_bench_json(doc: dict) -> list[str]:
+    """Schema check for a ``repro-bench/v1`` document; returns a list of
+    violations (empty = valid). Hand-rolled on purpose: no jsonschema
+    dependency, and CI's bench-smoke job gates on it."""
+    errs = []
+    if not isinstance(doc, dict):
+        return ["document is not an object"]
+    if doc.get("schema") != BENCH_SCHEMA:
+        errs.append(f"schema != {BENCH_SCHEMA!r}: {doc.get('schema')!r}")
+    for key, typ in (("tag", str), ("git_sha", str),
+                     ("created_unix", (int, float)), ("smoke", bool),
+                     ("suites", list), ("failures", list)):
+        if not isinstance(doc.get(key), typ):
+            errs.append(f"missing/ill-typed field {key!r}")
+    for i, s in enumerate(doc.get("suites") or []):
+        if not isinstance(s, dict):
+            errs.append(f"suites[{i}] is not an object")
+            continue
+        if not isinstance(s.get("suite"), str):
+            errs.append(f"suites[{i}].suite missing")
+        if not isinstance(s.get("wall_s"), (int, float)):
+            errs.append(f"suites[{i}].wall_s missing")
+        if not isinstance(s.get("rows"), list):
+            errs.append(f"suites[{i}].rows missing")
+        elif any(not isinstance(r, dict) for r in s["rows"]):
+            errs.append(f"suites[{i}].rows has non-object entries")
+        if not isinstance(s.get("derived"), dict):
+            errs.append(f"suites[{i}].derived missing")
+    return errs

@@ -1,13 +1,18 @@
 """Benchmark entry point: one module per paper figure + roofline.
 
-``PYTHONPATH=src python -m benchmarks.run [--only fig2,...]``
+``PYTHONPATH=src python -m benchmarks.run [--only fig2,...] [--json OUT.json]``
 Writes CSVs under results/bench/, prints tables + derived headline numbers
 (the quantities EXPERIMENTS.md cites against the paper's claims).
+``--json`` additionally writes a ``repro-bench/v1`` document: per-suite rows,
+derived metrics, wall time, plus git sha / smoke flag — the machine-readable
+results CI archives and regression tooling diffs.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 
@@ -15,7 +20,7 @@ from . import (datapath_overlap, fabric_scale, fig2_microbenchmark,
                fig3_patterns, fig8_slow_storage, fig9_10_prefetchers,
                fig11_apps, fig12_cache_size, fig13_multiapp, jax_stream,
                link_contention, roofline, sharded_pool, tiered_kv)
-from .common import fmt_table
+from .common import bench_json_doc, fmt_table, validate_bench_json
 
 SUITES = {
     "fig2_7": fig2_microbenchmark.run,
@@ -38,10 +43,14 @@ SUITES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None, help="comma-separated suite names")
+    ap.add_argument("--json", default=None, metavar="OUT.json",
+                    help="write machine-readable repro-bench/v1 results "
+                         "(e.g. BENCH_main.json)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     failures = []
+    suite_docs = []
     for name, fn in SUITES.items():
         if only and name not in only:
             continue
@@ -53,12 +62,29 @@ def main() -> None:
             failures.append((name, repr(e)))
             print(f"FAILED: {e!r}")
             continue
+        wall = time.time() - t0
+        suite_docs.append({"suite": name, "wall_s": round(wall, 3),
+                           "rows": rows, "derived": derived or {}})
         print(fmt_table(rows))
         if derived:
             print("\nderived:")
             for k, v in derived.items():
                 print(f"  {k} = {v}")
-        print(f"[{time.time() - t0:.1f}s]")
+        print(f"[{wall:.1f}s]")
+
+    if args.json:
+        tag = os.path.splitext(os.path.basename(args.json))[0]
+        if tag.startswith("BENCH_"):
+            tag = tag[len("BENCH_"):]
+        doc = bench_json_doc(tag, suite_docs, failures)
+        errs = validate_bench_json(doc)
+        if errs:            # a suite returned malformed rows/derived
+            print("\nBENCH JSON INVALID:", errs)
+            sys.exit(1)
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+        print(f"\nwrote {args.json} ({len(suite_docs)} suites)")
 
     if failures:
         print("\nFAILURES:", failures)

@@ -21,7 +21,7 @@ from __future__ import annotations
 
 import dataclasses
 
-import numpy as np
+from repro.obs.metrics import percentile_ladder
 
 
 @dataclasses.dataclass
@@ -62,18 +62,11 @@ class PrefetchStats:
         return self.misses / self.faults if self.faults else 0.0
 
     def latency_percentiles(self, qs=(50, 90, 99)) -> dict:
-        if not self.latencies:
-            return {f"p{q}": 0.0 for q in qs} | {"avg": 0.0}
-        arr = np.asarray(self.latencies)
-        out = {f"p{q}": float(np.percentile(arr, q)) for q in qs}
-        out["avg"] = float(arr.mean())
-        return out
+        # Unified ladder (repro.obs.metrics): NaNs + n=0 for empty samples.
+        return percentile_ladder(self.latencies, qs=qs)
 
     def timeliness_percentiles(self, qs=(50, 99)) -> dict:
-        if not self.timeliness:
-            return {f"p{q}": 0.0 for q in qs}
-        arr = np.asarray(self.timeliness)
-        return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+        return percentile_ladder(self.timeliness, qs=qs)
 
     def summary(self) -> dict:
         return {

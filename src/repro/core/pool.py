@@ -876,6 +876,18 @@ def pool_stats(st: dict, ring: dict | None = None) -> dict:
     ``latency_hidden_frac`` is the fraction of consumed prefetches whose
     data had fully arrived before first use — the async path's
     latency-hiding score (1.0 = every prefetch hid its whole transfer).
+
+    **Decode contract** (DESIGN.md §8): these counters are the fold of the
+    page-lifecycle event log :mod:`repro.obs.trace` decodes from the
+    per-step info arrays. Per event kind — ``hit``/``partial`` increment
+    ``hits`` (the ``hit`` mask *excludes* partials; both count into
+    ``prefetch_hits`` when prefetched, ``partial`` always does), ``miss``
+    increments ``misses`` (= ``fetched`` minus partials), ``issue``/
+    ``land``/``defer`` count into ``prefetch_issued``/landed/``deferred``,
+    and the timeless end-of-run kinds ``drop``/``evict`` carry
+    ``ring_drops``/``pollution``. ``repro.obs.trace.events_to_counts``
+    inverts the decode; ``tests/test_obs.py`` pins the round trip and the
+    event-granularity form of the decomposition above.
     """
     g = lambda k: int(st[k])
     issued, phits = g("n_prefetch_issued"), g("n_prefetch_hits")

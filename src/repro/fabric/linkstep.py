@@ -99,17 +99,25 @@ class LinkStepReport:
 def run_linkstep(schedules, n_pages: int, budget: int | None,
                  ring_size: int, arrival_delay: int = 1,
                  pw_max: int = DEFAULT_PW_MAX, h_size: int = DEFAULT_H_SIZE,
-                 n_split: int = DEFAULT_N_SPLIT) -> LinkStepReport:
+                 n_split: int = DEFAULT_N_SPLIT,
+                 recorder=None) -> LinkStepReport:
     """Run ``schedules`` (``[S][T]`` page ids) through the lock-step link.
 
     ``budget=None`` models private infinite links (every eligible prefetch
     lands at its nominal arrival — the unbudgeted jitted path).
+
+    ``recorder`` (an :class:`repro.obs.trace.TraceRecorder`) receives a
+    page-level event at every transition — ``land``/``defer`` at grant
+    time, ``hit``/``partial``/``miss`` at serve time, ``issue``/``drop``
+    at issue time — the ground-truth side of the §8 trace diff against
+    the jitted path's decoded info arrays.
     """
     schedules = [[int(p) for p in row] for row in schedules]
     S = len(schedules)
     T = len(schedules[0]) if S else 0
     arrival_delay = max(arrival_delay, 1)   # mirrors pool_issue's clamp
     cap_inf = budget is None
+    rec = recorder.emit if recorder is not None else (lambda *a, **k: None)
     streams = [_Stream(LeapPrefetcher(h_size=h_size, n_split=n_split,
                                       pw_max=pw_max),
                        PrefetchStats(), set(), []) for _ in range(S)]
@@ -128,8 +136,10 @@ def run_linkstep(schedules, n_pages: int, budget: int | None,
             st = streams[s]
             st.queue.remove(e)
             st.resident.add(e.page)
+            rec("land", t, s, page=e.page, seq=e.seq)
             if e.ready < t:
                 st.stats.deferred += 1
+                rec("defer", t, s, page=e.page, seq=e.seq)
             landed += 1
         landed_hist.append(landed)
 
@@ -146,6 +156,7 @@ def run_linkstep(schedules, n_pages: int, budget: int | None,
                 st.stats.prefetch_hits += 1
                 st.resident.discard(page)
                 pf_hit = True
+                rec("hit", t, s, page=page, pref=True)
             elif inflight is not None:
                 # partial hit: the demand completes the transfer early and
                 # blocks on the residual only; it consumes demand bandwidth
@@ -153,14 +164,17 @@ def run_linkstep(schedules, n_pages: int, budget: int | None,
                 st.stats.cache_hits += 1
                 st.stats.prefetch_hits += 1
                 st.stats.partial_hits += 1
+                rec("partial", t, s, page=page, seq=inflight.seq, pref=True)
                 if inflight.ready < t:
                     st.stats.deferred += 1
+                    rec("defer", t, s, page=page, seq=inflight.seq)
                 d_t += 1
                 pf_hit = True
             else:
                 st.stats.misses += 1
                 d_t += 1
                 pf_hit = False
+                rec("miss", t, s, page=page)
 
             # -- 3. controller + globally ordered issue ----------------------
             for k, cand in enumerate(st.prefetcher.on_fault(page, pf_hit)):
@@ -171,10 +185,12 @@ def run_linkstep(schedules, n_pages: int, budget: int | None,
                     continue
                 if len(st.queue) >= ring_size:
                     st.drops += 1
+                    rec("drop", t, s, page=cand)
                     continue
-                st.queue.append(_Inflight(cand, t + arrival_delay,
-                                          (t * S + s) * pw_max + k))
+                seq = (t * S + s) * pw_max + k
+                st.queue.append(_Inflight(cand, t + arrival_delay, seq))
                 st.stats.prefetch_issued += 1
+                rec("issue", t, s, page=cand, seq=seq)
                 issued_t += 1
         demand_hist.append(d_t)
         issued_hist.append(issued_t)

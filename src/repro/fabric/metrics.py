@@ -14,17 +14,17 @@ import dataclasses
 
 import numpy as np
 
+from repro.obs.metrics import percentile_ladder
+
 
 def percentile_summary(latencies) -> dict:
-    """p50/p90/p99/p99.9 + avg/max of a latency sample (µs)."""
-    qs = (50, 90, 99, 99.9)
-    if latencies is None or len(latencies) == 0:
-        return {f"p{q:g}": 0.0 for q in qs} | {"avg": 0.0, "max": 0.0}
-    arr = np.asarray(latencies, dtype=np.float64)
-    out = {f"p{q:g}": float(np.percentile(arr, q)) for q in qs}
-    out["avg"] = float(arr.mean())
-    out["max"] = float(arr.max())
-    return out
+    """p50/p90/p99/p99.9 + avg/max + n of a latency sample (µs).
+
+    Delegates to the unified ladder in :mod:`repro.obs.metrics`. Empty
+    samples report ``NaN`` everywhere plus ``n=0`` — all-zeros would be
+    indistinguishable from a genuinely zero-latency tenant downstream.
+    """
+    return percentile_ladder(latencies, qs=(50.0, 90.0, 99.0, 99.9))
 
 
 def jain_index(values) -> float:

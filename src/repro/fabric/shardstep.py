@@ -51,13 +51,18 @@ def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
                   budget: int | None, ring_size: int,
                   near_delay: int = 1, far_delay: int = 2,
                   pw_max: int = DEFAULT_PW_MAX, h_size: int = DEFAULT_H_SIZE,
-                  n_split: int = DEFAULT_N_SPLIT) -> LinkStepReport:
+                  n_split: int = DEFAULT_N_SPLIT,
+                  recorder=None) -> LinkStepReport:
     """Run ``schedules`` (``[S][T]`` page ids) through the sharded fabric.
 
     ``budget`` is *per NIC* (``None`` = infinite NICs: every eligible
     prefetch lands at its nominal distance-dependent arrival). Returns a
     :class:`repro.fabric.linkstep.LinkStepReport`; the per-step link
     histograms aggregate over all NICs.
+
+    ``recorder`` (:class:`repro.obs.trace.TraceRecorder`) receives every
+    transition page-level with the page's home shard stamped — same hook
+    contract as :func:`repro.fabric.linkstep.run_linkstep`.
     """
     if placement not in ("block", "interleave"):
         raise ValueError(f"unknown placement {placement!r}")
@@ -70,6 +75,7 @@ def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
     near_delay = max(near_delay, 1)     # mirrors pool_issue's clamp
     far_delay = max(far_delay, near_delay)
     cap_inf = budget is None
+    rec = recorder.emit if recorder is not None else (lambda *a, **k: None)
     home = lambda p: home_of(p, n_pages, n_shards, placement)
     streams = [_Stream(LeapPrefetcher(h_size=h_size, n_split=n_split,
                                       pw_max=pw_max),
@@ -91,8 +97,10 @@ def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
             st = streams[s]
             st.queue.remove(e)
             st.resident.add(e.page)
+            rec("land", t, s, page=e.page, shard=g, seq=e.seq)
             if e.ready < t:
                 st.stats.deferred += 1
+                rec("defer", t, s, page=e.page, shard=g, seq=e.seq)
             landed += 1
         landed_hist.append(landed)
 
@@ -109,20 +117,26 @@ def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
                 st.stats.prefetch_hits += 1
                 st.resident.discard(page)
                 pf_hit = True
+                rec("hit", t, s, page=page, shard=home(page), pref=True)
             elif inflight is not None:
                 # partial hit: completes early on the page's home NIC
                 st.queue.remove(inflight)
                 st.stats.cache_hits += 1
                 st.stats.prefetch_hits += 1
                 st.stats.partial_hits += 1
+                rec("partial", t, s, page=page, shard=home(page),
+                    seq=inflight.seq, pref=True)
                 if inflight.ready < t:
                     st.stats.deferred += 1
+                    rec("defer", t, s, page=page, shard=home(page),
+                        seq=inflight.seq)
                 d_t[home(page)] += 1
                 pf_hit = True
             else:
                 st.stats.misses += 1
                 d_t[home(page)] += 1
                 pf_hit = False
+                rec("miss", t, s, page=page, shard=home(page))
 
             # -- 3. controller + distance-delayed, globally ordered issue ----
             for k, cand in enumerate(st.prefetcher.on_fault(page, pf_hit)):
@@ -133,11 +147,13 @@ def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
                     continue
                 if len(st.queue) >= ring_size:
                     st.drops += 1
+                    rec("drop", t, s, page=cand, shard=home(cand))
                     continue
                 delay = (near_delay if home(cand) == my_shard else far_delay)
-                st.queue.append(_Inflight(cand, t + delay,
-                                          (t * S + s) * pw_max + k))
+                seq = (t * S + s) * pw_max + k
+                st.queue.append(_Inflight(cand, t + delay, seq))
                 st.stats.prefetch_issued += 1
+                rec("issue", t, s, page=cand, shard=home(cand), seq=seq)
                 issued_t += 1
         demand_hist.append(sum(d_t))
         issued_hist.append(issued_t)

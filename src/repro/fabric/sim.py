@@ -95,7 +95,7 @@ class _FabricSim:
 
     def __init__(self, engine: EventEngine, n_nodes: int = 1,
                  n_pages: int = 0, placement: str = "block",
-                 far_factor: float = 1.0):
+                 far_factor: float = 1.0, recorder=None):
         self.engine = engine
         self.links: dict[str, FabricLink] = {}
         # (cache id, page) -> _Transfer for every *tracked* in-flight fill
@@ -104,6 +104,18 @@ class _FabricSim:
         self.n_pages = int(n_pages)
         self.placement = placement
         self.far_factor = float(far_factor)
+        # §8 page-lifecycle tracing (repro.obs.trace.TraceRecorder): the
+        # engine runs on a continuous clock, so events are stamped with
+        # floor(sim time) and the tenant's index as the stream id
+        self._rec = recorder.emit if recorder is not None \
+            else (lambda *a, **k: None)
+        self.stream_ids: dict[int, int] = {}    # id(tenant) -> index
+        # accesses that blocked on an in-flight fill: their wake-time hit
+        # is the partial hit (one fault, one demand event)
+        self._waited: set = set()
+
+    def _sid(self, ten: Tenant) -> int:
+        return self.stream_ids.get(id(ten), ten.rank)
 
     # -- multi-node routing (no-ops at n_nodes == 1) -------------------------
     def _node_of(self, page: int) -> int:
@@ -135,8 +147,11 @@ class _FabricSim:
         key = (id(cache), page)
         rec = self.inflight.get(key)
         if rec is not None and cache.entries.get(page) is rec.entry:
+            self._waited.add((id(ten), t_start))
             rec.waiters.append((ten, t_start))   # block on residual transfer
             return
+        waited = (id(ten), t_start) in self._waited
+        self._waited.discard((id(ten), t_start))
         stats = cache.stats
         stats.faults += 1
         ten.faults += 1
@@ -150,12 +165,18 @@ class _FabricSim:
             ten.cache_hits += 1
             if pf_hit:
                 ten.prefetch_hits += 1
+            self._rec("partial" if waited else "hit", int(t_start),
+                      self._sid(ten), page=page,
+                      shard=self._node_of(page) if self.n_nodes > 1 else -1,
+                      pref=pf_hit or waited)
             latency = ten.model.t_hit + wait
             self._issue_prefetches(ten, page, pf_hit, t_start)
             self._finish_access(ten, t_start, latency)
             return
         stats.misses += 1
         ten.misses += 1
+        self._rec("miss", int(t_start), self._sid(ten), page=page,
+                  shard=self._node_of(page) if self.n_nodes > 1 else -1)
         stall = cache.insert_demand(page, t_start, _PENDING)
         dp = ten.model.datapath_cost(ten.rng)
         entry = cache.entries.get(page)          # tracked only under LRU
@@ -182,6 +203,7 @@ class _FabricSim:
 
     def _prefetch_done(self, ten: Tenant, page: int, key, rec,
                        t_done: float) -> None:
+        self._rec("land", int(t_done), self._sid(ten), page=page)
         self._wake(self._settle(ten.cache, page, key, rec, t_done))
 
     def _settle(self, cache, page: int, key, rec, t_done: float) -> list:
@@ -208,6 +230,7 @@ class _FabricSim:
             if not cache.insert_prefetch(cand, t_fault, _PENDING):
                 continue
             cand = int(cand)
+            self._rec("issue", int(t_fault), self._sid(ten), page=cand)
             key = (id(cache), cand)
             rec = _Transfer(cache.entries[cand])
             self.inflight[key] = rec
@@ -231,8 +254,14 @@ class _FabricSim:
 
 
 # -- entry points -------------------------------------------------------------
-def run_fabric(scenario: FabricScenario) -> FabricReport:
-    """Run a multi-tenant scenario; returns the per-tenant/fabric report."""
+def run_fabric(scenario: FabricScenario, recorder=None) -> FabricReport:
+    """Run a multi-tenant scenario; returns the per-tenant/fabric report.
+
+    ``recorder`` (a :class:`repro.obs.trace.TraceRecorder`) receives
+    page-level ``hit``/``partial``/``miss``/``issue``/``land`` events with
+    ``step = floor(sim time)`` and the tenant's scenario index as the
+    stream id (DESIGN.md §8).
+    """
     if scenario.data_path not in ("isolated", "shared"):
         raise ValueError(f"data_path must be 'isolated' or 'shared', "
                          f"got {scenario.data_path!r}")
@@ -259,7 +288,7 @@ def run_fabric(scenario: FabricScenario) -> FabricReport:
     sim = _FabricSim(engine, n_nodes=scenario.n_nodes,
                      n_pages=scenario.n_pages,
                      placement=scenario.placement,
-                     far_factor=scenario.far_factor)
+                     far_factor=scenario.far_factor, recorder=recorder)
     arb = scenario.arbitration or (
         "per_tenant_qp" if scenario.data_path == "isolated" else "fifo")
 
@@ -298,6 +327,7 @@ def run_fabric(scenario: FabricScenario) -> FabricReport:
             sim.links[tier + tag] = FabricLink(
                 engine, tier + tag, width=scenario.link_width,
                 arbitration=arb, n_qps=scenario.n_qps)
+    sim.stream_ids = {id(t): i for i, t in enumerate(tenants)}
     for ten in tenants:
         if arb == "per_tenant_qp":
             for tag in node_tags:

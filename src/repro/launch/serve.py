@@ -29,12 +29,21 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro.models.model import build_model
+from repro.obs.export import write_chrome_trace, write_jsonl
+from repro.obs.metrics import Registry
+from repro.obs.trace import (Event, decode_sweep_events, events_to_counts,
+                             summary_events)
 from repro.paging.kv_cache import (append_kv, init_paged_kv,
                                    linear_page_table, paged_decode_attention)
 from repro.paging.sharded_pool import ShardedPoolCfg
 from repro.paging.tiered_kv import (TieredKV, tiered_attention, tiered_init,
                                     tiered_invalidate, tiered_min_slots,
                                     tiered_stats, tiered_sweep)
+
+#: event-type totals that must reproduce the pool counters bit-exactly
+#: whenever a trace is written (DESIGN.md §8.2)
+_PINNED_COUNTERS = ("hits", "misses", "partial_hits", "prefetch_hits",
+                    "prefetch_issued", "deferred", "ring_drops", "pollution")
 
 
 def _find_dense_kv(state) -> tuple[jax.Array, jax.Array] | tuple[None, None]:
@@ -107,7 +116,17 @@ def main(argv=None) -> dict:
                     help="with --shards: prefetch arrival delay in chunk "
                          "steps for cross-shard pages (near pages take 1)")
     ap.add_argument("--page-size", type=int, default=4)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="with --paged: decode the sweep info arrays into "
+                         "the page-lifecycle event log and write a Chrome "
+                         "trace-event JSON (Perfetto-loadable; per-stream "
+                         "tracks + link/NIC counter tracks) plus a .jsonl "
+                         "sibling. Decoding is host-side and post-hoc: the "
+                         "jitted serving path is unchanged (DESIGN.md §8)")
     args = ap.parse_args(argv)
+    if args.trace and not args.paged:
+        ap.error("--trace requires --paged (only the tiered data path "
+                 "emits the page-lifecycle info arrays)")
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
@@ -122,39 +141,61 @@ def main(argv=None) -> dict:
         batch["frames"] = jax.random.normal(rng, (B, prompt_len, cfg.d_model),
                                             jnp.dtype(cfg.dtype))
 
+    reg = Registry()
     decode = jax.jit(model.decode_step)
-    t0 = time.perf_counter()
-    logits, state = model.prefill(params, batch, max_len)
-    tok = jnp.argmax(logits, -1).astype(jnp.int32)
-    t_prefill = time.perf_counter() - t0
+    with reg.span("prefill") as sp:
+        logits, state = model.prefill(params, batch, max_len)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        sp.sync = tok
+    t_prefill = reg.histogram("prefill").samples[-1]
 
     out = [tok]
     t0 = time.perf_counter()
     for _ in range(args.gen - 1):
-        logits, state = decode(params, tok, state)
-        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        # span-timed per token (device-sync'd) — feeds the p50–p99.9
+        # token-latency ladder in the final report
+        with reg.span("token_latency") as sp:
+            logits, state = decode(params, tok, state)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)
+            sp.sync = tok
         out.append(tok)
-    jax.block_until_ready(tok)
     t_decode = time.perf_counter() - t0
     tokens = np.stack([np.asarray(t) for t in out], 1)
+    tok_ladder = reg.histogram("token_latency").ladder()
     result = {
         "prefill_s": round(t_prefill, 3),
+        # TTFT: the first token is emitted by prefill's final logits
+        "ttft_s": round(t_prefill, 3),
         "decode_tok_per_s": round(B * (args.gen - 1) / max(t_decode, 1e-9), 1),
+        "token_latency": {k: round(v, 5) if isinstance(v, float) else v
+                          for k, v in tok_ladder.items()},
         "tokens_shape": list(tokens.shape),
     }
 
     if args.paged:
-        result.update(_serve_tiered(cfg, state, args, B, prompt_len, max_len))
+        result.update(_serve_tiered(cfg, state, args, B, prompt_len, max_len,
+                                    reg=reg, trace_path=args.trace))
         if not result["tiered_equiv_ok"]:
             print(result)
-            raise SystemExit("tiered/flat decode attention mismatch")
+            msg = "tiered/flat decode attention mismatch"
+            if args.trace:
+                msg += (f" (first bad decode step "
+                        f"{result['tiered_first_bad_step']}; event trace "
+                        f"dumped to {args.trace} — diff it against a good "
+                        f"run with repro.obs.diff)")
+            raise SystemExit(msg)
+        if args.trace and not result["trace_totals_ok"]:
+            print(result)
+            raise SystemExit("trace event totals diverge from pool counters "
+                             "(decode contract violation, DESIGN.md §8.2)")
 
     print(result)
     return result
 
 
 def _serve_tiered(cfg, state, args, B: int, prompt_len: int,
-                  max_len: int) -> dict:
+                  max_len: int, reg: Registry | None = None,
+                  trace_path: str | None = None) -> dict:
     """Replay the decode window through the tiered paged-KV data path.
 
     Mirrors the model's real decoded K/V into the cold paged pool, then per
@@ -162,6 +203,12 @@ def _serve_tiered(cfg, state, args, B: int, prompt_len: int,
     written page in every stream's hot tier, demand-sweep each request's
     context pages through its hot pool, and serve attention from hot slots
     — asserting bit-identity against the flat pool every step.
+
+    With ``trace_path`` the per-sweep info arrays are decoded host-side
+    (after the timed window — the jitted path is untouched) into the
+    page-lifecycle event log on the global chunk-step clock, written as a
+    Chrome trace + JSONL, and the event-type totals are pinned bit-exact
+    against the final pool counters.
     """
     ps = args.page_size
     npps = -(-max_len // ps)
@@ -224,42 +271,60 @@ def _serve_tiered(cfg, state, args, B: int, prompt_len: int,
         # reference each step); a production loop would keep the pool
         # permanently placed and route append_kv writes through place_perm
 
+    reg = reg if reg is not None else Registry()
+    n_chunks = -(-npps // geom.chunk)      # global clock: chunk steps
+    events = [] if trace_path else None
+    link_hist, shard_hist = [], []
     equiv_ok = True
+    first_bad_step = None
     deferred = partials = 0
     shard_demand = np.zeros(args.shards, np.int64)
-    t_tiered = 0.0
     for t in range(args.gen - 1):
         pos = prompt_len + t
         pool = append_kv(pool, jnp.int32(0), kd[:, pos], vd[:, pos],
                          pt_full, jnp.int32(pos))
         written = pt_full[:, pos // ps]                      # [B]
-        tstate = tiered_invalidate(
-            tstate, jnp.stack([written[s % B] for s in range(n_streams)]
-                              )[:, None])
+        inv_pages = jnp.stack([written[s % B] for s in range(n_streams)])
+        tstate = tiered_invalidate(tstate, inv_pages[:, None])
         cold = {"k": pool["k"][0], "v": pool["v"][0]}
         lengths = jnp.full((n_streams,), pos + 1, jnp.int32)
         q = jax.random.normal(jax.random.PRNGKey(100 + t),
                               (n_streams, 1, hq, dh), jnp.dtype(cfg.dtype))
         # timed window covers only the serving path (sweep + attention);
-        # the flat-pool reference and the bitwise pin check run outside it
-        t0 = time.perf_counter()
-        tstate, info = tiered_sweep(tstate, cold, rows, geom,
-                                    async_datapath=args.async_datapath,
-                                    link_budget=args.link_budget,
-                                    fabric=fabric, mesh=mesh)
-        tiered, resident = tiered_attention(q, tstate, rows, lengths)
-        jax.block_until_ready(tiered)
-        t_tiered += time.perf_counter() - t0
+        # the flat-pool reference, the bitwise pin check and the host-side
+        # event decode all run outside it
+        with reg.span("tiered_sweep") as sp:
+            tstate, info = tiered_sweep(tstate, cold, rows, geom,
+                                        async_datapath=args.async_datapath,
+                                        link_budget=args.link_budget,
+                                        fabric=fabric, mesh=mesh)
+            sp.sync = info
+        with reg.span("tiered_attention") as sp:
+            tiered, resident = tiered_attention(q, tstate, rows, lengths)
+            sp.sync = tiered
         flat = paged_decode_attention(
             q, pool, jnp.int32(0), rows, lengths)
-        equiv_ok &= bool(resident) and bool(
+        step_ok = bool(resident) and bool(
             (np.asarray(tiered) == np.asarray(flat)).all())
+        if not step_ok and first_bad_step is None:
+            first_bad_step = t
+        equiv_ok &= step_ok
         deferred += int(np.asarray(info["deferred"]).sum())
         partials += int(np.asarray(info["partial_hit"]).sum())
         if fabric is not None:
             shard_demand += np.asarray(info["shard_demand_fetches"]).sum(0)
+        if events is not None:
+            step0 = t * n_chunks           # each sweep advances the stream
+            inv_np = np.asarray(inv_pages)  # clock by n_chunks steps
+            events.extend(Event("invalidate", step0, s, page=int(inv_np[s]))
+                          for s in range(n_streams))
+            events.extend(decode_sweep_events(info, step_offset=step0))
+            link_hist.append(np.asarray(info["link_demand_fetches"]))
+            shard_hist.append(np.asarray(info["shard_demand_fetches"]))
 
     per = [tiered_stats(tstate, s) for s in range(n_streams)]
+    t_tiered = (reg.histogram("tiered_sweep").total
+                + reg.histogram("tiered_attention").total)
     out = {
         "tiered_equiv_ok": equiv_ok,
         "tiered_streams": n_streams,
@@ -282,6 +347,24 @@ def _serve_tiered(cfg, state, args, B: int, prompt_len: int,
         out["paged_shards"] = args.shards
         out["paged_placement"] = args.placement
         out["paged_shard_demand"] = shard_demand.tolist()
+    if first_bad_step is not None:
+        out["tiered_first_bad_step"] = first_bad_step
+    spans = reg.summary()["histograms"]
+    out["span_sweep_ms"] = round(spans["tiered_sweep"]["avg"] * 1e3, 3)
+    out["span_attention_ms"] = round(spans["tiered_attention"]["avg"] * 1e3, 3)
+    if events is not None:
+        events.extend(summary_events(per))
+        cnts = events_to_counts(events, n_streams)
+        totals_ok = all(cnts[s][k] == per[s][k] for s in range(n_streams)
+                        for k in _PINNED_COUNTERS)
+        counters = {"link_demand_fetches": np.concatenate(link_hist)}
+        if args.shards > 1:
+            counters["shard_demand_fetches"] = np.concatenate(shard_hist)
+        write_chrome_trace(trace_path, events, counters)
+        write_jsonl(trace_path + ".jsonl", events)
+        out["trace_path"] = trace_path
+        out["trace_events"] = len(events)
+        out["trace_totals_ok"] = totals_ok
     return out
 
 

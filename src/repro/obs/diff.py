@@ -1,0 +1,149 @@
+"""Trace differ: name the first divergent event, not "counts mismatch".
+
+The equivalence pins (jitted scan vs lock-step twin, flat vs sharded data
+plane, tiered vs flat attention) used to fail with a per-stream counter
+diff — actionable only by bisection. This module compares two event
+streams (:mod:`repro.obs.trace`) in execution order and reports the first
+``(step, stream, kind)`` cell — and, when both sides carry page-level
+detail, the exact pages — where they part ways (DESIGN.md §8.3).
+
+Granularity rules (one per event-kind class):
+
+* **Demand kinds** (``hit``/``partial``/``miss``/``invalidate``) are
+  compared as multisets of ``(kind, page, pref)`` per ``(step, stream)``
+  — both producers know the demand page.
+* **Aggregate kinds** (``issue``/``land``/``defer``) are compared as
+  totals per ``(step, stream)``; when *both* sides carry page-level
+  entries for the cell (twin vs twin), the page multisets are compared
+  too, so a planted single-page divergence is named by page.
+* **Summary kinds** (``drop``/``evict``) cannot be placed in time by the
+  info-array decoders, so they compare as per-stream run totals.
+
+The walk order is step-ascending, and within a step: ``land``, ``defer``
+(the wait phase), demand kinds, ``issue`` — the execution order of both
+data planes — so "first divergence" means first in machine time, and
+every cell before it is certified equal.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+
+from .trace import AGGREGATE_KINDS, DEMAND_KINDS, SUMMARY_KINDS
+
+#: Within-step comparison order = execution order of one lock step.
+_STEP_KIND_ORDER = ("land", "defer", "hit", "partial", "miss",
+                    "invalidate", "issue")
+
+
+@dataclasses.dataclass(frozen=True)
+class Divergence:
+    """First point where two traces disagree.
+
+    ``step = -1`` marks a run-total (summary-kind) divergence. ``pages``
+    holds ``(only_in_a, only_in_b)`` page multisets when page-level detail
+    exists on both sides, else ``None`` and the counts differ.
+    """
+    step: int
+    stream: int
+    kind: str
+    count_a: int
+    count_b: int
+    pages: tuple | None = None
+
+    def __str__(self):
+        where = (f"step {self.step}, stream {self.stream}"
+                 if self.step >= 0 else f"run total, stream {self.stream}")
+        msg = (f"first divergent event: kind={self.kind!r} at {where} — "
+               f"count {self.count_a} (a) vs {self.count_b} (b)")
+        if self.pages is not None:
+            only_a, only_b = self.pages
+            msg += (f"; pages only in a: {sorted(only_a)}, "
+                    f"only in b: {sorted(only_b)}")
+        return msg
+
+
+def _buckets(events):
+    """Index an event stream for cell-wise comparison.
+
+    Returns ``(cells, summary)``:
+      cells:   ``{(step, stream, kind): (count, page_multiset|None)}`` —
+               the multiset is a Counter of ``(page, pref)`` and is None
+               iff any event of the cell is aggregate (``page == -1``).
+      summary: ``{(stream, kind): count}`` for summary kinds.
+    """
+    cells: dict = {}
+    summary: dict = {}
+    for e in events:
+        if e.kind in SUMMARY_KINDS:
+            summary[(e.stream, e.kind)] = (
+                summary.get((e.stream, e.kind), 0) + e.count)
+            continue
+        key = (e.step, e.stream, e.kind)
+        count, pages = cells.get(key, (0, Counter()))
+        count += e.count
+        if pages is not None and e.page >= 0:
+            pages[(e.page, e.pref)] += e.count
+        else:
+            pages = None                 # aggregate entry: counts only
+        cells[key] = (count, pages)
+    return cells, summary
+
+
+def first_divergence(events_a, events_b) -> Divergence | None:
+    """First ``(step, stream, kind)`` cell where the two traces disagree.
+
+    Returns ``None`` when the traces are equivalent at the comparison
+    granularity of each kind class (see module docstring).
+    """
+    cells_a, sum_a = _buckets(events_a)
+    cells_b, sum_b = _buckets(events_b)
+
+    kind_rank = {k: i for i, k in enumerate(_STEP_KIND_ORDER)}
+    keys = sorted(set(cells_a) | set(cells_b),
+                  key=lambda k: (k[0], kind_rank.get(k[2], 99), k[1]))
+    for key in keys:
+        step, stream, kind = key
+        count_a, pages_a = cells_a.get(key, (0, Counter()))
+        count_b, pages_b = cells_b.get(key, (0, Counter()))
+        page_level = pages_a is not None and pages_b is not None
+        if count_a != count_b or (page_level and pages_a != pages_b):
+            pages = None
+            if page_level:
+                pages = (tuple((pages_a - pages_b).elements()),
+                         tuple((pages_b - pages_a).elements()))
+            return Divergence(step, stream, kind, count_a, count_b, pages)
+
+    for key in sorted(set(sum_a) | set(sum_b)):
+        stream, kind = key
+        a, b = sum_a.get(key, 0), sum_b.get(key, 0)
+        if a != b:
+            return Divergence(-1, stream, kind, a, b)
+    return None
+
+
+def diff_report(events_a, events_b, label_a: str = "a",
+                label_b: str = "b") -> str:
+    """Human-readable one-liner: the first divergence, or equivalence."""
+    d = first_divergence(events_a, events_b)
+    if d is None:
+        return (f"traces equivalent ({len(list(events_a))} vs "
+                f"{len(list(events_b))} events)")
+    return str(d).replace("(a)", f"({label_a})").replace("(b)", f"({label_b})")
+
+
+def assert_traces_equal(events_a, events_b, label_a: str = "jitted",
+                        label_b: str = "twin", context: str = "") -> None:
+    """Raise ``AssertionError`` naming the first divergent event.
+
+    The pin-test hook: call it *instead of* (or before) a bare counter
+    compare so a mismatch fails with the exact ``(step, stream, page)``
+    to look at rather than two counter dicts.
+    """
+    d = first_divergence(events_a, events_b)
+    if d is not None:
+        prefix = f"{context}: " if context else ""
+        raise AssertionError(
+            prefix + str(d).replace("(a)", f"({label_a})")
+                           .replace("(b)", f"({label_b})"))

@@ -1,0 +1,124 @@
+"""Trace export: Chrome trace-event (Perfetto-loadable) JSON and JSONL.
+
+Two sinks for one event stream (:mod:`repro.obs.trace`):
+
+* :func:`to_chrome_trace` / :func:`write_chrome_trace` — the Chrome
+  trace-event format (the ``{"traceEvents": [...]}`` JSON object) that
+  ``chrome://tracing`` and https://ui.perfetto.dev load directly. Each
+  stream gets its own track (thread) of complete events laid out on the
+  lock-step clock (one step = ``step_us`` µs of track time), and the
+  shared link / per-NIC demand traffic becomes counter tracks.
+* :func:`write_jsonl` / :func:`read_jsonl` — one event per line, for
+  machine diffing (``obs/diff.py`` on two saved runs) and ad-hoc grep.
+
+Both are lossless over the :class:`repro.obs.trace.Event` fields.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from .trace import Event
+
+#: Track-time layout of one lock step: wait/land phase, then demand
+#: service, then issue. Fractions of ``step_us``.
+_PHASE = {"land": 0.0, "defer": 0.05, "hit": 0.3, "partial": 0.3,
+          "miss": 0.3, "invalidate": 0.55, "issue": 0.7,
+          "drop": 0.7, "evict": 0.9}
+_DUR = {"land": 0.25, "defer": 0.2, "hit": 0.2, "partial": 0.25,
+        "miss": 0.35, "invalidate": 0.1, "issue": 0.25,
+        "drop": 0.1, "evict": 0.1}
+
+_STREAM_PID = 0
+_LINK_PID = 1
+
+
+def _event_name(e: Event) -> str:
+    if e.page >= 0:
+        return f"{e.kind} p{e.page}"
+    if e.count > 1:
+        return f"{e.kind} x{e.count}"
+    return e.kind
+
+
+def to_chrome_trace(events, counters: dict | None = None,
+                    step_us: float = 1000.0) -> dict:
+    """Build the Chrome trace-event JSON object for an event stream.
+
+    Args:
+      events: iterable of :class:`repro.obs.trace.Event`.
+      counters: optional ``{name: array}`` of per-step link totals —
+        ``[T]`` arrays become one counter track, ``[T, G]`` arrays one
+        multi-series counter track (series per NIC/shard). Step ``t``
+        samples at ``t * step_us``.
+      step_us: track microseconds per lock step.
+
+    Returns the ``{"traceEvents": [...], ...}`` dict; ``json.dump`` it (or
+    use :func:`write_chrome_trace`) and load in Perfetto.
+    """
+    events = list(events)
+    max_step = max((e.step for e in events), default=0)
+    out = [
+        {"ph": "M", "pid": _STREAM_PID, "name": "process_name",
+         "args": {"name": "page streams"}},
+        {"ph": "M", "pid": _LINK_PID, "name": "process_name",
+         "args": {"name": "fabric link"}},
+    ]
+    for s in sorted({e.stream for e in events}):
+        out.append({"ph": "M", "pid": _STREAM_PID, "tid": s,
+                    "name": "thread_name", "args": {"name": f"stream {s}"}})
+
+    for e in events:
+        step = e.step if e.step >= 0 else max_step + 1   # summaries at end
+        ts = step * step_us + _PHASE[e.kind] * step_us
+        args = {"page": e.page, "shard": e.shard, "seq": e.seq,
+                "count": e.count, "pref": e.pref, "step": e.step}
+        if e.step < 0:
+            out.append({"ph": "i", "s": "t", "pid": _STREAM_PID,
+                        "tid": e.stream, "ts": ts, "name": _event_name(e),
+                        "cat": e.kind, "args": args})
+        else:
+            out.append({"ph": "X", "pid": _STREAM_PID, "tid": e.stream,
+                        "ts": ts, "dur": _DUR[e.kind] * step_us,
+                        "name": _event_name(e), "cat": e.kind, "args": args})
+
+    for name, arr in (counters or {}).items():
+        arr = np.asarray(arr)
+        for t in range(arr.shape[0]):
+            if arr.ndim == 1:
+                series = {"value": int(arr[t])}
+            else:
+                series = {f"nic{g}": int(arr[t, g])
+                          for g in range(arr.shape[1])}
+            out.append({"ph": "C", "pid": _LINK_PID, "name": name,
+                        "ts": t * step_us, "args": series})
+
+    return {"traceEvents": out, "displayTimeUnit": "ms"}
+
+
+def write_chrome_trace(path: str, events, counters: dict | None = None,
+                       step_us: float = 1000.0) -> None:
+    """:func:`to_chrome_trace` straight to ``path``."""
+    with open(path, "w") as f:
+        json.dump(to_chrome_trace(events, counters, step_us), f)
+
+
+def write_jsonl(path: str, events) -> None:
+    """One ``Event`` per line (its dataclass fields as a JSON object)."""
+    with open(path, "w") as f:
+        for e in events:
+            f.write(json.dumps(dataclasses.asdict(e)) + "\n")
+
+
+def read_jsonl(path: str) -> list[Event]:
+    """Inverse of :func:`write_jsonl`."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(Event(**json.loads(line)))
+    return out

@@ -1,0 +1,149 @@
+"""Unified counter/histogram registry + the single percentile ladder.
+
+Before this module existed the repo had two independent percentile ladders
+(``repro.core.metrics`` for the trace simulator, ``repro.fabric.metrics``
+for the event engine) and every driver hand-rolled its own
+``time.perf_counter()`` bracketing. This module is the one implementation
+all of them now delegate to (DESIGN.md §8.4):
+
+* :func:`percentile_ladder` — p50–p99.9 + avg/max over a sample, with an
+  explicit ``n`` field and ``NaN`` (not 0.0) for the empty sample, so "no
+  data" can never masquerade as "zero latency" in a downstream report.
+* :class:`Registry` — named monotonically increasing counters and
+  latency/size histograms; one registry per run, summarized once at the
+  end. ``launch/serve.py`` builds its per-request TTFT + token-latency
+  report on it.
+* :meth:`Registry.span` — wall-clock span timer around device work. JAX
+  dispatch is async, so a naive ``perf_counter`` pair times the *enqueue*;
+  the span handle's ``sync`` hook blocks on the result inside the timed
+  window (``jax.block_until_ready``) so the recorded duration covers the
+  device work the caller actually waited for.
+
+Everything here is host-side Python — nothing in this module is jitted or
+traced, and nothing touches the hot data path.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+import time
+
+import numpy as np
+
+DEFAULT_QS = (50.0, 90.0, 99.0, 99.9)
+
+
+def percentile_ladder(samples, qs=DEFAULT_QS) -> dict:
+    """``{p50, ..., avg, max, n}`` of a sample; NaNs when ``n == 0``.
+
+    The empty-sample contract is deliberate: an all-zeros ladder is
+    indistinguishable from a genuinely zero-latency run, so empty samples
+    report ``NaN`` for every statistic plus ``n=0`` — callers that want to
+    render something print the ``n`` field or skip the row.
+    """
+    keys = [f"p{q:g}" for q in qs]
+    if samples is None or len(samples) == 0:
+        return {k: math.nan for k in keys} | {"avg": math.nan,
+                                              "max": math.nan, "n": 0}
+    arr = np.asarray(samples, dtype=np.float64)
+    out = {k: float(np.percentile(arr, q)) for k, q in zip(keys, qs)}
+    out["avg"] = float(arr.mean())
+    out["max"] = float(arr.max())
+    out["n"] = int(arr.size)
+    return out
+
+
+class Counter:
+    """A named monotone counter."""
+
+    __slots__ = ("name", "value")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.value = 0
+
+    def add(self, n: int = 1) -> None:
+        self.value += int(n)
+
+
+class Histogram:
+    """A named sample accumulator summarized as a percentile ladder."""
+
+    __slots__ = ("name", "samples")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.samples: list[float] = []
+
+    def observe(self, v: float) -> None:
+        self.samples.append(float(v))
+
+    def extend(self, vs) -> None:
+        self.samples.extend(float(v) for v in vs)
+
+    @property
+    def total(self) -> float:
+        return float(sum(self.samples))
+
+    def ladder(self, qs=DEFAULT_QS) -> dict:
+        return percentile_ladder(self.samples, qs)
+
+
+class _SpanHandle:
+    """Mutable box a :meth:`Registry.span` body parks its device result in.
+
+    Setting ``sync`` to a jax array/pytree makes the span block on it
+    before stopping the clock, so the measured wall time includes the
+    device work rather than just its dispatch.
+    """
+
+    __slots__ = ("sync",)
+
+    def __init__(self):
+        self.sync = None
+
+
+class Registry:
+    """Named counters + histograms for one run; summarized at the end."""
+
+    def __init__(self):
+        self._counters: dict[str, Counter] = {}
+        self._hists: dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        if name not in self._counters:
+            self._counters[name] = Counter(name)
+        return self._counters[name]
+
+    def histogram(self, name: str) -> Histogram:
+        if name not in self._hists:
+            self._hists[name] = Histogram(name)
+        return self._hists[name]
+
+    @contextlib.contextmanager
+    def span(self, name: str):
+        """Time a block into histogram ``name`` (seconds), device-sync'd.
+
+        >>> with reg.span("attention") as sp:
+        ...     out = attention(...)
+        ...     sp.sync = out          # block on the device result
+        """
+        import jax
+
+        handle = _SpanHandle()
+        t0 = time.perf_counter()
+        try:
+            yield handle
+        finally:
+            if handle.sync is not None:
+                jax.block_until_ready(handle.sync)
+            self.histogram(name).observe(time.perf_counter() - t0)
+
+    def summary(self, qs=DEFAULT_QS) -> dict:
+        """``{"counters": {name: int}, "histograms": {name: ladder}}``."""
+        return {
+            "counters": {n: c.value for n, c in sorted(self._counters.items())},
+            "histograms": {n: h.ladder(qs)
+                           for n, h in sorted(self._hists.items())},
+        }

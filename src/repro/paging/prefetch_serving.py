@@ -150,11 +150,15 @@ def stream_step(state: dict, pool_data: jax.Array, page: jax.Array,
     meta, hot, slots, info = pool_access(meta, state["hot"], pool_data,
                                          pages, is_pf, val)
     data = jax.tree.map(lambda h: h[jnp.maximum(slots[0], 0)], hot)
+    issued = jnp.sum(info["fetched"][1:].astype(jnp.int32))
     return ({**state, "leap": new_leap, "pool_meta": meta, "hot": hot},
             data, {"hit": info["hit"][0], "pref_hit": info["prefetched_hit"][0],
                    "partial_hit": jnp.zeros((), bool),
                    "fetched": info["fetched"][0],
-                   "issued": jnp.sum(info["fetched"][1:].astype(jnp.int32)),
+                   "issued": issued,
+                   # sync path: every candidate rides the blocking batch, so
+                   # each issue lands within its own step
+                   "landed": issued,
                    "deferred": jnp.zeros((), jnp.int32)})
 
 
@@ -205,6 +209,7 @@ def stream_step_async(state: dict, pool_data: jax.Array, page: jax.Array,
                    "partial_hit": winfo["partial_hit"],
                    "fetched": winfo["fetched"],
                    "issued": meta["n_prefetch_issued"] - issued0,
+                   "landed": jnp.sum(winfo["landed"].astype(jnp.int32)),
                    "deferred": meta["n_deferred"] - deferred0})
 
 
@@ -230,9 +235,17 @@ def stream_consume(pool_data: jax.Array, schedule: jax.Array,
     payloads), ``info`` has bool ``[T]`` arrays ``hit``,
     ``pref_hit``, ``partial_hit`` (all-False on the sync path) and
     ``fetched`` (demand moved a page over the link), plus int32 ``[T]``
-    arrays ``issued`` (candidates fetched/enqueued per step) and
-    ``deferred`` (prefetches completing past their deadline — only ever
-    non-zero under the budgeted multi-stream path).
+    arrays ``issued`` (candidates fetched/enqueued per step), ``landed``
+    (in-flight prefetches copied into the hot buffer this step; equals
+    ``issued`` on the sync path where the batch blocks) and ``deferred``
+    (prefetches completing past their deadline — only ever non-zero under
+    the budgeted multi-stream path).
+
+    The per-step info arrays are the wire format of the page-lifecycle
+    event log: :func:`repro.obs.trace.decode_stream_events` expands them
+    (plus the schedule and final counters) into ``issue``/``land``/``hit``/
+    ``partial``/``miss``/… events host-side, with no change to this jitted
+    path (DESIGN.md §8).
     """
     if state is None:
         state = (stream_init(geom, pool_data.dtype)
@@ -244,13 +257,14 @@ def stream_consume(pool_data: jax.Array, schedule: jax.Array,
         st, data, info = step_fn(st, pool_data, page, geom)
         return st, (_payload_checksum(data), info["hit"], info["pref_hit"],
                     info["partial_hit"], info["fetched"], info["issued"],
-                    info["deferred"])
+                    info["landed"], info["deferred"])
 
-    state, (sums, hits, pref_hits, partials, fetched, issued, deferred) = \
-        jax.lax.scan(body, state, schedule)
+    state, (sums, hits, pref_hits, partials, fetched, issued, landed,
+            deferred) = jax.lax.scan(body, state, schedule)
     return state, sums, {"hit": hits, "pref_hit": pref_hits,
                          "partial_hit": partials, "fetched": fetched,
-                         "issued": issued, "deferred": deferred}
+                         "issued": issued, "landed": landed,
+                         "deferred": deferred}
 
 
 def multi_stream_consume(pool_data: jax.Array, schedules: jax.Array,

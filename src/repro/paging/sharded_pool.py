@@ -304,6 +304,7 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
         ring["now"] = now + 1
         issued_s = meta["n_prefetch_issued"] - issued0
         deferred_s = meta["n_deferred"] - deferred0
+        landed_s = jnp.sum(winfo["landed"].astype(jnp.int32), axis=1)
         # --- data plane: replay the copy plan (landings, then demand) -------
         src = jnp.concatenate(
             [winfo["landed_pages"],
@@ -320,16 +321,17 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
         state = {"leap": new_leap, "pool_meta": meta, "hot": hot,
                  "ring": ring}
         outs = (sums, winfo["hit"], winfo["prefetched_hit"],
-                winfo["partial_hit"], winfo["fetched"], issued_s, deferred_s,
-                d_t, jnp.sum(issued_s), jnp.sum(deferred_s))
+                winfo["partial_hit"], winfo["fetched"], issued_s, landed_s,
+                deferred_s, d_t, jnp.sum(issued_s), jnp.sum(deferred_s))
         return (state, d_t), outs
 
     xs = (jnp.arange(T, dtype=jnp.int32), schedules.T)
-    (state, _), (sums, hit, pref, part, fetched, issued, deferred,
+    (state, _), (sums, hit, pref, part, fetched, issued, landed, deferred,
                  shard_d, link_i, link_def) = jax.lax.scan(
         body, (state0, jnp.zeros((G,), jnp.int32)), xs)
     info = {"hit": hit.T, "pref_hit": pref.T, "partial_hit": part.T,
-            "fetched": fetched.T, "issued": issued.T, "deferred": deferred.T,
+            "fetched": fetched.T, "issued": issued.T, "landed": landed.T,
+            "deferred": deferred.T,
             "shard_demand_fetches": shard_d,           # [T, G]
             "link_demand_fetches": shard_d.sum(axis=1),
             "link_prefetch_issued": link_i, "link_deferred": link_def}

@@ -314,6 +314,7 @@ def _sweep_fn(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
                  jnp.where(info["fetched"], pages, NO_PAGE)], axis=1)
             dst = jnp.concatenate([info["landed_slots"], slots], axis=1)
             mask = jnp.concatenate([info["landed"], info["fetched"]], axis=1)
+            landed = jnp.sum(info["landed"].astype(jnp.int32), axis=1)
         else:
             leap, meta, slots, info, req, issued = jax.vmap(
                 functools.partial(_chunk_sync, geom=geom))(leap, meta, pages)
@@ -323,6 +324,7 @@ def _sweep_fn(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
                     "partial_hit": jnp.zeros((S, C), bool),
                     "fetched": info["fetched"][:, :C]}
             deferred = jnp.zeros((S,), jnp.int32)
+            landed = issued      # sync: candidates land in their own chunk step
         hot = _apply_copies(hot, cold, src, dst, mask,
                             asynchronous=async_datapath,
                             use_kernel=geom.use_kernel,
@@ -335,15 +337,16 @@ def _sweep_fn(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
         d_t_shard = jnp.zeros((G,), jnp.int32).at[homes_d.reshape(-1)].add(
             info["fetched"].reshape(-1).astype(jnp.int32), mode="drop")
         outs = (cnt(info["hit"]), cnt(info["prefetched_hit"]),
-                cnt(info["partial_hit"]), d_t, issued, deferred,
+                cnt(info["partial_hit"]), d_t, issued, landed, deferred,
                 jnp.sum(d_t), d_t_shard)
         return (state, d_t_shard), outs
 
-    (state, _), (hit, pref, part, fetched, issued, deferred, link_d,
+    (state, _), (hit, pref, part, fetched, issued, landed, deferred, link_d,
                  shard_d) = jax.lax.scan(
         body, (state, jnp.zeros((G,), jnp.int32)), sched)
     info = {"hit": hit.T, "pref_hit": pref.T, "partial_hit": part.T,
-            "fetched": fetched.T, "issued": issued.T, "deferred": deferred.T,
+            "fetched": fetched.T, "issued": issued.T, "landed": landed.T,
+            "deferred": deferred.T,
             "link_demand_fetches": link_d,
             "shard_demand_fetches": shard_d}                  # [n_chunks, G]
     return state, info
@@ -401,8 +404,11 @@ def tiered_sweep(state: dict, cold: dict, page_rows: jax.Array,
 
     Returns ``(state, info)`` with per-stream ``int32[S, n_chunks]`` counts
     ``hit`` / ``pref_hit`` / ``partial_hit`` / ``fetched`` / ``issued`` /
-    ``deferred`` plus the shared ``link_demand_fetches [n_chunks]`` and
-    per-NIC ``shard_demand_fetches [n_chunks, n_shards]``. After
+    ``landed`` / ``deferred`` plus the shared ``link_demand_fetches
+    [n_chunks]`` and per-NIC ``shard_demand_fetches [n_chunks, n_shards]``
+    (the count-granularity wire format
+    :func:`repro.obs.trace.decode_sweep_events` expands into the
+    page-lifecycle event log, DESIGN.md §8). After
     the sweep every valid page of ``page_rows`` is hot-resident, so
     :func:`tiered_attention` can serve decode attention from hot slots.
     """

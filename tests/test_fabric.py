@@ -223,9 +223,17 @@ class TestMetrics:
 
     def test_percentile_summary_keys(self):
         s = percentile_summary(list(range(1000)))
-        assert set(s) == {"p50", "p90", "p99", "p99.9", "avg", "max"}
+        assert set(s) == {"p50", "p90", "p99", "p99.9", "avg", "max", "n"}
         assert s["p50"] <= s["p90"] <= s["p99"] <= s["p99.9"] <= s["max"]
-        assert percentile_summary([])["p99"] == 0.0
+        assert s["n"] == 1000
+
+    def test_percentile_summary_empty_is_nan_not_zero(self):
+        """No samples must be distinguishable from zero-latency samples."""
+        import math
+        empty = percentile_summary([])
+        assert empty["n"] == 0
+        for k in ("p50", "p90", "p99", "p99.9", "avg", "max"):
+            assert math.isnan(empty[k]), k
 
 
 # -- multi-node fabric: per-tenant home nodes (DESIGN.md §7 mirror) -----------

@@ -21,6 +21,8 @@ import numpy as np
 import pytest
 
 from repro.fabric.linkstep import run_linkstep
+from repro.obs import (TraceRecorder, assert_traces_equal,
+                       decode_stream_events)
 from repro.paging.prefetch_serving import (PrefetchedStream,
                                            multi_stream_consume,
                                            stream_consume, stream_stats_at)
@@ -106,17 +108,24 @@ class TestFabricCrossValidation:
     @pytest.mark.parametrize("budget", [None, 1, 2, 3, 6, 64])
     def test_counts_match_linkstep(self, budget):
         scheds = _scheds(80)
-        st, _, _ = multi_stream_consume(
+        st, _, info = multi_stream_consume(
             POOL, scheds, GEOM, async_datapath=True,
             link_budget=INF if budget is None else budget)
+        rec = TraceRecorder()
         rep = run_linkstep(np.asarray(scheds), N_PAGES, budget,
                            ring_size=GEOM.ring_size,
                            arrival_delay=GEOM.arrival_delay,
                            pw_max=GEOM.pw_max, h_size=GEOM.h_size,
-                           n_split=GEOM.n_split)
+                           n_split=GEOM.n_split, recorder=rec)
         for i in range(scheds.shape[0]):
             j = _per_stream(st, i)
             r = rep.stream_summary(i)
+            if {k: j[k] for k in r} != r:
+                # §8: localize the first divergent event before failing on
+                # end-of-run totals — names the exact (step, stream, page).
+                assert_traces_equal(
+                    decode_stream_events(scheds, info, n_pages=N_PAGES),
+                    rec.events, context=f"stream {i}, budget {budget}")
             assert {k: j[k] for k in r} == r, f"stream {i}, budget {budget}"
 
     def test_crossval_with_longer_arrival_delay(self):

@@ -35,6 +35,8 @@ import pytest
 from repro.core.pool import (link_grants, link_grants_sharded, page_home,
                              page_local, ring_init)
 from repro.fabric.shardstep import home_of, run_shardstep
+from repro.obs import (TraceRecorder, assert_traces_equal,
+                       decode_stream_events)
 from repro.paging.prefetch_serving import (PrefetchedStream,
                                            multi_stream_consume,
                                            stream_consume, stream_stats_at)
@@ -165,13 +167,23 @@ class TestShardstepCrossValidation:
         # served bytes stay correct whatever the topology
         np.testing.assert_allclose(np.asarray(sums),
                                    np.asarray(POOL[scheds].sum(-1)))
+        rec = TraceRecorder()
         rep = run_shardstep(np.asarray(scheds), N_PAGES, n_shards, placement,
                             budget, ring_size=GEOM.ring_size,
                             near_delay=1, far_delay=2, pw_max=GEOM.pw_max,
-                            h_size=GEOM.h_size, n_split=GEOM.n_split)
+                            h_size=GEOM.h_size, n_split=GEOM.n_split,
+                            recorder=rec)
         for i in range(scheds.shape[0]):
             j = stream_stats_at(st, i)
             r = rep.stream_summary(i)
+            if {k: j[k] for k in r} != r:
+                # §8: name the first divergent event before failing on totals
+                assert_traces_equal(
+                    decode_stream_events(scheds, info, n_pages=N_PAGES,
+                                         n_shards=n_shards,
+                                         placement=placement),
+                    rec.events,
+                    context=f"{placement}, G={n_shards}, budget {budget}")
             assert {k: j[k] for k in r} == r, \
                 f"stream {i}, {placement}, G={n_shards}, budget {budget}"
 

@@ -240,3 +240,31 @@ class TestBudgetedTieredSweep:
         st2, info2 = tiered_sweep(st2, cold, pt, geom, async_datapath=True,
                                   link_budget=10_000)
         assert int(info2["deferred"].sum()) == 0
+
+
+class TestTraceDiff:
+    """§8 wiring: the sweep's decoded event log pins its counters, and two
+    identical sweeps decode to identical traces — any nondeterminism is
+    localized by ``first_divergence`` to an exact (chunk step, stream)."""
+
+    def test_sweep_trace_pins_counters_and_is_deterministic(self):
+        from repro.obs import (assert_traces_equal, decode_sweep_events,
+                               events_to_counts, summary_events)
+        cold = _cold()
+        pt = linear_page_table(B, NPPS)
+        geom = _geom(tiered_min_slots(NPPS, _geom(1)))
+        traces = []
+        for _ in range(2):
+            st = tiered_init(geom, B, jnp.float32)
+            st, info = tiered_sweep(st, cold, pt, geom, async_datapath=True)
+            ev = decode_sweep_events(info)
+            stats = [tiered_stats(st, i) for i in range(B)]
+            counts = events_to_counts(ev + summary_events(stats), B)
+            for i, s in enumerate(stats):
+                for k in ("hits", "misses", "partial_hits", "prefetch_hits",
+                          "prefetch_issued", "deferred", "ring_drops",
+                          "pollution"):
+                    assert counts[i][k] == s[k], (i, k)
+            traces.append(ev)
+        assert_traces_equal(traces[0], traces[1], "run A", "run B",
+                            context="tiered sweep determinism")
