@@ -16,7 +16,7 @@ import os
 import sys
 import time
 
-from . import (datapath_overlap, fabric_scale, fig2_microbenchmark,
+from . import (chaos, datapath_overlap, fabric_scale, fig2_microbenchmark,
                fig3_patterns, fig8_slow_storage, fig9_10_prefetchers,
                fig11_apps, fig12_cache_size, fig13_multiapp, jax_stream,
                link_contention, roofline, sharded_pool, tiered_kv)
@@ -35,6 +35,7 @@ SUITES = {
     "datapath_overlap": datapath_overlap.run,
     "link_contention": link_contention.run,
     "sharded_pool": sharded_pool.run,
+    "chaos": chaos.run,
     "tiered_kv": tiered_kv.run,
     "roofline": roofline.run,
 }

@@ -158,11 +158,16 @@ def ring_init(capacity: int) -> dict:
     (the depth of the paper's async RDMA queue). Fields:
 
     * ``page int32[capacity]``: in-flight page ids, ``-1`` = empty entry.
-    * ``deadline int32[capacity]``: step-clock arrival time of each entry;
-      :func:`pool_wait` lands entries with ``deadline <= now``. Under a
-      shared link budget the deadline is the *earliest possible* arrival:
-      budget-gated entries stay in the ring past it and count
-      ``n_deferred`` when they finally complete (DESIGN.md §5).
+    * ``ready int32[capacity]``: step-clock *physical* arrival time — when
+      the bytes are actually on the wire's far end. :func:`pool_wait` lands
+      entries with ``ready <= now``. Under a shared link budget the ready
+      time is the earliest possible arrival: budget-gated entries stay in
+      the ring past it (DESIGN.md §5).
+    * ``deadline int32[capacity]``: the *expected* arrival used purely for
+      classification — entries completing past it count ``n_deferred``.
+      In the clean fabric ``deadline == ready``; under chaos (DESIGN.md §9)
+      the physical delay dilates while the deadline stays at the static
+      expectation (or tracks the EWMA estimate when deadlines adapt).
     * ``seq int32[capacity]``: global issue order of each entry — the
       shared-link arbitration layer lands eligible entries across all
       streams in ascending ``seq`` (FIFO over the link). Plain per-stream
@@ -178,7 +183,9 @@ def ring_init(capacity: int) -> dict:
     """
     return {
         "page": jnp.full((capacity,), NO_PAGE, jnp.int32),
+        "ready": jnp.zeros((capacity,), jnp.int32),
         "deadline": jnp.zeros((capacity,), jnp.int32),
+        "issued_at": jnp.zeros((capacity,), jnp.int32),
         "seq": jnp.zeros((capacity,), jnp.int32),
         "now": jnp.int32(0),
         "n_drops": jnp.int32(0),
@@ -458,7 +465,9 @@ def pool_access(st: dict, hot: jax.Array, pool: jax.Array,
 @functools.partial(jax.jit, static_argnames=("lazy",), donate_argnums=(0, 1))
 def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
                now: jax.Array, delay: jax.Array, lazy: bool = False,
-               seq: jax.Array | None = None) -> tuple[dict, dict]:
+               seq: jax.Array | None = None,
+               true_delay: jax.Array | None = None,
+               quota: jax.Array | None = None) -> tuple[dict, dict]:
     """Issue-phase of the async data path: enqueue prefetch candidates.
 
     Args:
@@ -482,6 +491,18 @@ def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
              shared-link arbitration layer (ascending across every issue on
              the link; see DESIGN.md §5). ``None`` stamps zeros — fine for
              per-stream callers that never budget-gate landings.
+      true_delay: optional ``int32`` scalar or ``int32[K]`` — the *physical*
+             steps until arrival when it differs from the expectation
+             (chaos slowdown, DESIGN.md §9): entries get
+             ``ready = now + true_delay`` while ``deadline = now + delay``
+             stays the classification expectation. ``None`` (the clean
+             fabric) means ``ready == deadline``. Clamped to >= 1 like
+             ``delay``.
+      quota: optional ``int32`` scalar — remaining elastic-grant headroom
+             for this stream (chaos grants axis). Each take consumes one
+             unit; candidates beyond the quota are dropped and counted in
+             ``ring["n_drops"]`` exactly like a full ring. ``None`` = no
+             grant cap.
 
     A candidate is enqueued only if it is in range, not hot-resident, and not
     already in flight (``n_prefetch_issued`` counts exactly the enqueued
@@ -497,11 +518,16 @@ def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
     K = pages.shape[0]
     n_pages = st["page_slot"].shape[0]
     delay = jnp.broadcast_to(jnp.maximum(delay, 1), (K,))
+    if true_delay is None:
+        true_delay = delay
+    else:
+        true_delay = jnp.broadcast_to(jnp.maximum(true_delay, 1), (K,))
     if seq is None:
         seq = jnp.zeros((K,), jnp.int32)
+    q0 = jnp.int32(1 << 30) if quota is None else jnp.asarray(quota, jnp.int32)
 
     def body(k, carry):
-        st, ring = carry
+        st, ring, q = carry
         page = pages[k]
         in_range = (page >= 0) & (page < n_pages)
         p_safe = jnp.clip(page, 0, n_pages - 1)
@@ -509,11 +535,13 @@ def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
         in_flight = jnp.any((ring["page"] == page) & (ring["page"] >= 0))
         want = valid[k] & in_range & ~resident & ~in_flight
         free_mask = ring["page"] < 0
-        have_space = jnp.any(free_mask)
+        have_space = jnp.any(free_mask) & (q > 0)
         pos = jnp.argmax(free_mask)
         ring_new = dict(ring)
         ring_new["page"] = ring["page"].at[pos].set(p_safe)
+        ring_new["ready"] = ring["ready"].at[pos].set(now + true_delay[k])
         ring_new["deadline"] = ring["deadline"].at[pos].set(now + delay[k])
+        ring_new["issued_at"] = ring["issued_at"].at[pos].set(now)
         ring_new["seq"] = ring["seq"].at[pos].set(seq[k])
         take = want & have_space
         ring = _tree_where(take, ring_new, ring)
@@ -521,32 +549,36 @@ def pool_issue(st: dict, ring: dict, pages: jax.Array, valid: jax.Array,
         ring = dict(ring)
         st["n_prefetch_issued"] = st["n_prefetch_issued"] + take.astype(jnp.int32)
         ring["n_drops"] = ring["n_drops"] + (want & ~have_space).astype(jnp.int32)
-        return st, ring
+        return st, ring, q - take.astype(jnp.int32)
 
-    return jax.lax.fori_loop(0, K, body, (st, ring))
+    st, ring, _ = jax.lax.fori_loop(0, K, body, (st, ring, q0))
+    return st, ring
 
 
 def _land_due(st: dict, ring: dict, hot, pool, now: jax.Array, lazy: bool,
               land_ok: jax.Array | None):
     """Phase 1 of the wait path: land every due (and granted) ring entry.
 
-    Returns ``(st, ring, hot, landed_pages, landed_slots)`` where the two
-    ``int32[capacity]`` arrays record which page landed into which hot slot
-    this call (``-1`` = no landing at that ring position) — the landing half
-    of the copy plan for metadata-only callers.
+    Returns ``(st, ring, hot, landed_pages, landed_slots, landed_issued)``
+    where the three ``int32[capacity]`` arrays record which page landed into
+    which hot slot this call and when that entry was issued (``-1`` = no
+    landing at that ring position) — the landing half of the copy plan for
+    metadata-only callers, plus the raw observations the chaos-deadline
+    estimator consumes (``now - issued_at`` = realized delay, DESIGN.md §9).
     """
     R = ring["page"].shape[0]
     landed_pages = jnp.full((R,), NO_PAGE, jnp.int32)
     landed_slots = jnp.full((R,), NO_SLOT, jnp.int32)
+    landed_issued = jnp.full((R,), -1, jnp.int32)
     if R == 0:
-        return st, ring, hot, landed_pages, landed_slots
+        return st, ring, hot, landed_pages, landed_slots, landed_issued
     if land_ok is None:
         land_ok = jnp.ones((R,), bool)
 
     def land(i, carry):
-        st, ring, hot, lp, ls = carry
+        st, ring, hot, lp, ls, li = carry
         p = ring["page"][i]
-        due = (p >= 0) & (ring["deadline"][i] <= now) & land_ok[i]
+        due = (p >= 0) & (ring["ready"][i] <= now) & land_ok[i]
         p_safe = jnp.maximum(p, 0)
         resident = st["page_slot"][p_safe] >= 0
         commit = due & ~resident
@@ -559,19 +591,22 @@ def _land_due(st: dict, ring: dict, hot, pool, now: jax.Array, lazy: bool,
         hot = _payload_where(commit, hot_c, hot)
         lp = lp.at[i].set(jnp.where(commit, p_safe, NO_PAGE))
         ls = ls.at[i].set(jnp.where(commit, slot, NO_SLOT))
+        li = li.at[i].set(jnp.where(commit, ring["issued_at"][i], -1))
         # A due entry whose page somehow became resident is dropped and
         # counted as pollution so the issue decomposition still sums.
         st = dict(st)
         st["n_pollution"] = st["n_pollution"] + (due & resident).astype(jnp.int32)
-        # Landing past the deadline = the shared-link budget deferred it.
+        # Landing past the deadline = deferred (link budget or a straggling
+        # shard beat the expectation; classification only, DESIGN.md §5/§9).
         st["n_deferred"] = (st["n_deferred"]
                             + (due & (ring["deadline"][i] < now)).astype(jnp.int32))
         ring = dict(ring)
         ring["page"] = ring["page"].at[i].set(jnp.where(due, NO_PAGE, p))
-        return st, ring, hot, lp, ls
+        return st, ring, hot, lp, ls, li
 
     return jax.lax.fori_loop(0, R, land,
-                             (st, ring, hot, landed_pages, landed_slots))
+                             (st, ring, hot, landed_pages, landed_slots,
+                              landed_issued))
 
 
 def _serve_demand(st: dict, ring: dict, hot, pool, page: jax.Array,
@@ -677,11 +712,12 @@ def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
 
     Two phases, mirroring the swap-in path over an async queue:
 
-    1. **Land** every ring entry with ``deadline <= now`` (and a landing
+    1. **Land** every ring entry with ``ready <= now`` (and a landing
        grant): allocate a slot (free stack, else eager FIFO / lazy LRU
        eviction), copy the page in, and track it as an unconsumed prefetch —
        this models DMA that completed during the *previous* step's compute.
-       An entry landing at ``now > deadline`` was budget-deferred and counts
+       An entry landing at ``now > deadline`` completed past its expected
+       arrival (budget-deferred, or a straggling shard) and counts
        ``n_deferred``.
     2. **Serve** the demand. Hot-resident -> hit (a first hit on a
        prefetched slot counts ``n_prefetch_hits`` and eager-frees it).
@@ -703,12 +739,12 @@ def pool_wait(st: dict, ring: dict, hot: jax.Array, pool: jax.Array,
     next pool call. ``hot``/``pool`` may be payload pytrees or ``None``
     (metadata-only) as in :func:`pool_access`.
     """
-    st, ring, hot, landed_pages, landed_slots = _land_due(
+    st, ring, hot, landed_pages, landed_slots, landed_issued = _land_due(
         st, ring, hot, pool, now, lazy, land_ok)
     st, ring, hot, out_slot, data, info = _serve_demand(
         st, ring, hot, pool, page, now, lazy)
     info = dict(info, landed=landed_pages >= 0, landed_pages=landed_pages,
-                landed_slots=landed_slots)
+                landed_slots=landed_slots, landed_issued=landed_issued)
     return st, ring, hot, out_slot, data, info
 
 
@@ -738,7 +774,7 @@ def pool_wait_batch(st: dict, ring: dict, hot, pool, pages: jax.Array,
     :func:`pool_access`); violating geometries raise at trace time.
     """
     _check_batch_geometry(st, pages.shape[0], lazy, "pool_wait_batch")
-    st, ring, hot, landed_pages, landed_slots = _land_due(
+    st, ring, hot, landed_pages, landed_slots, landed_issued = _land_due(
         st, ring, hot, pool, now, lazy, land_ok)
 
     def body(carry, d):
@@ -753,7 +789,8 @@ def pool_wait_batch(st: dict, ring: dict, hot, pool, pages: jax.Array,
         body, (st, ring, hot), jnp.arange(pages.shape[0]))
     info = {"hit": hit, "prefetched_hit": pref, "partial_hit": part,
             "fetched": fetched, "landed": landed_pages >= 0,
-            "landed_pages": landed_pages, "landed_slots": landed_slots}
+            "landed_pages": landed_pages, "landed_slots": landed_slots,
+            "landed_issued": landed_issued}
     return st, ring, hot, slots, info
 
 
@@ -812,13 +849,13 @@ def link_grants(ring: dict, now: jax.Array, cap: jax.Array) -> jax.Array:
     ``now`` the ``int32[S]`` per-stream step clocks, ``cap`` the scalar
     int32 number of prefetch landings the shared link can complete this
     step (budget minus last step's demand fetches). Grants go to due
-    entries (``deadline <= now``) in ascending global issue order (``seq``,
-    FIFO over the link); everything else stays in the ring past its
-    deadline and will count ``n_deferred`` when it finally lands. Returns
-    ``bool[S, capacity]`` for :func:`pool_wait`/:func:`pool_wait_batch`'s
-    ``land_ok``.
+    entries (``ready <= now``: the bytes have physically arrived) in
+    ascending global issue order (``seq``, FIFO over the link); everything
+    else stays in the ring past its deadline and will count ``n_deferred``
+    when it finally lands. Returns ``bool[S, capacity]`` for
+    :func:`pool_wait`/:func:`pool_wait_batch`'s ``land_ok``.
     """
-    due = (ring["page"] >= 0) & (ring["deadline"] <= now[:, None])
+    due = (ring["page"] >= 0) & (ring["ready"] <= now[:, None])
     flat_due = due.reshape(-1)
     flat_seq = ring["seq"].reshape(-1)
     rank = jnp.sum(flat_due[None, :]
@@ -847,7 +884,7 @@ def link_grants_sharded(ring: dict, now: jax.Array, caps: jax.Array,
     bit-exactly to :func:`link_grants` — the shards=1 equivalence pin
     rides on that reduction. Returns ``bool[S, capacity]``.
     """
-    due = (ring["page"] >= 0) & (ring["deadline"] <= now[:, None])
+    due = (ring["page"] >= 0) & (ring["ready"] <= now[:, None])
     flat_due = due.reshape(-1)
     flat_seq = ring["seq"].reshape(-1)
     flat_home = homes.reshape(-1)

@@ -7,6 +7,8 @@ policies — the shared data path of paper §4.1/§4.4 and Fig. 13.
 
 Layout (see DESIGN.md §3):
 
+* :mod:`chaos`   — fault-injection specs (stragglers, degradation, node
+  loss, elastic grants) + the fixed-point deadline estimator (DESIGN.md §9).
 * :mod:`engine`  — event heap + virtual clock, deterministic tie-breaking.
 * :mod:`link`    — fabric links/tiers, queue pairs, arbitration policies.
 * :mod:`tenants` — per-tenant specs + runtime (think time, bursts, churn).
@@ -20,6 +22,7 @@ Layout (see DESIGN.md §3):
   (``TenantSpec.home_node`` + ``FabricScenario.n_nodes``).
 """
 
+from .chaos import ChaosSpec, compile_chaos, est_init, est_step, rehome_shard
 from .engine import EventEngine
 from .link import ARBITRATIONS, FabricLink, Request
 from .linkstep import LinkStepReport, run_linkstep
@@ -30,8 +33,9 @@ from .sim import FabricScenario, run_fabric, run_single_stream
 from .tenants import Tenant, TenantSpec
 
 __all__ = [
-    "ARBITRATIONS", "EventEngine", "FabricLink", "FabricReport",
+    "ARBITRATIONS", "ChaosSpec", "EventEngine", "FabricLink", "FabricReport",
     "FabricScenario", "LinkStepReport", "Request", "Tenant", "TenantReport",
-    "TenantSpec", "jain_index", "percentile_summary", "run_fabric",
-    "run_linkstep", "run_shardstep", "run_single_stream", "slowdowns",
+    "TenantSpec", "compile_chaos", "est_init", "est_step", "jain_index",
+    "percentile_summary", "rehome_shard", "run_fabric", "run_linkstep",
+    "run_shardstep", "run_single_stream", "slowdowns",
 ]

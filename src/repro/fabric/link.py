@@ -85,6 +85,7 @@ class FabricLink:
         self.busy_time = 0.0            # sum of completed transfer durations
         self.completed = 0
         self.queue_waits: list[float] = []
+        self.dilation = 1.0             # chaos straggler factor (DESIGN.md §9)
 
     # -- tenant registration (per_tenant_qp) --------------------------------
     def register_tenant(self, tenant: str) -> int:
@@ -128,16 +129,43 @@ class FabricLink:
                 return
             req.t_start = self.engine.now
             self.busy += 1
-            self.engine.schedule(req.t_xfer, lambda r=req: self._complete(r))
+            # Chaos slowdown: an in-progress straggler window stretches the
+            # channel occupancy of every transfer *started* inside it.
+            dur = req.t_xfer * self.dilation
+            self.engine.schedule(dur, lambda r=req, d=dur: self._complete(r, d))
 
-    def _complete(self, req: Request) -> None:
+    def _complete(self, req: Request, dur: float | None = None) -> None:
         req.t_done = self.engine.now
         self.busy -= 1
-        self.busy_time += req.t_xfer
+        self.busy_time += req.t_xfer if dur is None else dur
         self.completed += 1
         self.queue_waits.append(req.queue_wait)
         self._maybe_start()
         req.on_complete(req.t_done)
+
+    # -- chaos hooks (DESIGN.md §9) ------------------------------------------
+    def set_dilation(self, factor: float) -> None:
+        """Stretch (or restore, ``factor=1``) this link's transfer times.
+
+        Applies to transfers *starting* from now on; in-flight transfers
+        keep their already-scheduled completion.
+        """
+        if factor <= 0:
+            raise ValueError(f"dilation factor must be > 0, got {factor}")
+        self.dilation = float(factor)
+
+    def drain(self) -> list[Request]:
+        """Remove and return every queued-but-unstarted request (node death:
+        the caller re-homes and resubmits them elsewhere). In-flight
+        transfers are not touched — their bytes are already moving."""
+        drained: list[Request] = list(self._fifo)
+        self._fifo.clear()
+        for qp in self._qps:
+            drained.extend(qp.demand)
+            drained.extend(qp.prefetch)
+            qp.demand.clear()
+            qp.prefetch.clear()
+        return drained
 
     # -- reporting -----------------------------------------------------------
     def utilization(self, horizon: float) -> float:

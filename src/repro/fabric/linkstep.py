@@ -53,8 +53,16 @@ class _Inflight:
     """One queued prefetch transfer on the shared link."""
 
     page: int
-    ready: int        # nominal arrival step: issue_step + arrival_delay
+    ready: int        # physical arrival step: issue_step + true delay
     seq: int          # global issue order (step-major, stream, candidate)
+    expect: int = -1  # expected arrival (deadline) when it differs from
+    #                   ready (chaos slowdown / adaptive deadlines,
+    #                   DESIGN.md §9); -1 = same as ready (clean fabric)
+    issued_at: int = -1  # issue step — the estimator's observation anchor
+
+    @property
+    def deadline(self) -> int:
+        return self.ready if self.expect < 0 else self.expect
 
 
 @dataclasses.dataclass
@@ -96,15 +104,23 @@ class LinkStepReport:
         }
 
 
-def run_linkstep(schedules, n_pages: int, budget: int | None,
-                 ring_size: int, arrival_delay: int = 1,
+def run_linkstep(schedules, n_pages: int, budget=None,
+                 ring_size: int = 8, arrival_delay=1,
                  pw_max: int = DEFAULT_PW_MAX, h_size: int = DEFAULT_H_SIZE,
                  n_split: int = DEFAULT_N_SPLIT,
-                 recorder=None) -> LinkStepReport:
+                 recorder=None, nominal_delay: int | None = None,
+                 ) -> LinkStepReport:
     """Run ``schedules`` (``[S][T]`` page ids) through the lock-step link.
 
     ``budget=None`` models private infinite links (every eligible prefetch
     lands at its nominal arrival — the unbudgeted jitted path).
+
+    ``budget`` and ``arrival_delay`` also accept per-step sequences
+    (length >= T) — the chaos fabric's transient link degradation and
+    slowdown windows at ``n_shards == 1`` (DESIGN.md §9). A per-step
+    ``arrival_delay`` dilates the *physical* arrival while the entry's
+    deadline stays at the static ``nominal_delay`` (default: the scalar
+    ``arrival_delay``, or 1): entries completing past it count deferred.
 
     ``recorder`` (an :class:`repro.obs.trace.TraceRecorder`) receives a
     page-level event at every transition — ``land``/``defer`` at grant
@@ -115,7 +131,13 @@ def run_linkstep(schedules, n_pages: int, budget: int | None,
     schedules = [[int(p) for p in row] for row in schedules]
     S = len(schedules)
     T = len(schedules[0]) if S else 0
-    arrival_delay = max(arrival_delay, 1)   # mirrors pool_issue's clamp
+    delay_seq = not isinstance(arrival_delay, int)
+    if not delay_seq:
+        arrival_delay = max(arrival_delay, 1)   # mirrors pool_issue's clamp
+    if nominal_delay is None:
+        nominal_delay = 1 if delay_seq else arrival_delay
+    nominal_delay = max(nominal_delay, 1)
+    budget_seq = budget is not None and not isinstance(budget, int)
     cap_inf = budget is None
     rec = recorder.emit if recorder is not None else (lambda *a, **k: None)
     streams = [_Stream(LeapPrefetcher(h_size=h_size, n_split=n_split,
@@ -126,7 +148,9 @@ def run_linkstep(schedules, n_pages: int, budget: int | None,
 
     for t in range(T):
         # -- 1. landing grants: leftover budget, global issue order ----------
-        cap = math.inf if cap_inf else max(0, budget - d_prev)
+        budget_t = budget[t] if budget_seq else budget
+        cap = math.inf if cap_inf or budget_t is None \
+            else max(0, budget_t - d_prev)
         eligible = sorted((e.seq, s, e) for s, st in enumerate(streams)
                           for e in st.queue if e.ready <= t)
         landed = 0
@@ -137,7 +161,7 @@ def run_linkstep(schedules, n_pages: int, budget: int | None,
             st.queue.remove(e)
             st.resident.add(e.page)
             rec("land", t, s, page=e.page, seq=e.seq)
-            if e.ready < t:
+            if e.deadline < t:
                 st.stats.deferred += 1
                 rec("defer", t, s, page=e.page, seq=e.seq)
             landed += 1
@@ -165,7 +189,7 @@ def run_linkstep(schedules, n_pages: int, budget: int | None,
                 st.stats.prefetch_hits += 1
                 st.stats.partial_hits += 1
                 rec("partial", t, s, page=page, seq=inflight.seq, pref=True)
-                if inflight.ready < t:
+                if inflight.deadline < t:
                     st.stats.deferred += 1
                     rec("defer", t, s, page=page, seq=inflight.seq)
                 d_t += 1
@@ -188,7 +212,11 @@ def run_linkstep(schedules, n_pages: int, budget: int | None,
                     rec("drop", t, s, page=cand)
                     continue
                 seq = (t * S + s) * pw_max + k
-                st.queue.append(_Inflight(cand, t + arrival_delay, seq))
+                true_d = (max(int(arrival_delay[t]), 1) if delay_seq
+                          else arrival_delay)
+                st.queue.append(_Inflight(cand, t + true_d, seq,
+                                          expect=t + nominal_delay,
+                                          issued_at=t))
                 st.stats.prefetch_issued += 1
                 rec("issue", t, s, page=cand, seq=seq)
                 issued_t += 1

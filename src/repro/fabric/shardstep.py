@@ -52,7 +52,7 @@ def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
                   near_delay: int = 1, far_delay: int = 2,
                   pw_max: int = DEFAULT_PW_MAX, h_size: int = DEFAULT_H_SIZE,
                   n_split: int = DEFAULT_N_SPLIT,
-                  recorder=None) -> LinkStepReport:
+                  recorder=None, chaos=None) -> LinkStepReport:
     """Run ``schedules`` (``[S][T]`` page ids) through the sharded fabric.
 
     ``budget`` is *per NIC* (``None`` = infinite NICs: every eligible
@@ -63,6 +63,16 @@ def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
     ``recorder`` (:class:`repro.obs.trace.TraceRecorder`) receives every
     transition page-level with the page's home shard stamped — same hook
     contract as :func:`repro.fabric.linkstep.run_linkstep`.
+
+    ``chaos`` (:class:`repro.fabric.chaos.ChaosSpec`) mirrors the fault
+    semantics of the jitted chaos path step for step (DESIGN.md §9): the
+    same :func:`repro.fabric.chaos.compile_chaos` tables drive per-step
+    dilation/budget/grant, node death discards the dead shard's resident
+    and in-flight prefetches as pollution and re-homes its pages for every
+    scheduling decision, and the same Q8 integer EWMA tracks per-(stream,
+    shard) delay — Python ints here, an int32 scan carry there, identical
+    bit patterns. Event shard stamps always use the *physical* placement
+    home (matching ``decode_stream_events``).
     """
     if placement not in ("block", "interleave"):
         raise ValueError(f"unknown placement {placement!r}")
@@ -83,26 +93,82 @@ def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
     demand_hist, landed_hist, issued_hist = [], [], []
     d_prev = [0] * n_shards
 
+    cz = est = None
+    if chaos is not None:
+        from .chaos import EST_ONE, compile_chaos, est_init, est_step
+        cz = compile_chaos(chaos, n_steps=T, n_streams=S, n_shards=n_shards,
+                           n_pages=n_pages, placement=placement,
+                           base_budget=budget)
+        est = [[int(v) for v in row]
+               for row in est_init(S, n_shards, near_delay, far_delay)]
+        home0 = [int(h) for h in cz["home"][0]]
+        home1 = [int(h) for h in cz["home"][1]]
+
+    def sched_home(p: int, t: int) -> int:
+        """Scheduling home at step t: the re-homed map after node death."""
+        if cz is None:
+            return home(p)
+        hv = home1 if (cz["t_fail"] is not None and t >= cz["t_fail"]) else home0
+        return hv[min(max(int(p), 0), n_pages - 1)]
+
     for t in range(T):
+        if cz is not None and cz["t_fail"] == t:
+            # Node death: the dead shard's landed-but-unconsumed prefetches
+            # and in-flight fetches are lost — pollution, exactly like the
+            # jitted pool_invalidate sweep over the dead page list.
+            dead_set = set(int(p) for p in cz["dead_pages"])
+            for s, st in enumerate(streams):
+                lost = st.resident & dead_set
+                st.stats.pollution += len(lost)
+                st.resident -= lost
+                kept = [e for e in st.queue if e.page not in dead_set]
+                dropped = [e for e in st.queue if e.page in dead_set]
+                st.stats.pollution += len(dropped)
+                st.queue[:] = kept
+                # Pollution is a summary kind in the §8 trace contract
+                # (folded per-stream run total) — emit one evict per lost
+                # entry so the diff against the jitted decode stays zero.
+                for p in sorted(lost) + [e.page for e in dropped]:
+                    rec("evict", t, s, page=p, shard=home(p))
+
         # -- 1. per-NIC landing grants: leftover budget, global seq order ----
-        caps = [math.inf if cap_inf else max(0, budget - d) for d in d_prev]
+        if cz is None:
+            caps = [math.inf if cap_inf else max(0, budget - d)
+                    for d in d_prev]
+        else:
+            caps = [max(0, int(cz["budget"][t][g]) - d_prev[g])
+                    for g in range(n_shards)]
         eligible = sorted((e.seq, s, e) for s, st in enumerate(streams)
                           for e in st.queue if e.ready <= t)
         landed = 0
+        obs_sum = [[0] * n_shards for _ in range(S)]
+        obs_cnt = [[0] * n_shards for _ in range(S)]
         for _, s, e in eligible:
-            g = home(e.page)
+            g = sched_home(e.page, t)
             if caps[g] <= 0:
                 continue                 # this NIC is out of budget; others
             caps[g] -= 1                 # may still land later-seq entries
             st = streams[s]
             st.queue.remove(e)
             st.resident.add(e.page)
-            rec("land", t, s, page=e.page, shard=g, seq=e.seq)
-            if e.ready < t:
+            rec("land", t, s, page=e.page, shard=home(e.page), seq=e.seq)
+            if e.deadline < t:
                 st.stats.deferred += 1
-                rec("defer", t, s, page=e.page, shard=g, seq=e.seq)
+                rec("defer", t, s, page=e.page, shard=home(e.page), seq=e.seq)
+            if cz is not None:
+                obs_sum[s][g] += t - e.issued_at
+                obs_cnt[s][g] += 1
             landed += 1
         landed_hist.append(landed)
+        if cz is not None:
+            # Estimator update: one order-independent batch fold per step
+            # from this step's landings — same formula, same Q8 integers as
+            # the jitted scan carry.
+            for s in range(S):
+                for g in range(n_shards):
+                    if obs_cnt[s][g]:
+                        est[s][g] = est_step(est[s][g], obs_sum[s][g],
+                                             obs_cnt[s][g])
 
         # -- 2. serve each stream's demand (private residency) ---------------
         d_t = [0] * n_shards
@@ -126,32 +192,48 @@ def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
                 st.stats.partial_hits += 1
                 rec("partial", t, s, page=page, shard=home(page),
                     seq=inflight.seq, pref=True)
-                if inflight.ready < t:
+                if inflight.deadline < t:
                     st.stats.deferred += 1
                     rec("defer", t, s, page=page, shard=home(page),
                         seq=inflight.seq)
-                d_t[home(page)] += 1
+                d_t[sched_home(page, t)] += 1
                 pf_hit = True
             else:
                 st.stats.misses += 1
-                d_t[home(page)] += 1
+                d_t[sched_home(page, t)] += 1
                 pf_hit = False
                 rec("miss", t, s, page=page, shard=home(page))
 
             # -- 3. controller + distance-delayed, globally ordered issue ----
+            grant_cap = None if cz is None else int(cz["grant"][t][s])
             for k, cand in enumerate(st.prefetcher.on_fault(page, pf_hit)):
                 if cand < 0 or cand >= n_pages:
                     continue
                 if cand in st.resident or any(e.page == cand
                                               for e in st.queue):
                     continue
-                if len(st.queue) >= ring_size:
+                full = len(st.queue) >= ring_size
+                over_grant = (grant_cap is not None and
+                              len(st.resident) + len(st.queue) >= grant_cap)
+                if full or over_grant:
                     st.drops += 1
                     rec("drop", t, s, page=cand, shard=home(cand))
                     continue
-                delay = (near_delay if home(cand) == my_shard else far_delay)
+                g_c = sched_home(cand, t)
+                base = near_delay if g_c == my_shard else far_delay
                 seq = (t * S + s) * pw_max + k
-                st.queue.append(_Inflight(cand, t + delay, seq))
+                if cz is None:
+                    e = _Inflight(cand, t + base, seq)
+                else:
+                    true_d = max(1, base * int(cz["dilation"][t][g_c]))
+                    if chaos.adaptive_deadline:
+                        expect_d = max(1, (est[s][g_c] + EST_ONE // 2)
+                                       // EST_ONE)
+                    else:
+                        expect_d = base
+                    e = _Inflight(cand, t + true_d, seq,
+                                  expect=t + expect_d, issued_at=t)
+                st.queue.append(e)
                 st.stats.prefetch_issued += 1
                 rec("issue", t, s, page=cand, shard=home(cand), seq=seq)
                 issued_t += 1

@@ -83,6 +83,14 @@ class FabricScenario:
     n_pages: int = 0                     # required when n_nodes > 1
     placement: str = "block"             # "block" | "interleave"
     far_factor: float = 1.0
+    # -- fault injection (DESIGN.md §9) --------------------------------------
+    # A repro.fabric.chaos.ChaosSpec, interpreted on the engine's continuous
+    # clock (onset/recovery/death steps are sim times): slowdown dilates the
+    # shard's link transfer times, degradation narrows its channel count
+    # (floored at 1 — a width-0 link would strand queued transfers forever),
+    # node loss drains the dead node's queued requests and resubmits them to
+    # the surviving re-homed links, grants resize tenant cache capacity.
+    chaos: object = None
 
 
 def _resolve_model(model):
@@ -113,13 +121,36 @@ class _FabricSim:
         # accesses that blocked on an in-flight fill: their wake-time hit
         # is the partial hit (one fault, one demand event)
         self._waited: set = set()
+        self.dead_node: int | None = None     # chaos node loss (DESIGN.md §9)
 
     def _sid(self, ten: Tenant) -> int:
         return self.stream_ids.get(id(ten), ten.rank)
 
     # -- multi-node routing (no-ops at n_nodes == 1) -------------------------
     def _node_of(self, page: int) -> int:
-        return home_of(page, self.n_pages, self.n_nodes, self.placement)
+        home = home_of(page, self.n_pages, self.n_nodes, self.placement)
+        if self.dead_node is not None and home == self.dead_node:
+            from .chaos import rehome_shard
+            home = rehome_shard(
+                min(max(int(page), 0), self.n_pages - 1), home,
+                self.dead_node, self.n_nodes)
+        return home
+
+    def kill_node(self, node: int) -> None:
+        """Chaos node death: re-home the node's pages (same deterministic
+        rule as the lock-step mirrors) and move its queued-but-unstarted
+        transfers to the surviving links. In-flight transfers complete —
+        their bytes were already moving when the node died."""
+        if self.n_nodes <= 1:
+            raise ValueError("node loss needs a multi-node fabric")
+        self.dead_node = int(node)
+        for name in sorted(self.links):
+            if not name.endswith(f"@n{node}"):
+                continue
+            tier = name.rsplit("@n", 1)[0]
+            for req in self.links[name].drain():
+                target = self.links[f"{tier}@n{self._node_of(req.page)}"]
+                target.submit(req)
 
     def _link_for(self, ten: Tenant, page: int) -> FabricLink:
         if self.n_nodes <= 1:
@@ -253,6 +284,61 @@ class _FabricSim:
                                 rank=ten.rank)
 
 
+def _schedule_chaos(scenario: FabricScenario, sim: "_FabricSim",
+                    engine: EventEngine, tenants: list) -> None:
+    """Install a :class:`repro.fabric.chaos.ChaosSpec` as engine events.
+
+    The spec's step numbers are read as engine times. This is the
+    continuous-clock analogue of the lock-step chaos semantics — sanity-
+    checked (dilation stretches completions, death re-homes traffic), not
+    bit-pinned like the linkstep/shardstep mirrors.
+    """
+    spec = scenario.chaos
+    if spec is None:
+        return
+
+    def links_of_shard(g: int):
+        if scenario.n_nodes <= 1:
+            return list(sim.links.values())
+        return [ln for name, ln in sim.links.items()
+                if name.endswith(f"@n{g}")]
+
+    for g, factor, onset, recovery in spec.slowdown:
+        for link in links_of_shard(g):
+            engine.schedule_at(
+                float(onset), lambda ln=link, f=factor: ln.set_dilation(f))
+            engine.schedule_at(
+                float(recovery), lambda ln=link: ln.set_dilation(1.0))
+    for g, cap, onset, recovery in spec.degradation:
+        for link in links_of_shard(g):
+            # width floor of 1: a zero-width link would strand queued
+            # transfers (and their blocked tenants) forever
+            w0 = link.width
+            engine.schedule_at(
+                float(onset),
+                lambda ln=link, c=cap: setattr(ln, "width",
+                                               max(1, min(ln.width, c))))
+            engine.schedule_at(
+                float(recovery),
+                lambda ln=link, w=w0: setattr(ln, "width", w))
+    if spec.node_loss is not None:
+        g, t_fail = spec.node_loss
+        if scenario.n_nodes <= 1:
+            raise ValueError("chaos node_loss needs n_nodes > 1")
+        engine.schedule_at(float(t_fail), lambda: sim.kill_node(g))
+    for i, grant, onset, recovery in spec.grants:
+        if not 0 <= i < len(tenants):
+            raise ValueError(f"chaos grant stream {i} outside the "
+                             f"{len(tenants)} tenants")
+        cache = tenants[i].cache
+        c0 = cache.capacity
+        engine.schedule_at(
+            float(onset),
+            lambda c=cache, v=grant: setattr(c, "capacity", int(v)))
+        engine.schedule_at(
+            float(recovery), lambda c=cache, v=c0: setattr(c, "capacity", v))
+
+
 # -- entry points -------------------------------------------------------------
 def run_fabric(scenario: FabricScenario, recorder=None) -> FabricReport:
     """Run a multi-tenant scenario; returns the per-tenant/fabric report.
@@ -333,6 +419,7 @@ def run_fabric(scenario: FabricScenario, recorder=None) -> FabricReport:
             for tag in node_tags:
                 sim.links[ten.tier + tag].register_tenant(ten.name)
         sim.start_tenant(ten)
+    _schedule_chaos(scenario, sim, engine, tenants)
     engine.run()
 
     makespan = max((t.done_time or 0.0 for t in tenants), default=0.0)

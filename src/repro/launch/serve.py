@@ -39,6 +39,7 @@ from repro.paging.sharded_pool import ShardedPoolCfg
 from repro.paging.tiered_kv import (TieredKV, tiered_attention, tiered_init,
                                     tiered_invalidate, tiered_min_slots,
                                     tiered_stats, tiered_sweep)
+from repro.runtime.straggler import StepTimeMonitor
 
 #: event-type totals that must reproduce the pool counters bit-exactly
 #: whenever a trace is written (DESIGN.md §8.2)
@@ -116,6 +117,14 @@ def main(argv=None) -> dict:
                     help="with --shards: prefetch arrival delay in chunk "
                          "steps for cross-shard pages (near pages take 1)")
     ap.add_argument("--page-size", type=int, default=4)
+    ap.add_argument("--chaos", default=None, metavar="SPEC.json",
+                    help="with --paged: inject faults from a ChaosSpec JSON "
+                         "file (DESIGN.md §9) into a chaos sidecar run over "
+                         "the requests' context-page schedules — per-shard "
+                         "slowdown, NIC budget degradation, node loss with "
+                         "page re-homing, elastic tenant grants. Reports "
+                         "per-shard estimated vs true delay (the adaptive-"
+                         "deadline EWMA) plus timely-hit counters")
     ap.add_argument("--trace", default=None, metavar="OUT.json",
                     help="with --paged: decode the sweep info arrays into "
                          "the page-lifecycle event log and write a Chrome "
@@ -127,6 +136,9 @@ def main(argv=None) -> dict:
     if args.trace and not args.paged:
         ap.error("--trace requires --paged (only the tiered data path "
                  "emits the page-lifecycle info arrays)")
+    if args.chaos and not args.paged:
+        ap.error("--chaos requires --paged (faults are injected into the "
+                 "paged-KV sweep's fabric model)")
 
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
@@ -150,6 +162,10 @@ def main(argv=None) -> dict:
     t_prefill = reg.histogram("prefill").samples[-1]
 
     out = [tok]
+    # per-step wall-time straggler detection (runtime satellite): the same
+    # EWMA monitor every host runs on a pod feeds off the decode loop here,
+    # so compilation stalls / CPU contention show up as flagged steps
+    mon = StepTimeMonitor()
     t0 = time.perf_counter()
     for _ in range(args.gen - 1):
         # span-timed per token (device-sync'd) — feeds the p50–p99.9
@@ -158,6 +174,7 @@ def main(argv=None) -> dict:
             logits, state = decode(params, tok, state)
             tok = jnp.argmax(logits, -1).astype(jnp.int32)
             sp.sync = tok
+        mon.record(reg.histogram("token_latency").samples[-1])
         out.append(tok)
     t_decode = time.perf_counter() - t0
     tokens = np.stack([np.asarray(t) for t in out], 1)
@@ -170,6 +187,8 @@ def main(argv=None) -> dict:
         "token_latency": {k: round(v, 5) if isinstance(v, float) else v
                           for k, v in tok_ladder.items()},
         "tokens_shape": list(tokens.shape),
+        "step_time_monitor": {k: round(v, 5) if isinstance(v, float) else v
+                              for k, v in mon.summary().items()},
     }
 
     if args.paged:
@@ -365,7 +384,74 @@ def _serve_tiered(cfg, state, args, B: int, prompt_len: int,
         out["trace_path"] = trace_path
         out["trace_events"] = len(events)
         out["trace_totals_ok"] = totals_ok
+    if args.chaos:
+        out.update(_chaos_sidecar(args, rows, n_pages, n_streams))
     return out
+
+
+def _chaos_sidecar(args, rows, n_pages: int, n_streams: int) -> dict:
+    """Replay the requests' context-page schedules under a ChaosSpec.
+
+    The sidecar drives the chaos-enabled sharded consume path
+    (DESIGN.md §9) over the same physical pages the tiered path serves:
+    each stream walks its context pages cyclically, the spec's faults
+    (stragglers / budget cuts / node loss / grant churn) hit the fabric
+    model, and the report compares the adaptive-deadline EWMA's per-shard
+    delay estimate against the true (dilated) delay at the end of the run
+    — the operator-facing "is my deadline model tracking the fabric"
+    signal.
+    """
+    from repro.fabric.chaos import EST_ONE, ChaosSpec, compile_chaos
+    from repro.paging.prefetch_serving import (PrefetchedStream,
+                                               stream_stats_at)
+    from repro.paging.sharded_pool import sharded_multi_stream_consume
+
+    with open(args.chaos) as f:
+        spec = ChaosSpec.from_json(f.read())
+    G = max(args.shards, 1)
+    if n_pages % G:
+        raise SystemExit(f"--chaos sidecar: {n_pages}-page pool not "
+                         f"divisible by {G} shards")
+    npps = rows.shape[1]
+    T = min(max(4 * npps, 48), 256)
+    rows_np = np.asarray(rows)
+    scheds = np.stack([rows_np[s][np.arange(T) % npps]
+                       for s in range(n_streams)]).astype(np.int32)
+    geom = PrefetchedStream(n_pages=n_pages, n_slots=n_pages, page_elems=4,
+                            ring_size=args.ring_size)
+    fab = ShardedPoolCfg(n_shards=G, placement=args.placement,
+                         link_budget=args.link_budget,
+                         near_delay=1, far_delay=args.far_delay)
+    cold = jnp.arange(n_pages * 4, dtype=jnp.float32).reshape(n_pages, 4)
+    st, _, info = sharded_multi_stream_consume(
+        cold, jnp.asarray(scheds), geom, fab, chaos=spec)
+    per = [stream_stats_at(st, s) for s in range(n_streams)]
+    faults = sum(p["faults"] for p in per)
+    hits = sum(p["prefetch_hits"] for p in per)
+    deferred = sum(p["deferred"] for p in per)
+    cz = compile_chaos(spec, n_steps=T, n_streams=n_streams, n_shards=G,
+                       n_pages=n_pages, placement=args.placement,
+                       base_budget=args.link_budget)
+    # final per-shard delay: estimate (stream-averaged EWMA, steps) vs the
+    # true dilated delay at the last step (stream-averaged near/far base)
+    est = np.asarray(info["est_q"], dtype=np.float64) / EST_ONE
+    home = np.arange(n_streams) % G
+    base = np.where(np.arange(G)[None, :] == home[:, None],
+                    1, args.far_delay)
+    true = base * np.asarray(cz["dilation"][-1], dtype=np.float64)[None, :]
+    return {
+        "chaos_spec": args.chaos,
+        "chaos_steps": T,
+        "chaos_shards": G,
+        "chaos_faults": faults,
+        "chaos_prefetch_hits": hits,
+        "chaos_deferred": deferred,
+        "chaos_timely_rate": round((hits - deferred) / max(1, faults), 3),
+        "chaos_pollution": sum(p["pollution"] for p in per),
+        "chaos_est_delay": [round(float(v), 2) for v in est.mean(0)],
+        "chaos_true_delay": [round(float(v), 2) for v in true.mean(0)],
+        "chaos_adaptive_deadline": spec.adaptive_deadline,
+    }
 
 
 if __name__ == "__main__":

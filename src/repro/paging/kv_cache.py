@@ -123,6 +123,26 @@ class PageAllocator:
         self.free.extend(reversed(pages))
         return len(pages)
 
+    def recycle(self, pages) -> int:
+        """Forcibly reclaim ``pages`` from whichever sequences own them.
+
+        The node-death path (DESIGN.md §9): when a shard dies, the pages it
+        physically held are yanked out from under their sequences and
+        returned to the free list so re-homed replacements can be allocated.
+        Pages that are already free (or unknown) are skipped. Returns the
+        number of pages actually reclaimed; the free list is extended in
+        descending page order so subsequent allocs stay deterministic.
+        """
+        want = set(int(p) for p in pages) - set(self.free)
+        reclaimed = []
+        for seq_id, owned in self.owned.items():
+            keep = [p for p in owned if p not in want]
+            reclaimed.extend(p for p in owned if p in want)
+            owned[:] = keep
+        self.owned = {s: o for s, o in self.owned.items() if o}
+        self.free.extend(sorted(reclaimed, reverse=True))
+        return len(reclaimed)
+
     @property
     def in_use(self) -> int:
         return self.n_pages - len(self.free)

@@ -56,7 +56,8 @@ import numpy as np
 
 from repro.core.leap_jax import leap_step_batched
 from repro.core.pool import (NO_PAGE, PLACEMENTS, link_grants_sharded,
-                             page_home, page_local, pool_issue, pool_wait)
+                             page_home, page_local, pool_invalidate,
+                             pool_issue, pool_wait)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,7 +221,7 @@ def scatter_hot(hot, data, dst: jax.Array, mask: jax.Array):
 # the sharded consume scan
 # --------------------------------------------------------------------------
 def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
-                  sharded: bool):
+                  sharded: bool, chaos=None):
     """Lock-step multi-stream consume over the (possibly sharded) cold pool.
 
     Generalizes the §5 budgeted scan (DESIGN.md §5 -> §7): per-step,
@@ -240,6 +241,17 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
 
     ``fabric.n_shards == 1`` with ``near_delay == geom.arrival_delay``
     reduces bit-exactly to the single-link §5 scan.
+
+    ``chaos`` (a static :class:`repro.fabric.chaos.ChaosSpec`, DESIGN.md §9)
+    injects faults without touching the clean path (``None`` compiles the
+    exact scan above). With a spec, the step order becomes: node-death
+    invalidation -> per-shard grants against the *per-step* budget table ->
+    wait -> EWMA estimator update from this step's landings -> demand
+    accounting and issue against the re-homed page->shard map, with
+    physical delays dilated by the slowdown table, deadlines either static
+    or estimator-driven, and issues capped by the elastic grant table. The
+    estimator state ``est_q int32[S, G]`` rides the scan carry and is
+    returned as ``info["est_q"]``.
     """
     from repro.paging.prefetch_serving import stream_init
 
@@ -252,6 +264,22 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
     stream_ids = jnp.arange(S, dtype=jnp.int32)
     gather = (functools.partial(_gather_fabric, n_pages=n_pages,
                                 fabric=fabric) if sharded else _gather_flat)
+
+    cz = None
+    if chaos is not None:
+        from repro.fabric.chaos import (EST_ONE, compile_chaos, est_init,
+                                        est_step)
+        cz = compile_chaos(chaos, n_steps=T, n_streams=S, n_shards=G,
+                           n_pages=n_pages, placement=fabric.placement,
+                           base_budget=budget)
+        dil_t = jnp.asarray(cz["dilation"])        # [T, G]
+        bud_t = jnp.asarray(cz["budget"])          # [T, G]
+        grant_t = jnp.asarray(cz["grant"])         # [T, S]
+        home_tab = jnp.asarray(cz["home"])         # [2, n_pages]
+        t_fail = cz["t_fail"]
+        dead = (jnp.asarray(cz["dead_pages"]) if t_fail is not None else None)
+        est0 = jnp.asarray(est_init(S, G, fabric.near_delay,
+                                    fabric.far_delay))
 
     # payload_like trailing shapes are per-page, hence shard-invariant —
     # the local [pps, ...] slice seeds the same hot-buffer layout the full
@@ -267,13 +295,48 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
     def _issue(meta, ring, cands, val, now, seq, delay):
         return pool_issue(meta, ring, cands, val, now, delay, seq=seq)
 
+    def _issue_chaos(meta, ring, cands, val, now, seq, delay, true_delay,
+                     quota):
+        return pool_issue(meta, ring, cands, val, now, delay, seq=seq,
+                          true_delay=true_delay, quota=quota)
+
     def body(carry, xs):
-        state, d_prev = carry                      # d_prev: int32[G]
+        if cz is None:
+            state, d_prev = carry                  # d_prev: int32[G]
+        else:
+            state, d_prev, est_q = carry           # est_q: int32[S, G]
         t, pages = xs
         meta, ring, hot = state["pool_meta"], state["ring"], state["hot"]
         now = ring["now"]                          # int32[S], == t
+
+        if cz is None:
+            def _home(x):
+                return page_home(x, n_pages, G, fabric.placement)
+        else:
+            # Scheduling home map, re-homed from the death step on. The
+            # data plane below keeps gathering from the physical placement
+            # (the survivor serves a replica): re-homing is metadata only.
+            if cz["t_fail"] is None:
+                hv = home_tab[0]
+            else:
+                hv = jnp.where(t >= cz["t_fail"], home_tab[1], home_tab[0])
+
+            def _home(x):
+                return hv[jnp.clip(x, 0, n_pages - 1)]
+
+            if cz["t_fail"] is not None:
+                # Node death at the top of the step: the dead shard's
+                # resident prefetches and in-flight fetches are lost
+                # (pollution); freed slots recycle through the free stack.
+                kill = jnp.broadcast_to(t == cz["t_fail"], dead.shape)
+                meta, ring = jax.vmap(
+                    lambda m, r: pool_invalidate(m, r, dead, kill))(meta, ring)
+
         # --- per-shard landing grants (leftover NIC budget, global seq) -----
-        if budget is None:
+        if cz is not None:
+            caps = jnp.maximum(bud_t[t] - d_prev, 0)
+            allowed = link_grants_sharded(ring, now, caps, _home(ring["page"]))
+        elif budget is None:
             allowed = jnp.ones(ring["page"].shape, bool)
         else:
             caps = jnp.maximum(jnp.int32(budget) - d_prev, 0)
@@ -283,7 +346,23 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
         deferred0 = meta["n_deferred"]
         meta, ring, _, slot, _, winfo = jax.vmap(_wait)(
             meta, ring, pages, now, allowed)
-        homes_d = page_home(pages, n_pages, G, fabric.placement)
+        if cz is not None:
+            # EWMA update from this step's landings: obs = realized delay,
+            # bucketed per (stream, home shard), order-independent batch
+            # form (DESIGN.md §9) so the Python twin folds identically.
+            lp, li = winfo["landed_pages"], winfo["landed_issued"]
+            lmask = lp >= 0
+            homes_l = jnp.where(lmask, _home(lp), G)     # G = drop row
+            rows = jnp.broadcast_to(stream_ids[:, None], lp.shape)
+            obs = jnp.where(lmask, now[:, None] - li, 0).astype(jnp.int32)
+            obs_sum = jnp.zeros((S, G), jnp.int32).at[rows, homes_l].add(
+                obs, mode="drop")
+            cnt = jnp.zeros((S, G), jnp.int32).at[rows, homes_l].add(
+                lmask.astype(jnp.int32), mode="drop")
+            est_q = jnp.where(cnt > 0,
+                              est_step(est_q, obs_sum, jnp.maximum(cnt, 1)),
+                              est_q)
+        homes_d = _home(pages)
         d_t = jnp.zeros((G,), jnp.int32).at[homes_d].add(
             winfo["fetched"].astype(jnp.int32), mode="drop")
         # --- controllers + globally ordered, distance-delayed issue ---------
@@ -294,12 +373,31 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
         val = valid & (cands >= 0) & (cands < n_pages)
         seq = ((t * S + stream_ids)[:, None] * K
                + jnp.arange(K, dtype=jnp.int32)[None, :])
-        homes_c = page_home(cands, n_pages, G, fabric.placement)
-        delay = jnp.where(homes_c == homes_s[:, None],
-                          jnp.int32(fabric.near_delay),
-                          jnp.int32(fabric.far_delay))
+        homes_c = _home(cands)
+        base = jnp.where(homes_c == homes_s[:, None],
+                         jnp.int32(fabric.near_delay),
+                         jnp.int32(fabric.far_delay))
         issued0 = meta["n_prefetch_issued"]
-        meta, ring = jax.vmap(_issue)(meta, ring, cands, val, now, seq, delay)
+        if cz is None:
+            meta, ring = jax.vmap(_issue)(meta, ring, cands, val, now, seq,
+                                          base)
+        else:
+            true_delay = base * dil_t[t][homes_c]
+            if chaos.adaptive_deadline:
+                rows_c = jnp.broadcast_to(stream_ids[:, None], homes_c.shape)
+                eg = est_q[rows_c, homes_c]
+                deadline = jnp.maximum(1, (eg + EST_ONE // 2) // EST_ONE)
+            else:
+                deadline = base
+            # Elastic grant: cap the stream's unconsumed-resident +
+            # in-flight footprint; issues beyond the cap are drops.
+            res_unused = jnp.sum((meta["slot_page"] >= 0)
+                                 & meta["slot_prefetched"]
+                                 & ~meta["slot_consumed"], axis=1)
+            occ = jnp.sum(ring["page"] >= 0, axis=1)
+            quota = jnp.maximum(grant_t[t] - res_unused - occ, 0)
+            meta, ring = jax.vmap(_issue_chaos)(
+                meta, ring, cands, val, now, seq, deadline, true_delay, quota)
         ring = dict(ring)
         ring["now"] = now + 1
         issued_s = meta["n_prefetch_issued"] - issued0
@@ -323,24 +421,30 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
         outs = (sums, winfo["hit"], winfo["prefetched_hit"],
                 winfo["partial_hit"], winfo["fetched"], issued_s, landed_s,
                 deferred_s, d_t, jnp.sum(issued_s), jnp.sum(deferred_s))
-        return (state, d_t), outs
+        carry = ((state, d_t) if cz is None else (state, d_t, est_q))
+        return carry, outs
 
     xs = (jnp.arange(T, dtype=jnp.int32), schedules.T)
-    (state, _), (sums, hit, pref, part, fetched, issued, landed, deferred,
-                 shard_d, link_i, link_def) = jax.lax.scan(
-        body, (state0, jnp.zeros((G,), jnp.int32)), xs)
+    carry0 = ((state0, jnp.zeros((G,), jnp.int32)) if cz is None
+              else (state0, jnp.zeros((G,), jnp.int32), est0))
+    final, (sums, hit, pref, part, fetched, issued, landed, deferred,
+            shard_d, link_i, link_def) = jax.lax.scan(body, carry0, xs)
+    state = final[0]
     info = {"hit": hit.T, "pref_hit": pref.T, "partial_hit": part.T,
             "fetched": fetched.T, "issued": issued.T, "landed": landed.T,
             "deferred": deferred.T,
             "shard_demand_fetches": shard_d,           # [T, G]
             "link_demand_fetches": shard_d.sum(axis=1),
             "link_prefetch_issued": link_i, "link_deferred": link_def}
+    if cz is not None:
+        info["est_q"] = final[2]                       # int32[S, G]
     return state, sums.T, info
 
 
-@functools.partial(jax.jit, static_argnames=("geom", "fabric"))
-def _consume_flat(cold, schedules, geom, fabric):
-    return _consume_impl(cold, schedules, geom, fabric, sharded=False)
+@functools.partial(jax.jit, static_argnames=("geom", "fabric", "chaos"))
+def _consume_flat(cold, schedules, geom, fabric, chaos=None):
+    return _consume_impl(cold, schedules, geom, fabric, sharded=False,
+                         chaos=chaos)
 
 
 _SHARD_MAP_CACHE: dict = {}
@@ -368,19 +472,20 @@ def cached_shard_map(key: tuple, make_fn, in_specs):
     return _SHARD_MAP_CACHE[key]
 
 
-def _consume_sharded_fn(mesh, geom, fabric: ShardedPoolCfg):
+def _consume_sharded_fn(mesh, geom, fabric: ShardedPoolCfg, chaos=None):
     """The jitted shard_map consume for one topology (memoized)."""
     from jax.sharding import PartitionSpec as P
 
     return cached_shard_map(
-        (mesh, "consume", geom, fabric),
+        (mesh, "consume", geom, fabric, chaos),
         lambda: functools.partial(_consume_impl, geom=geom, fabric=fabric,
-                                  sharded=True),
+                                  sharded=True, chaos=chaos),
         (P("fabric"), P()))
 
 
 def sharded_multi_stream_consume(cold, schedules: jax.Array, geom,
-                                 fabric: ShardedPoolCfg, mesh=None):
+                                 fabric: ShardedPoolCfg, mesh=None,
+                                 chaos=None):
     """Concurrent streams over a mesh-sharded cold pool.
 
     Args:
@@ -398,6 +503,9 @@ def sharded_multi_stream_consume(cold, schedules: jax.Array, geom,
         ``cold`` and cross-shard pages move by ``lax.ppermute`` ring
         rotations. Without a mesh the same scheduling model runs against a
         local cold pool (bit-identical results, pinned).
+      chaos: optional static :class:`repro.fabric.chaos.ChaosSpec` fault
+        schedule (DESIGN.md §9). Adds ``info["est_q"] int32[S, n_shards]``
+        (final Q8 deadline estimates). ``None`` = the clean fabric.
 
     Returns ``(state, data_sums, info)`` exactly like the §5 budgeted
     ``multi_stream_consume`` with additionally ``info["shard_demand_fetches"]
@@ -410,5 +518,6 @@ def sharded_multi_stream_consume(cold, schedules: jax.Array, geom,
     check_fabric_topology(geom.n_pages, fabric, mesh)
     if mesh is not None and fabric.n_shards > 1:
         placed = place_cold(cold, geom.n_pages, fabric)
-        return _consume_sharded_fn(mesh, geom, fabric)(placed, schedules)
-    return _consume_flat(cold, schedules, geom, fabric)
+        return _consume_sharded_fn(mesh, geom, fabric,
+                                   chaos)(placed, schedules)
+    return _consume_flat(cold, schedules, geom, fabric, chaos)

@@ -46,6 +46,10 @@ class Watchdog:
 
     def stop(self):
         self._stop.set()
+        # Join so no stale on_stall can fire after stop() returns (the old
+        # daemon-thread leak made teardown racy under rapid test cycles).
+        if self._thread.is_alive():
+            self._thread.join(timeout=self.timeout + 1.0)
 
 
 def run_with_restarts(make_state, train_one_step, save_state, restore_state,

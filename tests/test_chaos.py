@@ -1,0 +1,420 @@
+"""Chaos fabric: the fault-injection harness that gates DESIGN.md §9.
+
+The load-bearing pins:
+
+* **Count equivalence under faults** — the jitted chaos path
+  (``sharded_multi_stream_consume(..., chaos=spec)``) produces *exactly*
+  the per-stream counters of the lock-step twin (``run_shardstep``) for
+  every fault axis — stragglers, NIC degradation, node loss with page
+  re-homing, elastic grants — alone and combined, across placements,
+  budgets and shard counts, with static and adaptive deadlines.
+* **Zero trace divergence** — the decoded jitted event log and the twin's
+  recorded trace agree event for event under the all-axes spec (the §8
+  differ finds no divergence), including the node-death eviction sweep.
+* **Linkstep reduction** — at one shard the chaos tables reduce to
+  per-step ``budget`` / ``arrival_delay`` sequences for ``run_linkstep``,
+  and the three mirrors agree.
+* **Deadline adaptation** — under a straggler window, static deadlines
+  defer essentially every landing; the integer EWMA estimator converges
+  to the dilated delay and pulls deferrals back to a bounded warmup
+  transient (the regression the adaptive path must never lose).
+* **Seeded random-spec property** — a seeded loop over random specs,
+  shard counts, placements and budgets keeps the mirrors glued where
+  hand-picked cases can't reach.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.fabric import ChaosSpec, FabricScenario, TenantSpec, run_fabric
+from repro.fabric.chaos import (EST_A, EST_D, EST_ONE, INF, compile_chaos,
+                                est_init, est_step, rehome_shard)
+from repro.fabric.linkstep import run_linkstep
+from repro.fabric.shardstep import run_shardstep
+from repro.obs import TraceRecorder, assert_traces_equal, decode_stream_events
+from repro.paging.kv_cache import PageAllocator
+from repro.paging.prefetch_serving import PrefetchedStream, stream_stats_at
+from repro.paging.sharded_pool import (ShardedPoolCfg,
+                                       sharded_multi_stream_consume)
+
+pytestmark = pytest.mark.chaos
+
+N_PAGES = 64
+POOL = jnp.arange(N_PAGES * 4, dtype=jnp.float32).reshape(N_PAGES, 4)
+GEOM = PrefetchedStream(n_pages=N_PAGES, n_slots=N_PAGES, page_elems=4,
+                        ring_size=8)
+
+#: every counter ``stream_summary`` reports — the full equivalence surface
+KEYS = ("faults", "hits", "misses", "prefetch_issued", "prefetch_hits",
+        "partial_hits", "deferred", "pollution", "resident_unused",
+        "inflight_at_end", "ring_drops")
+
+SPECS = {
+    "slowdown": ChaosSpec(slowdown=((0, 3, 5, 25), (1, 2, 10, 30))),
+    "degradation": ChaosSpec(degradation=((0, 1, 8, 30),)),
+    "node_loss": ChaosSpec(node_loss=(1, 15)),
+    "grants": ChaosSpec(grants=((0, 3, 5, 30), (2, 1, 10, 20))),
+    "all_adaptive": ChaosSpec(slowdown=((0, 3, 5, 25), (1, 2, 10, 30)),
+                              degradation=((0, 1, 8, 30),),
+                              node_loss=(1, 15),
+                              grants=((0, 3, 5, 30), (2, 1, 10, 20)),
+                              adaptive_deadline=True),
+}
+
+
+def _scheds(T=40, S=3, seed=7):
+    rng = np.random.default_rng(seed)
+    rows = [np.arange(T) % N_PAGES,
+            (np.arange(T) * 3 + 11) % N_PAGES,
+            rng.integers(0, N_PAGES, T)]
+    while len(rows) < S:
+        rows.append(rng.integers(0, N_PAGES, T))
+    return np.stack(rows[:S]).astype(np.int32)
+
+
+def _both(scheds, fab: ShardedPoolCfg, spec, recorder=None):
+    """Run the jitted chaos path and the lock-step twin on one config."""
+    st, _, info = sharded_multi_stream_consume(
+        POOL, jnp.asarray(scheds), GEOM, fab, chaos=spec)
+    rep = run_shardstep(scheds, N_PAGES, fab.n_shards, fab.placement,
+                        fab.link_budget, ring_size=GEOM.ring_size,
+                        near_delay=fab.near_delay, far_delay=fab.far_delay,
+                        pw_max=GEOM.pw_max, h_size=GEOM.h_size,
+                        n_split=GEOM.n_split, recorder=recorder, chaos=spec)
+    return st, info, rep
+
+
+def _assert_counts(st, rep, S, ctx):
+    for i in range(S):
+        j = stream_stats_at(st, i)
+        r = rep.stream_summary(i)
+        for k in KEYS:
+            assert j[k] == r[k], (f"{ctx}: stream {i} {k}: "
+                                  f"jitted {j[k]} != twin {r[k]}")
+
+
+class TestCountEquivalence:
+    """Jitted chaos scan == lock-step twin, counter for counter."""
+
+    @pytest.mark.parametrize("name", sorted(SPECS))
+    def test_each_axis_interleave(self, name):
+        scheds = _scheds()
+        fab = ShardedPoolCfg(n_shards=2, placement="interleave",
+                             link_budget=2, near_delay=1, far_delay=2)
+        st, _, rep = _both(scheds, fab, SPECS[name])
+        _assert_counts(st, rep, len(scheds), name)
+
+    def test_all_axes_block_four_shards(self):
+        scheds = _scheds()
+        fab = ShardedPoolCfg(n_shards=4, placement="block",
+                             link_budget=1, near_delay=1, far_delay=3)
+        spec = ChaosSpec(slowdown=((2, 2, 6, 28),), node_loss=(3, 12),
+                         adaptive_deadline=True)
+        st, _, rep = _both(scheds, fab, spec)
+        _assert_counts(st, rep, len(scheds), "block/4")
+
+    def test_empty_spec_matches_clean_path(self):
+        scheds = _scheds()
+        fab = ShardedPoolCfg(n_shards=2, placement="interleave",
+                             link_budget=2, near_delay=1, far_delay=2)
+        st_chaos, _, _ = sharded_multi_stream_consume(
+            POOL, jnp.asarray(scheds), GEOM, fab, chaos=ChaosSpec())
+        st_clean, _, _ = sharded_multi_stream_consume(
+            POOL, jnp.asarray(scheds), GEOM, fab)
+        for i in range(len(scheds)):
+            assert stream_stats_at(st_chaos, i) == stream_stats_at(st_clean, i)
+
+
+class TestTracePin:
+    """Decoded jitted events == twin's recorded trace under all four axes."""
+
+    def test_all_axes_zero_divergence(self):
+        scheds = _scheds()
+        fab = ShardedPoolCfg(n_shards=2, placement="interleave",
+                             link_budget=2, near_delay=1, far_delay=2)
+        rec = TraceRecorder()
+        st, info, _ = _both(scheds, fab, SPECS["all_adaptive"], recorder=rec)
+        stats = [stream_stats_at(st, i) for i in range(len(scheds))]
+        jit_events = decode_stream_events(scheds, info, n_pages=N_PAGES,
+                                          final_stats=stats, n_shards=2,
+                                          placement="interleave")
+        assert_traces_equal(jit_events, rec.events, context="chaos all-axes")
+
+
+class TestLinkstepReduction:
+    """At one shard the chaos tables are linkstep's per-step sequences."""
+
+    def test_one_shard_three_mirrors(self):
+        scheds = _scheds()
+        T, S = scheds.shape[1], scheds.shape[0]
+        spec = ChaosSpec(slowdown=((0, 3, 5, 25),),
+                         degradation=((0, 1, 8, 30),))
+        fab = ShardedPoolCfg(n_shards=1, placement="interleave",
+                             link_budget=2, near_delay=1, far_delay=2)
+        rec_shard = TraceRecorder()
+        st, info, rep_shard = _both(scheds, fab, spec, recorder=rec_shard)
+        cz = compile_chaos(spec, n_steps=T, n_streams=S, n_shards=1,
+                           n_pages=N_PAGES, placement="interleave",
+                           base_budget=2)
+        budget_seq = [None if int(b) >= INF else int(b)
+                      for b in cz["budget"][:, 0]]
+        delay_seq = [int(d) for d in cz["dilation"][:, 0]]
+        rec_link = TraceRecorder()
+        rep_link = run_linkstep(scheds, N_PAGES, budget_seq,
+                                ring_size=GEOM.ring_size,
+                                arrival_delay=delay_seq, nominal_delay=1,
+                                pw_max=GEOM.pw_max, h_size=GEOM.h_size,
+                                n_split=GEOM.n_split, recorder=rec_link)
+        for i in range(S):
+            assert rep_link.stream_summary(i) == rep_shard.stream_summary(i)
+        _assert_counts(st, rep_link, S, "linkstep")
+        stats = [stream_stats_at(st, i) for i in range(S)]
+        jit_events = decode_stream_events(scheds, info, n_pages=N_PAGES,
+                                          final_stats=stats)
+        assert_traces_equal(jit_events, rec_link.events, context="linkstep")
+
+
+class TestRandomSpecs:
+    """Seeded property: random specs keep the mirrors glued."""
+
+    def test_random_specs_count_equivalence(self):
+        rng = np.random.default_rng(20260808)
+        for trial in range(6):
+            G = int(rng.choice([1, 2, 4]))
+            placement = str(rng.choice(["interleave", "block"]))
+            budget = [None, 1, 2, 3][rng.integers(0, 4)]
+            T = int(rng.integers(20, 45))
+            S = int(rng.integers(2, 4))
+
+            def window():
+                a = int(rng.integers(0, T - 1))
+                return a, int(rng.integers(a + 1, T + 5))
+
+            slow = []
+            for _ in range(rng.integers(0, 3)):
+                o, r = window()
+                slow.append((int(rng.integers(0, G)),
+                             int(rng.integers(2, 5)), o, r))
+            degr = []
+            for _ in range(rng.integers(0, 2)):
+                o, r = window()
+                degr.append((int(rng.integers(0, G)),
+                             int(rng.integers(0, 3)), o, r))
+            grants = []
+            for _ in range(rng.integers(0, 2)):
+                o, r = window()
+                grants.append((int(rng.integers(0, S)),
+                               int(rng.integers(1, 6)), o, r))
+            loss = None
+            if G >= 2 and rng.random() < 0.5:
+                loss = (int(rng.integers(0, G)), int(rng.integers(5, T)))
+            spec = ChaosSpec(slowdown=tuple(slow), degradation=tuple(degr),
+                             grants=tuple(grants), node_loss=loss,
+                             adaptive_deadline=bool(rng.random() < 0.5))
+            scheds = _scheds(T=T, S=S, seed=int(rng.integers(0, 1 << 31)))
+            fab = ShardedPoolCfg(n_shards=G, placement=placement,
+                                 link_budget=budget, near_delay=1,
+                                 far_delay=2)
+            st, _, rep = _both(scheds, fab, spec)
+            _assert_counts(st, rep, S, f"trial {trial}: {spec}")
+
+
+class TestDeadlineAdaptation:
+    """The regression: static collapses under a straggler, adaptive holds."""
+
+    T, ONSET = 120, 24
+
+    def _run(self, adaptive: bool):
+        # all-strided streams: every stream sustains a trend, so every
+        # (stream, shard) estimator cell gets landing observations
+        scheds = np.stack([(np.arange(self.T) * 3 + 7 * s) % N_PAGES
+                           for s in range(3)]).astype(np.int32)
+        spec = ChaosSpec(slowdown=tuple((g, 2, self.ONSET, self.T)
+                                        for g in range(2)),
+                         adaptive_deadline=adaptive)
+        fab = ShardedPoolCfg(n_shards=2, placement="interleave",
+                             link_budget=None, near_delay=1, far_delay=1)
+        rec = TraceRecorder()
+        st, info, rep = _both(scheds, fab, spec, recorder=rec)
+        return st, info, rep, rec
+
+    def test_static_defers_every_landing_in_window(self):
+        _, _, rep, _ = self._run(adaptive=False)
+        landings = sum(rep.landed[self.ONSET:])
+        deferred = sum(s.deferred for s in rep.per_stream)
+        assert landings > 50          # the scenario actually lands pages
+        assert deferred >= 0.9 * landings
+
+    def test_adaptive_converges_within_warmup(self):
+        _, info, rep, rec = self._run(adaptive=True)
+        _, _, rep_static, _ = self._run(adaptive=False)
+        deferred = sum(s.deferred for s in rep.per_stream)
+        static_deferred = sum(s.deferred for s in rep_static.per_stream)
+        # deferrals collapse to a bounded warmup transient...
+        assert deferred <= 0.15 * static_deferred
+        # ...and no deferral fires once the EWMA has had time to converge
+        last_defer = max((e.step for e in rec.events if e.kind == "defer"),
+                         default=-1)
+        assert last_defer <= self.ONSET + 30
+        # the estimator tracked the dilated truth (delay 1 -> 2 steps)
+        est = np.asarray(info["est_q"], dtype=np.float64) / EST_ONE
+        assert np.all(np.abs(est - 2.0) < 0.25)
+
+
+class TestEstimator:
+    """Integer Q8 EWMA: bit-identical across int domains, sane dynamics."""
+
+    def test_jnp_and_python_bit_identical(self):
+        rng = np.random.default_rng(11)
+        est = int(est_init(1, 1, 1, 2)[0, 0])
+        est_j = jnp.asarray(est, jnp.int32)
+        for _ in range(200):
+            obs_n = int(rng.integers(1, 5))
+            obs_sum = int(rng.integers(obs_n, obs_n * 12))
+            est = est_step(est, obs_sum, obs_n)
+            est_j = est_step(est_j, jnp.int32(obs_sum), jnp.int32(obs_n))
+            assert est == int(est_j)
+
+    def test_converges_to_constant_observation(self):
+        est = EST_ONE                      # prior: 1 step
+        for _ in range(40):
+            est = est_step(est, 6, 1)      # observe 6 steps, forever
+        assert abs(est - 6 * EST_ONE) <= EST_D
+
+    def test_est_init_uses_stream_home(self):
+        e = est_init(4, 2, 1, 3)
+        assert e.shape == (4, 2) and e.dtype == np.int32
+        assert e[0, 0] == EST_ONE and e[0, 1] == 3 * EST_ONE
+        assert e[1, 1] == EST_ONE and e[1, 0] == 3 * EST_ONE
+        assert EST_A == 1 and EST_D == 4   # alpha pinned with the mirrors
+
+
+class TestSpecAndTables:
+    """ChaosSpec validation, JSON round-trip, compile_chaos invariants."""
+
+    def test_json_round_trip(self):
+        spec = SPECS["all_adaptive"]
+        assert ChaosSpec.from_json(spec.to_json()) == spec
+        assert ChaosSpec.from_json(ChaosSpec().to_json()) == ChaosSpec()
+
+    def test_any_faults(self):
+        assert not ChaosSpec().any_faults
+        assert not ChaosSpec(adaptive_deadline=True).any_faults
+        for name, spec in SPECS.items():
+            assert spec.any_faults, name
+
+    @pytest.mark.parametrize("bad", [
+        dict(slowdown=((0, 0, 5, 10),)),          # factor < 1
+        dict(slowdown=((0, 2, 10, 10),)),         # empty window
+        dict(degradation=((0, -1, 5, 10),)),      # negative budget
+        dict(grants=((0, -2, 5, 10),)),           # negative grant
+        dict(node_loss=(1, 2, 3)),                # not (shard, step)
+        dict(slowdown=((0, 2, 5),)),              # not a 4-tuple
+    ])
+    def test_invalid_specs_rejected(self, bad):
+        with pytest.raises(ValueError):
+            ChaosSpec(**bad)
+
+    def test_compile_rejects_out_of_range(self):
+        kw = dict(n_steps=10, n_streams=2, n_shards=2, n_pages=16,
+                  placement="interleave", base_budget=None)
+        with pytest.raises(ValueError):
+            compile_chaos(ChaosSpec(slowdown=((2, 2, 0, 5),)), **kw)
+        with pytest.raises(ValueError):
+            compile_chaos(ChaosSpec(grants=((5, 2, 0, 5),)), **kw)
+        with pytest.raises(ValueError):
+            compile_chaos(ChaosSpec(node_loss=(0, 3)),
+                          **{**kw, "n_shards": 1})
+
+    def test_tables_shapes_and_windows(self):
+        spec = ChaosSpec(slowdown=((1, 3, 2, 6),), degradation=((0, 1, 4, 8),),
+                         grants=((1, 2, 0, 4),), node_loss=(1, 5))
+        cz = compile_chaos(spec, n_steps=10, n_streams=2, n_shards=2,
+                           n_pages=16, placement="interleave", base_budget=4)
+        assert cz["dilation"].shape == (10, 2)
+        assert list(cz["dilation"][:, 1]) == [1, 1, 3, 3, 3, 3, 1, 1, 1, 1]
+        assert list(cz["budget"][:, 0]) == [4, 4, 4, 4, 1, 1, 1, 1, 4, 4]
+        assert list(cz["grant"][:, 1])[:4] == [2, 2, 2, 2]
+        assert int(cz["grant"][5, 1]) == INF
+        assert cz["t_fail"] == 5
+        # interleave: odd pages homed on shard 1 die and re-home to shard 0
+        assert list(cz["dead_pages"]) == list(range(1, 16, 2))
+        assert np.all(cz["home"][1][cz["dead_pages"]] == 0)
+        assert np.all(cz["home"][0] == np.arange(16) % 2)
+
+    def test_rehome_is_deterministic_and_avoids_dead(self):
+        for G in (2, 3, 4):
+            for dead in range(G):
+                for p in range(32):
+                    h = rehome_shard(p, dead, dead, G)
+                    assert 0 <= h < G and h != dead
+                    assert h == rehome_shard(p, dead, dead, G)
+                # a surviving page never moves
+                alive = (dead + 1) % G
+                assert rehome_shard(5, alive, dead, G) == alive
+
+
+class TestPageAllocatorRecycle:
+    def test_recycle_round_trip(self):
+        al = PageAllocator(8)
+        a = al.alloc_seq(1, 3)
+        b = al.alloc_seq(2, 3)
+        assert al.in_use == 6
+        # yank one page from each owner + one already-free page
+        n = al.recycle([a[1], b[0], 7])
+        assert n == 2
+        assert al.in_use == 4
+        assert al.owned[1] == [a[0], a[2]]
+        assert al.owned[2] == b[1:]
+        # reclaimed pages are allocatable again
+        c = al.alloc_seq(3, 4)
+        assert set(c) & {a[1], b[0]}
+        # freeing an owner whose pages were recycled is still consistent
+        al.free_seq(1)
+        al.free_seq(2)
+        al.free_seq(3)
+        assert al.in_use == 0 and sorted(al.free) == list(range(8))
+
+    def test_recycle_whole_owner_removes_entry(self):
+        al = PageAllocator(4)
+        pages = al.alloc_seq(9, 2)
+        assert al.recycle(pages) == 2
+        assert 9 not in al.owned
+        assert al.free_seq(9) == 0
+
+
+class TestEngineChaos:
+    """Event-engine fault hooks: sanity, not bit-pinned (continuous clock)."""
+
+    def _tenants(self, n=3):
+        return [TenantSpec(f"t{i}", [(j * 3 + i * 7) % 64
+                                     for j in range(150)], home_node=i % 2)
+                for i in range(n)]
+
+    def test_slowdown_stretches_makespan(self):
+        base = FabricScenario(tenants=self._tenants(), n_nodes=2, n_pages=64,
+                              placement="interleave", seed=1)
+        slow = FabricScenario(tenants=self._tenants(), n_nodes=2, n_pages=64,
+                              placement="interleave", seed=1,
+                              chaos=ChaosSpec(slowdown=((0, 8, 50, 10_000),
+                                                        (1, 8, 50, 10_000))))
+        r0, r1 = run_fabric(base), run_fabric(slow)
+        assert r1.makespan > 1.5 * r0.makespan
+
+    def test_node_loss_completes_and_rehomes(self):
+        spec = ChaosSpec(node_loss=(1, 500),
+                         degradation=((0, 1, 100, 2000),),
+                         grants=((0, 8, 50, 1500),))
+        r = run_fabric(FabricScenario(tenants=self._tenants(), n_nodes=2,
+                                      n_pages=64, placement="interleave",
+                                      seed=1, chaos=spec))
+        assert all(t.completion_time > 0 for t in r.tenants)
+
+    def test_node_loss_on_single_node_rejected(self):
+        with pytest.raises(ValueError):
+            run_fabric(FabricScenario(tenants=self._tenants(1), n_nodes=1,
+                                      n_pages=64, placement="interleave",
+                                      seed=1,
+                                      chaos=ChaosSpec(node_loss=(0, 100))))

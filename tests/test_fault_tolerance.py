@@ -1,0 +1,150 @@
+"""Fault tolerance: restart-from-checkpoint bit-exactness + watchdog.
+
+The contract (``repro.runtime.fault_tolerance``): any worker can die at
+any step and the resumed run must produce a bit-exact state trajectory —
+checkpoints carry everything, steps are pure functions of (state, step).
+A seeded property loop kills the trainer at random steps under random
+checkpoint cadences and compares against the undisturbed run; a
+hypothesis variant widens the net when the library is installed.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:                       # deterministic tests still run
+    HAVE_HYPOTHESIS = False
+
+from repro.runtime.fault_tolerance import Watchdog, run_with_restarts
+
+
+def _step(state: int, step: int) -> int:
+    """Deterministic integer trajectory: a cheap stand-in for train_step
+    whose every intermediate value depends on all prior steps."""
+    return (state * 6364136223846793005 + step + 1) % (1 << 63)
+
+
+class _Harness:
+    """In-memory checkpoint store + fault schedule."""
+
+    def __init__(self, kill_steps):
+        self.ckpt = None          # (state, step)
+        self.kill_steps = sorted(kill_steps, reverse=True)
+        self.saves = 0
+
+    def make_state(self):
+        return 1
+
+    def train_one_step(self, state, step):
+        if self.kill_steps and step == self.kill_steps[-1]:
+            self.kill_steps.pop()
+            raise RuntimeError(f"node died at step {step}")
+        return _step(state, step)
+
+    def save_state(self, state, step):
+        self.saves += 1
+        self.ckpt = (state, step)
+
+    def restore_state(self):
+        return self.ckpt
+
+
+def _clean_run(n_steps: int) -> int:
+    state = 1
+    for step in range(n_steps):
+        state = _step(state, step)
+    return state
+
+
+def _check_one(n_steps: int, save_every: int, kills: list[int]) -> None:
+    h = _Harness(kills)
+    state, restarts = run_with_restarts(
+        h.make_state, h.train_one_step, h.save_state, h.restore_state,
+        n_steps=n_steps, save_every=save_every,
+        max_restarts=len(kills) + 1)
+    assert state == _clean_run(n_steps), \
+        f"trajectory diverged (kills={kills}, save_every={save_every})"
+    assert restarts == len(kills)
+    assert h.ckpt == (state, n_steps)     # final checkpoint committed
+
+
+class TestBitExactResume:
+    def test_seeded_property_random_kills(self):
+        rng = np.random.default_rng(97)
+        for _ in range(30):
+            n_steps = int(rng.integers(1, 40))
+            save_every = int(rng.integers(1, 10))
+            n_kills = int(rng.integers(0, 4))
+            # a step may be killed repeatedly (the same node dying twice)
+            kills = sorted(int(rng.integers(0, n_steps))
+                           for _ in range(n_kills))
+            _check_one(n_steps, save_every, kills)
+
+    @pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+    def test_hypothesis_property(self):
+        @settings(max_examples=50, deadline=None)
+        @given(n_steps=hst.integers(1, 50), save_every=hst.integers(1, 12),
+               kills=hst.lists(hst.integers(0, 49), max_size=3))
+        def prop(n_steps, save_every, kills):
+            _check_one(n_steps, save_every,
+                       [k for k in kills if k < n_steps])
+        prop()
+
+    def test_resume_skips_completed_prefix(self):
+        """After a kill past a checkpoint, completed steps do not re-run."""
+        seen = []
+
+        class H(_Harness):
+            def train_one_step(self, state, step):
+                seen.append(step)
+                return super().train_one_step(state, step)
+
+        h = H([7])
+        run_with_restarts(h.make_state, h.train_one_step, h.save_state,
+                          h.restore_state, n_steps=10, save_every=5,
+                          max_restarts=1)
+        # steps 0-6 ran, step 7 died mid-call, resume from the step-5
+        # checkpoint — never from step 0
+        assert seen == list(range(0, 8)) + list(range(5, 10))
+
+
+class TestRestartExhaustion:
+    def test_reraises_after_max_restarts(self):
+        h = _Harness([3, 3, 3, 3, 3])     # dies every attempt
+        calls = []
+        with pytest.raises(RuntimeError, match="died at step 3"):
+            run_with_restarts(h.make_state, h.train_one_step, h.save_state,
+                              h.restore_state, n_steps=10, save_every=2,
+                              max_restarts=2, on_restart=calls.append)
+        # initial attempt + 2 restarts all failed; the 3rd failure re-raises
+        assert calls == [1, 2, 3]
+
+
+class TestWatchdog:
+    def test_stop_joins_thread(self):
+        wd = Watchdog(timeout=0.05).start()
+        wd.beat()
+        wd.stop()
+        assert not wd._thread.is_alive()
+        assert not wd.stalled
+
+    def test_stall_fires_and_stop_is_clean(self):
+        fired = threading.Event()
+        wd = Watchdog(timeout=0.05, on_stall=fired.set).start()
+        assert fired.wait(2.0)
+        assert wd.stalled
+        wd.stop()
+        assert not wd._thread.is_alive()
+
+    def test_beats_prevent_stall(self):
+        wd = Watchdog(timeout=0.2).start()
+        for _ in range(5):
+            time.sleep(0.04)
+            wd.beat()
+        wd.stop()
+        assert not wd.stalled

@@ -1,0 +1,76 @@
+"""StepTimeMonitor: EWMA step-time straggler detection (runtime layer).
+
+The monitor is wired into the serving driver's per-token decode loop
+(``repro.launch.serve``); these pins keep its flagging semantics stable:
+outliers are flagged but never contaminate the baseline, the warmup
+prefix never flags (first steps include compilation), and the summary
+reports exactly what the launcher escalates on.
+"""
+
+import pytest
+
+from repro.runtime.straggler import StepTimeMonitor
+
+
+class TestOutlierImmunity:
+    def test_spike_is_flagged_but_ewma_unchanged(self):
+        mon = StepTimeMonitor(alpha=0.1, threshold=2.0, warmup=3)
+        for _ in range(10):
+            mon.record(1.0)
+        baseline = mon.ewma
+        assert baseline == pytest.approx(1.0)
+        assert mon.record(10.0) is True
+        # the outlier does not move the baseline...
+        assert mon.ewma == pytest.approx(baseline)
+        # ...so an immediately following normal step is not flagged
+        assert mon.record(1.0) is False
+
+    def test_repeated_spikes_all_flagged(self):
+        mon = StepTimeMonitor(warmup=2)
+        for _ in range(5):
+            mon.record(1.0)
+        flags = [mon.record(50.0) for _ in range(4)]
+        assert flags == [True] * 4
+        assert mon.flags == 4
+        assert mon.ewma == pytest.approx(1.0)
+
+    def test_gradual_drift_tracks_without_flagging(self):
+        mon = StepTimeMonitor(alpha=0.5, threshold=2.0, warmup=2)
+        dt = 1.0
+        for _ in range(30):
+            assert mon.record(dt) is False
+            dt *= 1.2            # 20%/step stays under the 2x threshold
+        assert mon.ewma > 5.0    # the baseline followed the drift
+
+
+class TestWarmupSuppression:
+    def test_spikes_inside_warmup_not_flagged(self):
+        mon = StepTimeMonitor(warmup=5)
+        assert mon.record(1.0) is False          # seeds the EWMA
+        for _ in range(4):                        # counts 2..5 <= warmup
+            assert mon.record(100.0) is False
+        assert mon.flags == 0
+
+    def test_first_step_after_warmup_can_flag(self):
+        mon = StepTimeMonitor(warmup=2, threshold=2.0)
+        mon.record(1.0)
+        mon.record(1.0)
+        assert mon.record(10.0) is True
+
+
+class TestSummary:
+    def test_counts_and_history(self):
+        mon = StepTimeMonitor(warmup=1)
+        mon.record(1.0)
+        mon.record(1.0)
+        mon.record(9.0)
+        mon.record(1.0)
+        s = mon.summary()
+        assert s["steps"] == 4
+        assert s["straggler_steps"] == 1
+        assert s["ewma"] == pytest.approx(1.0)
+        assert mon.history == [1.0, 1.0, 9.0, 1.0]
+
+    def test_empty_monitor(self):
+        s = StepTimeMonitor().summary()
+        assert s == {"steps": 0, "ewma": None, "straggler_steps": 0}
