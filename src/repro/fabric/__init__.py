@@ -30,10 +30,11 @@ from .metrics import (FabricReport, TenantReport, jain_index,
                       percentile_summary, slowdowns)
 from .shardstep import run_shardstep
 from .sim import FabricScenario, run_fabric, run_single_stream
-from .tenants import Tenant, TenantSpec
+from .tenants import ArrivalProcess, Tenant, TenantSpec
 
 __all__ = [
-    "ARBITRATIONS", "ChaosSpec", "EventEngine", "FabricLink", "FabricReport",
+    "ARBITRATIONS", "ArrivalProcess", "ChaosSpec", "EventEngine",
+    "FabricLink", "FabricReport",
     "FabricScenario", "LinkStepReport", "Request", "Tenant", "TenantReport",
     "TenantSpec", "compile_chaos", "est_init", "est_step", "jain_index",
     "percentile_summary", "rehome_shard", "run_fabric", "run_linkstep",

@@ -40,6 +40,73 @@ def tier_of(model_name: str) -> str:
     return "rdma"
 
 
+@dataclasses.dataclass(frozen=True)
+class ArrivalProcess:
+    """Seeded arrival-gap generator shared by tenants and the serving engine.
+
+    One pure description of the three workload shapes (constant / bursty /
+    churn) with two consumers:
+
+    * :meth:`gap` — the *access*-level semantics ``Tenant.gap_after_access``
+      delegates to: extra idle time after access ``idx - 1`` completed (the
+      cursor has already advanced to ``idx``), plus a restart flag when a
+      churn boundary was crossed. Draws come from the caller's rng so the
+      event-engine behavior is bit-identical to the pre-factored code.
+    * :meth:`arrival_times` / :meth:`arrival_steps` — the *request*-level
+      semantics the continuous-batching serving engine consumes
+      (:mod:`repro.serving`): absolute arrival times of ``n`` requests
+      (request 0 at ``t = 0``, then cumulative gaps), without instantiating
+      fabric ``Tenant``s. Deterministic given ``seed``.
+    """
+
+    kind: str = "constant"              # constant | bursty | churn
+    think_time: float = 0.0
+    burst_len: int = 64
+    idle_time: float = 200.0            # mean off-period (µs)
+    churn_every: int = 0
+    churn_downtime: float = 500.0
+
+    def __post_init__(self):
+        if self.kind not in ("constant", "bursty", "churn"):
+            raise ValueError(f"unknown arrival kind {self.kind!r}; expected "
+                             "constant | bursty | churn")
+
+    def gap(self, rng: np.random.Generator, idx: int,
+            n_total: int) -> tuple[float, bool]:
+        """``(extra idle time before item idx, churn-restart flag)``.
+
+        ``idx`` is the *next* item's index (the cursor after the completed
+        access / the arriving request's ordinal); boundary draws only
+        happen while ``idx < n_total`` so a finished stream never burns an
+        rng draw.
+        """
+        gap = self.think_time
+        restart = False
+        if self.kind == "bursty" and idx < n_total \
+                and idx % max(1, self.burst_len) == 0:
+            gap += float(rng.exponential(self.idle_time))
+        if self.kind == "churn" and self.churn_every > 0 \
+                and idx < n_total and idx % self.churn_every == 0:
+            restart = True
+            gap += self.churn_downtime
+        return gap, restart
+
+    def arrival_times(self, n: int, seed: int = 0) -> np.ndarray:
+        """Absolute arrival times (µs) of ``n`` requests; ``t[0] == 0``."""
+        rng = np.random.default_rng(seed)
+        times = np.zeros(n, np.float64)
+        for i in range(1, n):
+            g, _ = self.gap(rng, i, n)
+            times[i] = times[i - 1] + g
+        return times
+
+    def arrival_steps(self, n: int, seed: int = 0,
+                      step_us: float = 1000.0) -> np.ndarray:
+        """Arrival times quantized onto the engine's step clock."""
+        return np.floor(self.arrival_times(n, seed) / max(step_us, 1e-9)
+                        ).astype(np.int64)
+
+
 @dataclasses.dataclass
 class TenantSpec:
     name: str
@@ -68,6 +135,14 @@ class TenantSpec:
             return self.tier
         return tier_of(self.model if isinstance(self.model, str)
                        else self.model.name)
+
+    def arrival_process(self) -> ArrivalProcess:
+        """The spec's arrival behavior as a reusable :class:`ArrivalProcess`."""
+        return ArrivalProcess(kind=self.arrival, think_time=self.think_time,
+                              burst_len=self.burst_len,
+                              idle_time=self.idle_time,
+                              churn_every=self.churn_every,
+                              churn_downtime=self.churn_downtime)
 
 
 class Tenant:
@@ -118,15 +193,10 @@ class Tenant:
         the latency already charged); also flags churn restarts. ``now``
         is the completion time of the access, used to classify in-flight
         prefetches discarded by a churn restart."""
-        gap = self.spec.think_time
-        if self.spec.arrival == "bursty" and self.idx < len(self.trace) \
-                and self.idx % max(1, self.spec.burst_len) == 0:
-            gap += float(self.rng.exponential(self.spec.idle_time))
-        if self.spec.arrival == "churn" and self.spec.churn_every > 0 \
-                and self.idx < len(self.trace) \
-                and self.idx % self.spec.churn_every == 0:
+        gap, restart = self.spec.arrival_process().gap(
+            self.rng, self.idx, len(self.trace))
+        if restart:
             self.cold_restart(now)
-            gap += self.spec.churn_downtime
         return gap
 
     def cold_restart(self, now: float | None = None) -> None:

@@ -1,21 +1,26 @@
-"""Batched serving driver: prefill + decode with tiered paged-KV serving.
+"""Serving front-end: request lifecycle CLI over :mod:`repro.serving`.
 
-Serves batched requests against a (smoke-scale on CPU) model: prefill the
-prompt batch, then greedy-decode N tokens. ``--paged`` additionally serves
-decode attention through the **tiered paged-KV cache**
-(:mod:`repro.paging.tiered_kv`): the model's real decoded K/V is mirrored
-into the cold paged pool, each decode step appends the new token's KV page
-bytes (invalidating the stale hot copy), every request's stream sweeps its
-context pages through a Leap-managed hot pool — sync batched or async
-issue/wait (``--async-datapath``), optionally under a shared link budget
-(``--streams`` / ``--link-budget``, DESIGN.md §5) — and attention runs over
-hot slots via the remapped page table. The driver pins the headline
-equivalence every step: tiered logits must be bit-identical to the
-flat-pool :func:`repro.paging.kv_cache.paged_decode_attention`
-(non-zero exit on mismatch, so CI can gate on it).
+Two serving disciplines behind one CLI:
+
+* ``--arrival batch`` (default) — the legacy lock-step loop: prefill the
+  whole batch, greedy-decode ``--gen`` tokens, and with ``--paged`` replay
+  the decode window through the tiered paged-KV data path
+  (:func:`repro.serving.batch_driver.serve_batch_tiered`) with the §6.4
+  flat/tiered bit-identity pin every step.
+* ``--arrival constant|bursty|churn`` — the **continuous-batching engine**
+  (:class:`repro.serving.engine.ServingEngine`): requests arrive on a
+  seeded :class:`repro.fabric.tenants.ArrivalProcess`, are admitted into
+  slots as capacity frees up, prefill in chunks interleaved with in-flight
+  decodes, and recycle their pages on finish. The same §6.4 pin runs every
+  step over the dynamic batch composition, and the report carries
+  per-request TTFT + p50–p99.9 token-latency ladders
+  (:mod:`repro.obs.metrics`). ``--gang`` flips admission to the lock-step
+  baseline (all slots drain before the next gang enters) for A/B runs.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2_5_3b --smoke \
       --batch 4 --prompt-len 32 --gen 16 --paged --async-datapath
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2_5_3b --smoke \
+      --arrival bursty --requests 8 --paged --async-datapath
 """
 
 from __future__ import annotations
@@ -29,44 +34,17 @@ import numpy as np
 
 from repro import configs as cfglib
 from repro.models.model import build_model
-from repro.obs.export import write_chrome_trace, write_jsonl
+from repro.obs.export import (write_chrome_trace, write_jsonl,
+                              write_request_jsonl)
 from repro.obs.metrics import Registry
-from repro.obs.trace import (Event, decode_sweep_events, events_to_counts,
-                             summary_events)
-from repro.paging.kv_cache import (append_kv, init_paged_kv,
-                                   linear_page_table, paged_decode_attention)
-from repro.paging.sharded_pool import ShardedPoolCfg
-from repro.paging.tiered_kv import (TieredKV, tiered_attention, tiered_init,
-                                    tiered_invalidate, tiered_min_slots,
-                                    tiered_stats, tiered_sweep)
 from repro.runtime.straggler import StepTimeMonitor
+from repro.serving.batch_driver import serve_batch_tiered
+from repro.serving.engine import ServeConfig, ServingEngine, build_executor
 
-#: event-type totals that must reproduce the pool counters bit-exactly
-#: whenever a trace is written (DESIGN.md §8.2)
-_PINNED_COUNTERS = ("hits", "misses", "partial_hits", "prefetch_hits",
-                    "prefetch_issued", "deferred", "ring_drops", "pollution")
-
-
-def _find_dense_kv(state) -> tuple[jax.Array, jax.Array] | tuple[None, None]:
-    """Pull one attention block's dense KV cache out of a decode state.
-
-    Returns ``(k, v)`` each ``[B, T, Hkv, dh]`` (first attention layer of
-    the scan period / the self-attention stack), or ``(None, None)`` for
-    cache-free families (pure mamba/xlstm) — the caller then mirrors
-    synthetic KV so the tiered data path is still exercised end to end.
-    """
-    cands = []
-    if isinstance(state, dict):
-        cands.extend(b for b in state.get("blocks", ()) if isinstance(b, dict))
-        if isinstance(state.get("self_kv"), dict):
-            cands.append(state["self_kv"])
-    for b in cands:
-        if "k" in b and "v" in b and getattr(b["k"], "ndim", 0) == 5:
-            return b["k"][0], b["v"][0]
-    return None, None
+ARRIVALS = ("batch", "constant", "bursty", "churn")
 
 
-def main(argv=None) -> dict:
+def build_parser() -> argparse.ArgumentParser:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2_5_3b")
     ap.add_argument("--smoke", action="store_true")
@@ -131,15 +109,61 @@ def main(argv=None) -> dict:
                          "trace-event JSON (Perfetto-loadable; per-stream "
                          "tracks + link/NIC counter tracks) plus a .jsonl "
                          "sibling. Decoding is host-side and post-hoc: the "
-                         "jitted serving path is unchanged (DESIGN.md §8)")
+                         "jitted serving path is unchanged (DESIGN.md §8). "
+                         "Continuous-batching runs additionally emit the "
+                         "per-request lifecycle track (admit/prefill/"
+                         "decode/evict, keyed by request id) and a "
+                         ".requests.jsonl sibling")
+    # -- continuous-batching engine (DESIGN.md §10) --------------------------
+    ap.add_argument("--arrival", choices=ARRIVALS, default="batch",
+                    help="request arrival discipline. 'batch' = legacy "
+                         "lock-step full-batch loop; the rest drive the "
+                         "continuous-batching engine with the named "
+                         "fabric/tenants.py arrival process")
+    ap.add_argument("--requests", type=int, default=8,
+                    help="continuous engine: total requests to serve")
+    ap.add_argument("--slots", type=int, default=None,
+                    help="continuous engine: concurrent serving slots "
+                         "(default: --batch)")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="continuous engine: prompt tokens consumed per "
+                         "engine step per slot (chunked prefill)")
+    ap.add_argument("--length-jitter", type=float, default=0.0,
+                    help="continuous engine: per-request length "
+                         "heterogeneity — prompt/gen drawn uniformly from "
+                         "[len*(1-jitter), len] (seeded)")
+    ap.add_argument("--think-time", type=float, default=1000.0,
+                    help="continuous engine: arrival-process mean gap (µs)")
+    ap.add_argument("--gang", action="store_true",
+                    help="continuous engine: lock-step gang admission "
+                         "(the fixed-batch baseline) instead of continuous")
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="continuous engine: cold-pool pages (default "
+                         "slots * pages-per-request; smaller values make "
+                         "admission wait on memory)")
+    ap.add_argument("--synthetic", action="store_true",
+                    help="continuous engine: synthetic executor (PRNG K/V, "
+                         "no model) — real scheduling + data path + pins")
+    ap.add_argument("--seed", type=int, default=0)
+    return ap
+
+
+def main(argv=None) -> dict:
+    ap = build_parser()
     args = ap.parse_args(argv)
-    if args.trace and not args.paged:
+    if args.trace and not (args.paged or args.arrival != "batch"):
         ap.error("--trace requires --paged (only the tiered data path "
                  "emits the page-lifecycle info arrays)")
     if args.chaos and not args.paged:
         ap.error("--chaos requires --paged (faults are injected into the "
                  "paged-KV sweep's fabric model)")
+    if args.arrival != "batch":
+        return _main_continuous(args)
+    return _main_batch(args)
 
+
+def _main_batch(args) -> dict:
+    """Legacy lock-step path: batched prefill + decode (+ tiered replay)."""
     cfg = (cfglib.get_smoke_config(args.arch) if args.smoke
            else cfglib.get_config(args.arch))
     model = build_model(cfg)
@@ -192,8 +216,9 @@ def main(argv=None) -> dict:
     }
 
     if args.paged:
-        result.update(_serve_tiered(cfg, state, args, B, prompt_len, max_len,
-                                    reg=reg, trace_path=args.trace))
+        result.update(serve_batch_tiered(cfg, state, args, B, prompt_len,
+                                         max_len, reg=reg,
+                                         trace_path=args.trace))
         if not result["tiered_equiv_ok"]:
             print(result)
             msg = "tiered/flat decode attention mismatch"
@@ -212,246 +237,62 @@ def main(argv=None) -> dict:
     return result
 
 
-def _serve_tiered(cfg, state, args, B: int, prompt_len: int,
-                  max_len: int, reg: Registry | None = None,
-                  trace_path: str | None = None) -> dict:
-    """Replay the decode window through the tiered paged-KV data path.
+def _main_continuous(args) -> dict:
+    """Continuous-batching path: request lifecycle over the serving engine."""
+    scfg = ServeConfig(
+        requests=args.requests,
+        slots=args.slots if args.slots is not None else args.batch,
+        prompt_len=args.prompt_len, gen=args.gen,
+        length_jitter=args.length_jitter,
+        page_size=args.page_size, prefill_chunk=args.prefill_chunk,
+        chunk=args.chunk, ring_size=args.ring_size,
+        async_datapath=args.async_datapath, link_budget=args.link_budget,
+        shards=args.shards, placement=args.placement,
+        far_delay=args.far_delay, arrival=args.arrival,
+        think_time=args.think_time, seed=args.seed, gang=args.gang,
+        pool_pages=args.pool_pages, trace=bool(args.trace))
+    executor = build_executor(None if args.synthetic else args.arch,
+                              smoke=args.smoke, seed=args.seed)
+    engine = ServingEngine(scfg, executor)
+    result = engine.run()
 
-    Mirrors the model's real decoded K/V into the cold paged pool, then per
-    decode step: append the step's KV (``append_kv``), invalidate the
-    written page in every stream's hot tier, demand-sweep each request's
-    context pages through its hot pool, and serve attention from hot slots
-    — asserting bit-identity against the flat pool every step.
+    if args.trace:
+        counters = None
+        if engine.link_hist:
+            counters = {"link_demand_fetches": np.concatenate(engine.link_hist)}
+            if args.shards > 1:
+                counters["shard_demand_fetches"] = np.concatenate(
+                    engine.shard_hist)
+        write_chrome_trace(args.trace, engine.events, counters,
+                           request_phases=engine.phases)
+        write_jsonl(args.trace + ".jsonl", engine.events)
+        write_request_jsonl(args.trace + ".requests.jsonl", engine.phases)
+        result["trace_path"] = args.trace
 
-    With ``trace_path`` the per-sweep info arrays are decoded host-side
-    (after the timed window — the jitted path is untouched) into the
-    page-lifecycle event log on the global chunk-step clock, written as a
-    Chrome trace + JSONL, and the event-type totals are pinned bit-exact
-    against the final pool counters.
-    """
-    ps = args.page_size
-    npps = -(-max_len // ps)
-    n_pages = B * npps
-    hkv, hq, dh = cfg.n_kv_heads, cfg.n_heads, cfg.head_dim
-    n_streams = args.streams if args.streams > 1 else B
-
-    kd, vd = _find_dense_kv(state)
-    if kd is None:
-        # cache-free family: synthetic KV, the data path is still real
-        kd = jax.random.normal(jax.random.PRNGKey(7),
-                               (B, max_len, hkv, dh), jnp.dtype(cfg.dtype))
-        vd = jax.random.normal(jax.random.PRNGKey(8),
-                               (B, max_len, hkv, dh), jnp.dtype(cfg.dtype))
-
-    def pad_to(x, T):
-        if x.shape[1] >= T:
-            return x[:, :T]
-        return jnp.concatenate(
-            [x, jnp.zeros((B, T - x.shape[1]) + x.shape[2:], x.dtype)], 1)
-
-    kd, vd = pad_to(kd, npps * ps), pad_to(vd, npps * ps)
-    pt_full = linear_page_table(B, npps)
-
-    # Cold tier: mirror the prompt prefix now; decode positions are appended
-    # step by step inside the replay loop (the real write path).
-    pool = init_paged_kv(1, n_pages, ps, hkv, dh, kd.dtype)
-    pos_ids = jnp.arange(npps * ps)
-    prefix = lambda x: jnp.where((pos_ids < prompt_len)[None, :, None, None],
-                                 x, 0)
-    to_pages = lambda x: x.reshape(B * npps, ps, hkv, dh)
-    pool = {"k": pool["k"].at[0, pt_full.reshape(-1)].set(
-                to_pages(prefix(kd))),
-            "v": pool["v"].at[0, pt_full.reshape(-1)].set(
-                to_pages(prefix(vd)))}
-
-    # Satellite fix: n_slots derived from the sweep geometry (the documented
-    # residency floor), not a hardcoded constant that ignores pw_max/ring.
-    proto = TieredKV(n_pages, 1, ps, hkv, dh, chunk=args.chunk,
-                     ring_size=args.ring_size)
-    geom = TieredKV(n_pages, tiered_min_slots(npps, proto), ps, hkv, dh,
-                    chunk=args.chunk, ring_size=args.ring_size)
-    tstate = tiered_init(geom, n_streams, kd.dtype)
-    rows = jnp.stack([pt_full[s % B] for s in range(n_streams)])
-
-    fabric = mesh = None
-    if args.shards > 1:
-        from repro.launch.mesh import make_fabric_mesh
-        if n_pages % args.shards:
-            raise SystemExit(f"--shards {args.shards} must divide the "
-                             f"{n_pages}-page cold pool")
-        fabric = ShardedPoolCfg(n_shards=args.shards,
-                                placement=args.placement,
-                                link_budget=args.link_budget,
-                                near_delay=1, far_delay=args.far_delay)
-        mesh = make_fabric_mesh(args.shards)
-        # append_kv mutates the cold pool every step, so tiered_sweep
-        # re-places the whole pool home-major per call — fine for this
-        # pin-every-step smoke driver (which also recomputes the flat
-        # reference each step); a production loop would keep the pool
-        # permanently placed and route append_kv writes through place_perm
-
-    reg = reg if reg is not None else Registry()
-    n_chunks = -(-npps // geom.chunk)      # global clock: chunk steps
-    events = [] if trace_path else None
-    link_hist, shard_hist = [], []
-    equiv_ok = True
-    first_bad_step = None
-    deferred = partials = 0
-    shard_demand = np.zeros(args.shards, np.int64)
-    for t in range(args.gen - 1):
-        pos = prompt_len + t
-        pool = append_kv(pool, jnp.int32(0), kd[:, pos], vd[:, pos],
-                         pt_full, jnp.int32(pos))
-        written = pt_full[:, pos // ps]                      # [B]
-        inv_pages = jnp.stack([written[s % B] for s in range(n_streams)])
-        tstate = tiered_invalidate(tstate, inv_pages[:, None])
-        cold = {"k": pool["k"][0], "v": pool["v"][0]}
-        lengths = jnp.full((n_streams,), pos + 1, jnp.int32)
-        q = jax.random.normal(jax.random.PRNGKey(100 + t),
-                              (n_streams, 1, hq, dh), jnp.dtype(cfg.dtype))
-        # timed window covers only the serving path (sweep + attention);
-        # the flat-pool reference, the bitwise pin check and the host-side
-        # event decode all run outside it
-        with reg.span("tiered_sweep") as sp:
-            tstate, info = tiered_sweep(tstate, cold, rows, geom,
-                                        async_datapath=args.async_datapath,
-                                        link_budget=args.link_budget,
-                                        fabric=fabric, mesh=mesh)
-            sp.sync = info
-        with reg.span("tiered_attention") as sp:
-            tiered, resident = tiered_attention(q, tstate, rows, lengths)
-            sp.sync = tiered
-        flat = paged_decode_attention(
-            q, pool, jnp.int32(0), rows, lengths)
-        step_ok = bool(resident) and bool(
-            (np.asarray(tiered) == np.asarray(flat)).all())
-        if not step_ok and first_bad_step is None:
-            first_bad_step = t
-        equiv_ok &= step_ok
-        deferred += int(np.asarray(info["deferred"]).sum())
-        partials += int(np.asarray(info["partial_hit"]).sum())
-        if fabric is not None:
-            shard_demand += np.asarray(info["shard_demand_fetches"]).sum(0)
-        if events is not None:
-            step0 = t * n_chunks           # each sweep advances the stream
-            inv_np = np.asarray(inv_pages)  # clock by n_chunks steps
-            events.extend(Event("invalidate", step0, s, page=int(inv_np[s]))
-                          for s in range(n_streams))
-            events.extend(decode_sweep_events(info, step_offset=step0))
-            link_hist.append(np.asarray(info["link_demand_fetches"]))
-            shard_hist.append(np.asarray(info["shard_demand_fetches"]))
-
-    per = [tiered_stats(tstate, s) for s in range(n_streams)]
-    t_tiered = (reg.histogram("tiered_sweep").total
-                + reg.histogram("tiered_attention").total)
-    out = {
-        "tiered_equiv_ok": equiv_ok,
-        "tiered_streams": n_streams,
-        "tiered_n_slots": geom.n_slots,
-        "tiered_hot_frac": round(n_streams * geom.n_slots / n_pages, 3),
-        "tiered_decode_s": round(t_tiered, 3),
-        "paged_prefetch_hit_rate": round(
-            float(np.mean([p["coverage"] for p in per])), 3),
-        "paged_pollution": sum(p["pollution"] for p in per),
-        "paged_ring_drops": sum(p["ring_drops"] for p in per),
-    }
-    if args.async_datapath:
-        out["paged_partial_hits"] = partials
-        out["paged_latency_hidden_frac"] = round(
-            float(np.mean([p["latency_hidden_frac"] for p in per])), 3)
-    if args.link_budget is not None:
-        out["paged_link_budget"] = args.link_budget
-        out["paged_deferred"] = deferred
-    if args.shards > 1:
-        out["paged_shards"] = args.shards
-        out["paged_placement"] = args.placement
-        out["paged_shard_demand"] = shard_demand.tolist()
-    if first_bad_step is not None:
-        out["tiered_first_bad_step"] = first_bad_step
-    spans = reg.summary()["histograms"]
-    out["span_sweep_ms"] = round(spans["tiered_sweep"]["avg"] * 1e3, 3)
-    out["span_attention_ms"] = round(spans["tiered_attention"]["avg"] * 1e3, 3)
-    if events is not None:
-        events.extend(summary_events(per))
-        cnts = events_to_counts(events, n_streams)
-        totals_ok = all(cnts[s][k] == per[s][k] for s in range(n_streams)
-                        for k in _PINNED_COUNTERS)
-        counters = {"link_demand_fetches": np.concatenate(link_hist)}
-        if args.shards > 1:
-            counters["shard_demand_fetches"] = np.concatenate(shard_hist)
-        write_chrome_trace(trace_path, events, counters)
-        write_jsonl(trace_path + ".jsonl", events)
-        out["trace_path"] = trace_path
-        out["trace_events"] = len(events)
-        out["trace_totals_ok"] = totals_ok
-    if args.chaos:
-        out.update(_chaos_sidecar(args, rows, n_pages, n_streams))
-    return out
-
-
-def _chaos_sidecar(args, rows, n_pages: int, n_streams: int) -> dict:
-    """Replay the requests' context-page schedules under a ChaosSpec.
-
-    The sidecar drives the chaos-enabled sharded consume path
-    (DESIGN.md §9) over the same physical pages the tiered path serves:
-    each stream walks its context pages cyclically, the spec's faults
-    (stragglers / budget cuts / node loss / grant churn) hit the fabric
-    model, and the report compares the adaptive-deadline EWMA's per-shard
-    delay estimate against the true (dilated) delay at the end of the run
-    — the operator-facing "is my deadline model tracking the fabric"
-    signal.
-    """
-    from repro.fabric.chaos import EST_ONE, ChaosSpec, compile_chaos
-    from repro.paging.prefetch_serving import (PrefetchedStream,
-                                               stream_stats_at)
-    from repro.paging.sharded_pool import sharded_multi_stream_consume
-
-    with open(args.chaos) as f:
-        spec = ChaosSpec.from_json(f.read())
-    G = max(args.shards, 1)
-    if n_pages % G:
-        raise SystemExit(f"--chaos sidecar: {n_pages}-page pool not "
-                         f"divisible by {G} shards")
-    npps = rows.shape[1]
-    T = min(max(4 * npps, 48), 256)
-    rows_np = np.asarray(rows)
-    scheds = np.stack([rows_np[s][np.arange(T) % npps]
-                       for s in range(n_streams)]).astype(np.int32)
-    geom = PrefetchedStream(n_pages=n_pages, n_slots=n_pages, page_elems=4,
-                            ring_size=args.ring_size)
-    fab = ShardedPoolCfg(n_shards=G, placement=args.placement,
-                         link_budget=args.link_budget,
-                         near_delay=1, far_delay=args.far_delay)
-    cold = jnp.arange(n_pages * 4, dtype=jnp.float32).reshape(n_pages, 4)
-    st, _, info = sharded_multi_stream_consume(
-        cold, jnp.asarray(scheds), geom, fab, chaos=spec)
-    per = [stream_stats_at(st, s) for s in range(n_streams)]
-    faults = sum(p["faults"] for p in per)
-    hits = sum(p["prefetch_hits"] for p in per)
-    deferred = sum(p["deferred"] for p in per)
-    cz = compile_chaos(spec, n_steps=T, n_streams=n_streams, n_shards=G,
-                       n_pages=n_pages, placement=args.placement,
-                       base_budget=args.link_budget)
-    # final per-shard delay: estimate (stream-averaged EWMA, steps) vs the
-    # true dilated delay at the last step (stream-averaged near/far base)
-    est = np.asarray(info["est_q"], dtype=np.float64) / EST_ONE
-    home = np.arange(n_streams) % G
-    base = np.where(np.arange(G)[None, :] == home[:, None],
-                    1, args.far_delay)
-    true = base * np.asarray(cz["dilation"][-1], dtype=np.float64)[None, :]
-    return {
-        "chaos_spec": args.chaos,
-        "chaos_steps": T,
-        "chaos_shards": G,
-        "chaos_faults": faults,
-        "chaos_prefetch_hits": hits,
-        "chaos_deferred": deferred,
-        "chaos_timely_rate": round((hits - deferred) / max(1, faults), 3),
-        "chaos_pollution": sum(p["pollution"] for p in per),
-        "chaos_est_delay": [round(float(v), 2) for v in est.mean(0)],
-        "chaos_true_delay": [round(float(v), 2) for v in true.mean(0)],
-        "chaos_adaptive_deadline": spec.adaptive_deadline,
-    }
+    if not result["tiered_equiv_ok"]:
+        print(result)
+        raise SystemExit("tiered/flat decode attention mismatch under "
+                         "continuous batching (first bad step "
+                         f"{result.get('tiered_first_bad_step')})")
+    if result["requests_finished"] != args.requests:
+        print(result)
+        raise SystemExit(f"{result['requests_finished']}/{args.requests} "
+                         "requests finished")
+    if result["alloc_in_use_end"] != 0:
+        print(result)
+        raise SystemExit(f"page leak: {result['alloc_in_use_end']} pages "
+                         "still allocated after drain")
+    if result["pages_allocated"] != result["pages_recycled"]:
+        print(result)
+        raise SystemExit("page conservation violated: "
+                         f"{result['pages_allocated']} allocated vs "
+                         f"{result['pages_recycled']} recycled")
+    if args.trace and not result["trace_totals_ok"]:
+        print(result)
+        raise SystemExit("trace event totals diverge from pool counters "
+                         "(decode contract violation, DESIGN.md §8.2)")
+    print(result)
+    return result
 
 
 if __name__ == "__main__":

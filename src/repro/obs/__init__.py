@@ -10,19 +10,21 @@
 
 from .diff import (Divergence, assert_traces_equal, diff_report,
                    first_divergence)
-from .export import (read_jsonl, to_chrome_trace, write_chrome_trace,
-                     write_jsonl)
+from .export import (read_jsonl, read_request_jsonl, to_chrome_trace,
+                     write_chrome_trace, write_jsonl, write_request_jsonl)
 from .metrics import Registry, percentile_ladder
-from .trace import (AGGREGATE_KINDS, DEMAND_KINDS, KINDS, SUMMARY_KINDS,
-                    Event, TraceRecorder, debug_tap, decode_stream_events,
-                    decode_sweep_events, events_to_counts, home_of_host,
-                    summary_events)
+from .trace import (AGGREGATE_KINDS, DEMAND_KINDS, KINDS, REQUEST_PHASES,
+                    SUMMARY_KINDS, Event, RequestPhase, TraceRecorder,
+                    debug_tap, decode_stream_events, decode_sweep_events,
+                    events_to_counts, home_of_host, summary_events)
 
 __all__ = [
     "AGGREGATE_KINDS", "DEMAND_KINDS", "Divergence", "Event", "KINDS",
-    "Registry", "SUMMARY_KINDS", "TraceRecorder", "assert_traces_equal",
+    "REQUEST_PHASES", "Registry", "RequestPhase", "SUMMARY_KINDS",
+    "TraceRecorder", "assert_traces_equal",
     "debug_tap", "decode_stream_events", "decode_sweep_events",
     "diff_report", "events_to_counts", "first_divergence", "home_of_host",
-    "percentile_ladder", "read_jsonl", "summary_events", "to_chrome_trace",
-    "write_chrome_trace", "write_jsonl",
+    "percentile_ladder", "read_jsonl", "read_request_jsonl",
+    "summary_events", "to_chrome_trace",
+    "write_chrome_trace", "write_jsonl", "write_request_jsonl",
 ]

@@ -21,7 +21,7 @@ import json
 
 import numpy as np
 
-from .trace import Event
+from .trace import Event, RequestPhase
 
 #: Track-time layout of one lock step: wait/land phase, then demand
 #: service, then issue. Fractions of ``step_us``.
@@ -34,6 +34,7 @@ _DUR = {"land": 0.25, "defer": 0.2, "hit": 0.2, "partial": 0.25,
 
 _STREAM_PID = 0
 _LINK_PID = 1
+_REQUEST_PID = 2
 
 
 def _event_name(e: Event) -> str:
@@ -45,7 +46,8 @@ def _event_name(e: Event) -> str:
 
 
 def to_chrome_trace(events, counters: dict | None = None,
-                    step_us: float = 1000.0) -> dict:
+                    step_us: float = 1000.0,
+                    request_phases=None) -> dict:
     """Build the Chrome trace-event JSON object for an event stream.
 
     Args:
@@ -55,11 +57,18 @@ def to_chrome_trace(events, counters: dict | None = None,
         multi-series counter track (series per NIC/shard). Step ``t``
         samples at ``t * step_us``.
       step_us: track microseconds per lock step.
+      request_phases: optional iterable of
+        :class:`repro.obs.trace.RequestPhase` — the continuous-batching
+        request lifecycle. Each *request id* gets its own thread in a
+        third "requests" process (admit / prefill-chunk / decode spans,
+        evict instants), so a request's track stays contiguous even when
+        slot recycling moves it between page-stream tracks.
 
     Returns the ``{"traceEvents": [...], ...}`` dict; ``json.dump`` it (or
     use :func:`write_chrome_trace`) and load in Perfetto.
     """
     events = list(events)
+    phases = list(request_phases or ())
     max_step = max((e.step for e in events), default=0)
     out = [
         {"ph": "M", "pid": _STREAM_PID, "name": "process_name",
@@ -67,9 +76,30 @@ def to_chrome_trace(events, counters: dict | None = None,
         {"ph": "M", "pid": _LINK_PID, "name": "process_name",
          "args": {"name": "fabric link"}},
     ]
+    if phases:
+        out.append({"ph": "M", "pid": _REQUEST_PID, "name": "process_name",
+                    "args": {"name": "requests"}})
+        for r in sorted({p.req for p in phases}):
+            out.append({"ph": "M", "pid": _REQUEST_PID, "tid": r,
+                        "name": "thread_name",
+                        "args": {"name": f"request {r}"}})
     for s in sorted({e.stream for e in events}):
         out.append({"ph": "M", "pid": _STREAM_PID, "tid": s,
                     "name": "thread_name", "args": {"name": f"stream {s}"}})
+
+    for p in phases:
+        args = {"req": p.req, "slot": p.slot, "tokens": p.tokens,
+                "start": p.start, "end": p.end}
+        name = f"{p.kind} r{p.req}"
+        if p.end > p.start:
+            out.append({"ph": "X", "pid": _REQUEST_PID, "tid": p.req,
+                        "ts": p.start * step_us,
+                        "dur": (p.end - p.start) * step_us,
+                        "name": name, "cat": p.kind, "args": args})
+        else:
+            out.append({"ph": "i", "s": "t", "pid": _REQUEST_PID,
+                        "tid": p.req, "ts": p.start * step_us,
+                        "name": name, "cat": p.kind, "args": args})
 
     for e in events:
         step = e.step if e.step >= 0 else max_step + 1   # summaries at end
@@ -100,10 +130,11 @@ def to_chrome_trace(events, counters: dict | None = None,
 
 
 def write_chrome_trace(path: str, events, counters: dict | None = None,
-                       step_us: float = 1000.0) -> None:
+                       step_us: float = 1000.0, request_phases=None) -> None:
     """:func:`to_chrome_trace` straight to ``path``."""
     with open(path, "w") as f:
-        json.dump(to_chrome_trace(events, counters, step_us), f)
+        json.dump(to_chrome_trace(events, counters, step_us,
+                                  request_phases), f)
 
 
 def write_jsonl(path: str, events) -> None:
@@ -121,4 +152,22 @@ def read_jsonl(path: str) -> list[Event]:
             line = line.strip()
             if line:
                 out.append(Event(**json.loads(line)))
+    return out
+
+
+def write_request_jsonl(path: str, phases) -> None:
+    """One :class:`repro.obs.trace.RequestPhase` per line."""
+    with open(path, "w") as f:
+        for p in phases:
+            f.write(json.dumps(dataclasses.asdict(p)) + "\n")
+
+
+def read_request_jsonl(path: str) -> list[RequestPhase]:
+    """Inverse of :func:`write_request_jsonl` (lossless round trip)."""
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(RequestPhase(**json.loads(line)))
     return out

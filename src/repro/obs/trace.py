@@ -101,6 +101,43 @@ class Event:
                              f"expected one of {KINDS}")
 
 
+#: Request-lifecycle phase kinds, in lifecycle order (DESIGN.md §10).
+REQUEST_PHASES = ("admit", "prefill_chunk", "decode", "evict")
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestPhase:
+    """One span of a request's serving lifecycle, keyed by *request id*.
+
+    The page-lifecycle :class:`Event` stream is keyed by stream/slot index,
+    which continuous batching recycles across requests; this record is the
+    slot-reuse-proof view — ``req`` is the global request id, so a
+    request's admit wait, prefill chunks, decode window and eviction stay
+    one contiguous track no matter which slots served it.
+
+    Attributes:
+      kind:   one of :data:`REQUEST_PHASES`.
+      req:    global request id.
+      start:  first engine step of the phase (for ``admit``: arrival step).
+      end:    engine step the phase completed (exclusive for spans;
+              ``end == start`` renders as an instant, e.g. ``evict``).
+      slot:   serving slot during the phase (``-1`` while waiting).
+      tokens: tokens processed in the phase (prefill chunk size / decoded
+              token count; 0 where meaningless).
+    """
+    kind: str
+    req: int
+    start: int
+    end: int
+    slot: int = -1
+    tokens: int = 0
+
+    def __post_init__(self):
+        if self.kind not in REQUEST_PHASES:
+            raise ValueError(f"unknown request phase {self.kind!r}; "
+                             f"expected one of {REQUEST_PHASES}")
+
+
 def home_of_host(page: int, n_pages: int, n_shards: int,
                  placement: str) -> int:
     """Host-side ``repro.core.pool.page_home`` (same formula, plain ints)."""

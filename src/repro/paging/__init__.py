@@ -18,7 +18,8 @@ from .prefetch_serving import (PrefetchedStream, multi_stream_consume,
                                stream_step_async, stream_stats)
 from .tiered_kv import (TieredKV, tiered_attention, tiered_decode_step,
                         tiered_init, tiered_invalidate, tiered_min_slots,
-                        tiered_slot_table, tiered_stats, tiered_sweep)
+                        tiered_reset_stream, tiered_slot_table, tiered_stats,
+                        tiered_sweep)
 from .expert_stream import ExpertPrefetcher
 
 __all__ = ["PageAllocator", "append_kv", "init_paged_kv",
@@ -27,5 +28,5 @@ __all__ = ["PageAllocator", "append_kv", "init_paged_kv",
            "stream_init", "stream_step", "stream_step_async", "stream_stats",
            "TieredKV", "tiered_attention", "tiered_decode_step",
            "tiered_init", "tiered_invalidate", "tiered_min_slots",
-           "tiered_slot_table", "tiered_stats", "tiered_sweep",
-           "ExpertPrefetcher"]
+           "tiered_reset_stream", "tiered_slot_table", "tiered_stats",
+           "tiered_sweep", "ExpertPrefetcher"]

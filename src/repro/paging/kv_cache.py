@@ -100,19 +100,38 @@ def paged_decode_attention(q: jax.Array, pool: dict, layer: jax.Array,
 
 @dataclasses.dataclass
 class PageAllocator:
-    """Host-side page free-list (control plane for continuous batching)."""
+    """Host-side page free-list (control plane for continuous batching).
+
+    Besides the free list it keeps two pieces of bookkeeping the serving
+    engine's admission/eviction discipline leans on:
+
+    * **occupancy introspection** — :meth:`alive` (live sequence ids),
+      :attr:`free_count` and :meth:`occupancy`, so an admission policy can
+      reserve capacity without poking at internals.
+    * **reuse seq-stamps** — every allocation event bumps a monotone
+      generation counter and stamps the handed-out pages with it
+      (:meth:`stamp_of`). A physical page recycled from a finished request
+      and re-allocated to a new one therefore carries a *different* stamp;
+      trace events keyed by ``(page, stamp)`` can never alias the previous
+      owner's lifecycle (the slot-reuse aliasing guard of DESIGN.md §10).
+    """
 
     n_pages: int
 
     def __post_init__(self):
         self.free = list(range(self.n_pages - 1, -1, -1))
         self.owned: dict[int, list[int]] = {}
+        self._stamp = [0] * self.n_pages
+        self._next_stamp = 1
 
     def alloc_seq(self, seq_id: int, n: int) -> list[int]:
         if len(self.free) < n:
             raise MemoryError(f"pool exhausted: need {n}, have {len(self.free)}")
         pages = [self.free.pop() for _ in range(n)]
         self.owned.setdefault(seq_id, []).extend(pages)
+        for p in pages:
+            self._stamp[p] = self._next_stamp
+        self._next_stamp += 1
         return pages
 
     def extend_seq(self, seq_id: int, n: int = 1) -> list[int]:
@@ -146,3 +165,31 @@ class PageAllocator:
     @property
     def in_use(self) -> int:
         return self.n_pages - len(self.free)
+
+    @property
+    def free_count(self) -> int:
+        return len(self.free)
+
+    def occupancy(self) -> float:
+        """Fraction of the pool currently allocated (0.0 at baseline)."""
+        return self.in_use / self.n_pages
+
+    def alive(self) -> tuple[int, ...]:
+        """Sequence ids that currently own at least one page, sorted."""
+        return tuple(sorted(self.owned))
+
+    def owner_of(self, page: int) -> int | None:
+        """Sequence id owning ``page``, or None if free/unknown."""
+        for seq_id, pages in self.owned.items():
+            if page in pages:
+                return seq_id
+        return None
+
+    def stamp_of(self, page: int) -> int:
+        """Allocation-generation stamp of ``page`` (0 = never allocated).
+
+        Strictly increases every time the page is handed out again, so a
+        recycled page re-allocated to a new request never shares a stamp
+        with its previous life.
+        """
+        return self._stamp[page]

@@ -522,6 +522,21 @@ def tiered_invalidate(state: dict, pages: jax.Array) -> dict:
     return {**state, "pool_meta": meta, "ring": ring}
 
 
+def tiered_reset_stream(state: dict, i: int, geom: TieredKV,
+                        dtype=jnp.bfloat16) -> dict:
+    """Return ``state`` with stream ``i`` cold-reset to a fresh init.
+
+    The continuous-batching slot scheduler calls this when a finished
+    sequence's slot is handed to a new request (DESIGN.md §10): the slot's
+    Leap controller, pool metadata, in-flight ring and hot payload all
+    restart from :func:`tiered_init` state so no stale page residency,
+    in-flight fetch or trend history from the previous occupant can leak
+    into the new request's stream. Other streams are untouched.
+    """
+    fresh = tiered_init(geom, 1, dtype)
+    return jax.tree.map(lambda cur, f: cur.at[i].set(f[0]), state, fresh)
+
+
 def tiered_stats(state: dict, i: int) -> dict:
     """Host-side :func:`repro.core.pool.pool_stats` of stream ``i``.
 

@@ -1,0 +1,33 @@
+"""Serving engine: request lifecycle, admission, scheduling, execution.
+
+The continuous-batching serving stack (DESIGN.md §10), carved out of the
+``launch/serve.py`` monolith so the control plane is testable on its own:
+
+* :mod:`repro.serving.request`      — per-request state machine
+  (WAITING → PREFILL → DECODE → FINISHED), token/page accounting.
+* :mod:`repro.serving.scheduler`    — admission queue + slot scheduler
+  (capacity-reserving admission, recycling eviction). Pure Python.
+* :mod:`repro.serving.executor`     — model executors: chunked prefill +
+  batch-1 decode per request (real model or synthetic K/V).
+* :mod:`repro.serving.engine`       — the step executor composing
+  scheduler + executor + the tiered paged-KV data path, with the §6.4
+  flat/tiered pin enforced every step over dynamic batch composition.
+* :mod:`repro.serving.batch_driver` — the legacy lock-step fixed-batch
+  replay (gang admission), kept as the baseline and the
+  ``--arrival batch`` path.
+
+``launch/serve.py`` is the thin CLI front-end over all of it.
+"""
+
+from .engine import (PINNED_COUNTERS, ServeConfig, ServingEngine,
+                     build_executor, serve_continuous)
+from .executor import ModelExecutor, SyntheticExecutor
+from .request import DECODE, FINISHED, PREFILL, WAITING, Request
+from .scheduler import AdmissionQueue, SlotScheduler
+
+__all__ = [
+    "AdmissionQueue", "DECODE", "FINISHED", "ModelExecutor",
+    "PINNED_COUNTERS", "PREFILL", "Request", "ServeConfig", "ServingEngine",
+    "SlotScheduler", "SyntheticExecutor", "WAITING", "build_executor",
+    "serve_continuous",
+]
