@@ -1,21 +1,36 @@
-"""Tiered paged-KV decode: does the async sweep take prefetch DMA off-step?
+"""Tiered paged-KV decode: sweep overlap + the fused attention consumer.
 
-The serving-side claim of DESIGN.md §6: with decode attention fed from the
-Leap-managed hot pool, the *sync* tiered sweep fetches every prefetch
-candidate inside the chunk step that issued it (blocking the sweep), while
-the *async* issue/wait sweep lands candidates during the next chunk step —
-same controller, same demand schedule, so the hit rates match and the
-difference is what sits on the sweep's critical path:
+Two suites over the DESIGN.md §6 serving path:
+
+**Sweep overlap** (rows with a ``path`` column): with decode attention fed
+from the Leap-managed hot pool, the *sync* tiered sweep fetches every
+prefetch candidate inside the chunk step that issued it (blocking the
+sweep), while the *async* issue/wait sweep lands candidates during the
+next chunk step — same controller, same demand schedule, so the hit rates
+match and the difference is what sits on the sweep's critical path:
 
 * sync:  demand misses AND every issued candidate (blocking batch);
 * async: demand misses, plus the residual transfer of partial hits.
 
 The consume-latency column prices those critical-path pages with the
-``rdma_lean`` model (as ``datapath_overlap``). The sweep crosses
-hot-fraction {small, full} x {sync, async} over several decode steps
-(steady-state re-sweeps after the cold first step), checks the tiered/flat
-bit-equivalence pin on every configuration, and reports the headline
-"async tiered decode strictly faster than sync tiered at equal hit rate".
+``rdma_lean`` model (as ``datapath_overlap``), crossed over hot-fraction
+{small, full} x {sync, async}, with the tiered/flat bit-equivalence pin
+checked on every configuration.
+
+**Fused consumer** (rows with an ``attn`` column): prices the attention
+consumer itself — the unfused stacked path re-materializes the whole
+``[S, n_slots, ...] -> [S*n_slots, ...]`` hot pool (k and v, read+write)
+every decode step before the flat kernel reads the context, while the
+fused ``paged_attention_hot_slots`` kernel reads the hot slots in place
+through the slot table, moving only the context pages. Per point
+(hot-fraction x S x npps) the suite reports the analytic per-step
+bytes-moved for each path, the time those bytes cost at the HBM roofline
+(``benchmarks.roofline.HBM_BW`` — wall-clock on the CPU interpret path is
+reported but not asserted), the fusion-blind jaxpr bytes
+(``flop_count.count_fn``), and a jaxpr structure check that the
+``[S*n_slots, ...]`` stacked reshape exists on the unfused trace and is
+**absent** on the fused one. Both consumers are pinned bit-identical to
+the flat-pool kernel on every point.
 """
 
 from __future__ import annotations
@@ -33,12 +48,21 @@ from repro.paging.tiered_kv import (TieredKV, tiered_attention, tiered_init,
                                     tiered_sweep)
 
 from .common import sized, write_csv
+from .flop_count import count_fn
+from .roofline import HBM_BW
 
 B, PS, HKV, HQ, DH = 2, 4, 2, 4, 8
 NPPS = sized(24, 6)
 DECODE_STEPS = sized(4, 2)
 N_PAGES = B * NPPS
 MODEL = LATENCY_MODELS["rdma_lean"]
+
+# fused-consumer sweep axes (engine-default sweep geometry: chunk=4,
+# pw_max=8, ring=8 — the npps=8/12 points are the small-context serving
+# shape where the stacked copy dominates hardest)
+FUSED_NPPS = sized((8, 12, 24), (6,))
+FUSED_S = sized((2, 4), (2,))
+FUSED_REPS = sized(5, 2)
 
 
 def _consume_us_per_access(s: dict, sync: bool) -> float:
@@ -68,6 +92,99 @@ def _run_one(cold, pt, q, lengths, flat, geom, async_dp):
         for k, v in s.items():
             agg[k] = agg.get(k, 0) + (v if isinstance(v, int) else 0)
     return agg, equiv, dt
+
+
+def _has_stacked_reshape(jaxpr, stacked_dim: int) -> bool:
+    """Recursively scan a jaxpr (through pjit/scan/cond sub-jaxprs) for a
+    reshape whose output is a pool-like ``[stacked_dim, ...]`` array —
+    the stacked hot-pool materialization signature."""
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name == "reshape":
+            shp = eqn.outvars[0].aval.shape
+            if len(shp) >= 3 and shp[0] == stacked_dim:
+                return True
+        for p in eqn.params.values():
+            sub = getattr(p, "jaxpr", None)
+            if sub is not None and _has_stacked_reshape(sub, stacked_dim):
+                return True
+            if isinstance(p, (list, tuple)):
+                for b in p:
+                    sub = getattr(b, "jaxpr", None)
+                    if sub is not None and _has_stacked_reshape(sub,
+                                                                stacked_dim):
+                        return True
+    return False
+
+
+def _time_consumer(fn, q, reps: int) -> float:
+    jax.block_until_ready(fn(q))                     # compile off the clock
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(q)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def _fused_point(hot_name: str, S: int, npps: int) -> dict:
+    """One fused-vs-unfused point: sweep once to residency, then price the
+    two attention consumers on the same hot state."""
+    geom0 = TieredKV(1 << 30, 1, PS, HKV, DH)        # engine-default knobs
+    floor = tiered_min_slots(npps, geom0)
+    n_pages = 2 * S * npps + 2 * floor               # headroom: small < full
+    n_slots = floor if hot_name == "small" else n_pages
+    geom = TieredKV(n_pages, n_slots, PS, HKV, DH)
+    cold = {"k": jax.random.normal(jax.random.PRNGKey(0),
+                                   (n_pages, PS, HKV, DH), jnp.float32),
+            "v": jax.random.normal(jax.random.PRNGKey(1),
+                                   (n_pages, PS, HKV, DH), jnp.float32)}
+    pt = linear_page_table(S, npps)
+    q = jax.random.normal(jax.random.PRNGKey(2), (S, 1, HQ, DH), jnp.float32)
+    lengths = jnp.full((S,), npps * PS - 3, jnp.int32)
+    st = tiered_init(geom, S, jnp.float32)
+    st, _ = tiered_sweep(st, cold, pt, geom)
+
+    flat = paged_decode_attention(
+        q, {"k": cold["k"][None], "v": cold["v"][None]}, jnp.int32(0), pt,
+        lengths, use_kernel=True)
+    unfused = lambda qq: tiered_attention(qq, st, pt, lengths,
+                                          attn_kernel="kernel")[0]
+    fused = lambda qq: tiered_attention(qq, st, pt, lengths,
+                                        attn_kernel="fused")[0]
+    bit_ok = all(bool((np.asarray(f(q)) == np.asarray(flat)).all())
+                 for f in (unfused, fused))
+
+    # analytic per-step bytes at the consumer: the unfused path pays the
+    # stacked k+v hot-pool copy (read + write) before the context read;
+    # the fused path reads only the context pages through the slot table
+    pb = PS * HKV * DH * 4                           # bytes per f32 page
+    ctx = 2 * S * npps * pb                          # k+v context read
+    stack = 4 * S * n_slots * pb                     # k+v copy, rd+wr
+    unf_us = (stack + ctx) / HBM_BW * 1e6
+    fus_us = ctx / HBM_BW * 1e6
+
+    return {
+        "attn": "fused_vs_unfused", "hot": hot_name, "S": S, "npps": npps,
+        "n_slots": n_slots,
+        "hot_frac": round(S * n_slots / n_pages, 2),
+        "bit_identical": bit_ok,
+        "unfused_bytes_per_step": stack + ctx,
+        "fused_bytes_per_step": ctx,
+        "bytes_saved": stack,
+        "hot_pool_bytes": 2 * S * n_slots * pb,      # k+v payload
+        "unfused_roofline_us": round(unf_us, 3),
+        "fused_roofline_us": round(fus_us, 3),
+        "roofline_speedup": round(unf_us / fus_us, 2),
+        "unfused_jaxpr_bytes": int(count_fn(unfused, q)["bytes"]),
+        "fused_jaxpr_bytes": int(count_fn(fused, q)["bytes"]),
+        "stacked_reshape_unfused": _has_stacked_reshape(
+            jax.make_jaxpr(unfused)(q).jaxpr, S * n_slots),
+        "stacked_reshape_fused": _has_stacked_reshape(
+            jax.make_jaxpr(fused)(q).jaxpr, S * n_slots),
+        "unfused_wall_us": round(1e6 * _time_consumer(unfused, q,
+                                                      FUSED_REPS), 1),
+        "fused_wall_us": round(1e6 * _time_consumer(fused, q,
+                                                    FUSED_REPS), 1),
+    }
 
 
 def run() -> tuple[list[dict], dict]:
@@ -117,6 +234,34 @@ def run() -> tuple[list[dict], dict]:
         derived[f"{hot_name}_consume_async_us"] = round(async_c, 2)
         derived[f"{hot_name}_async_speedup"] = round(sync_c / async_c, 2)
         derived[f"{hot_name}_async_strictly_faster"] = bool(async_c < sync_c)
+    # -- fused attention consumer: hot-fraction x S x npps ------------------
+    fused_rows = [_fused_point(hot_name, S, npps)
+                  for hot_name in ("small", "full")
+                  for S in FUSED_S
+                  for npps in FUSED_NPPS]
+    rows.extend(fused_rows)
+    small_rows = [r for r in fused_rows if r["hot"] == "small"]
+    derived["fused_strictly_faster_all_points"] = all(
+        r["fused_roofline_us"] < r["unfused_roofline_us"]
+        and r["fused_jaxpr_bytes"] < r["unfused_jaxpr_bytes"]
+        for r in fused_rows)
+    derived["fused_speedup_small_min"] = min(
+        r["roofline_speedup"] for r in small_rows)
+    # headline: >=5x on the small-context serving shape (the configuration
+    # the stacked copy hurt most)
+    derived["fused_speedup_small_max"] = max(
+        r["roofline_speedup"] for r in small_rows)
+    derived["fused_speedup_max"] = max(
+        r["roofline_speedup"] for r in fused_rows)
+    # bytes saved per step == the stacked k+v hot-pool copy (read + write),
+    # i.e. exactly 2x the hot-pool payload the unfused path re-materializes
+    derived["fused_bytes_saved_over_hot_pool"] = round(
+        float(np.mean([r["bytes_saved"] / r["hot_pool_bytes"]
+                       for r in fused_rows])), 2)
+    derived["fused_stacked_reshape_gone"] = all(
+        r["stacked_reshape_unfused"] and not r["stacked_reshape_fused"]
+        for r in fused_rows)
     derived["all_bit_identical"] = all(r["bit_identical"] for r in rows)
-    write_csv("tiered_kv", rows)
+    write_csv("tiered_kv", rows[:len(rows) - len(fused_rows)])
+    write_csv("tiered_kv_fused", fused_rows)
     return rows, derived

@@ -95,6 +95,16 @@ def build_parser() -> argparse.ArgumentParser:
                     help="with --shards: prefetch arrival delay in chunk "
                          "steps for cross-shard pages (near pages take 1)")
     ap.add_argument("--page-size", type=int, default=4)
+    ap.add_argument("--attn-kernel", default="ref",
+                    choices=("ref", "kernel", "fused", "fused-async"),
+                    help="with --paged: decode-attention consumer. "
+                         "ref/kernel run over the stacked hot pool (a full "
+                         "hot-pool copy per step); fused/fused-async read "
+                         "the per-stream hot slots in place through the "
+                         "slot table inside the Pallas kernel (fused-async "
+                         "adds explicit make_async_copy double-buffering). "
+                         "The flat-pool bit-identity pin runs every step "
+                         "in all modes")
     ap.add_argument("--chaos", default=None, metavar="SPEC.json",
                     help="with --paged: inject faults from a ChaosSpec JSON "
                          "file (DESIGN.md §9) into a chaos sidecar run over "
@@ -248,7 +258,9 @@ def _main_continuous(args) -> dict:
         chunk=args.chunk, ring_size=args.ring_size,
         async_datapath=args.async_datapath, link_budget=args.link_budget,
         shards=args.shards, placement=args.placement,
-        far_delay=args.far_delay, arrival=args.arrival,
+        far_delay=args.far_delay,
+        attn_kernel=args.attn_kernel.replace("-", "_"),
+        arrival=args.arrival,
         think_time=args.think_time, seed=args.seed, gang=args.gang,
         pool_pages=args.pool_pages, trace=bool(args.trace))
     executor = build_executor(None if args.synthetic else args.arch,

@@ -16,17 +16,20 @@ from .kv_cache import (PageAllocator, append_kv, init_paged_kv,
 from .prefetch_serving import (PrefetchedStream, multi_stream_consume,
                                stream_consume, stream_init, stream_step,
                                stream_step_async, stream_stats)
-from .tiered_kv import (TieredKV, tiered_attention, tiered_decode_step,
+from .tiered_kv import (ATTN_KERNEL_MODES, TieredKV, normalize_attn_kernel,
+                        tiered_attention, tiered_decode_step,
                         tiered_init, tiered_invalidate, tiered_min_slots,
-                        tiered_reset_stream, tiered_slot_table, tiered_stats,
-                        tiered_sweep)
+                        tiered_reset_stream, tiered_slot_table,
+                        tiered_slot_table_local, tiered_stats, tiered_sweep)
 from .expert_stream import ExpertPrefetcher
 
 __all__ = ["PageAllocator", "append_kv", "init_paged_kv",
            "linear_page_table", "paged_decode_attention",
            "PrefetchedStream", "multi_stream_consume", "stream_consume",
            "stream_init", "stream_step", "stream_step_async", "stream_stats",
-           "TieredKV", "tiered_attention", "tiered_decode_step",
+           "ATTN_KERNEL_MODES", "TieredKV", "normalize_attn_kernel",
+           "tiered_attention", "tiered_decode_step",
            "tiered_init", "tiered_invalidate", "tiered_min_slots",
-           "tiered_reset_stream", "tiered_slot_table", "tiered_stats",
+           "tiered_reset_stream", "tiered_slot_table",
+           "tiered_slot_table_local", "tiered_stats",
            "tiered_sweep", "ExpertPrefetcher"]

@@ -70,7 +70,8 @@ from repro.core.pool import (NO_PAGE, link_grants_sharded, page_home,
                              ring_init)
 from repro.core.window import DEFAULT_PW_MAX
 from repro.kernels.gather_pages import gather_pages, gather_pages_async
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_hot_slots)
 from repro.paging.prefetch_serving import stream_stats_at
 from repro.paging.sharded_pool import (ShardedPoolCfg, cached_shard_map,
                                        check_fabric_topology,
@@ -444,16 +445,19 @@ def tiered_sweep(state: dict, cold: dict, page_rows: jax.Array,
                        False)
 
 
-def tiered_slot_table(state: dict, page_rows: jax.Array
-                      ) -> tuple[jax.Array, jax.Array]:
-    """Remap physical page ids to stacked-hot-pool slot ids.
+def tiered_slot_table_local(state: dict, page_rows: jax.Array
+                            ) -> tuple[jax.Array, jax.Array]:
+    """Remap physical page ids to *per-stream* hot-slot ids.
 
     Returns ``(slot_table int32[S, npps], all_resident bool)``:
-    ``slot_table[s, j]`` indexes the flattened ``[S * n_slots]`` hot pool
-    (stream s's slots live at ``s * n_slots + slot``). ``all_resident`` is
-    the equivalence guard — True iff every valid page of ``page_rows`` is
-    hot-resident (a properly sized sweep guarantees it; attention output
-    for non-resident pages would read unrelated slot bytes).
+    ``slot_table[s, j]`` indexes stream s's own hot pool
+    ``[n_slots, page, Hkv, dh]``, with ``-1`` for invalid page-table
+    entries **and** non-resident pages — the form the fused
+    :func:`repro.kernels.paged_attention.paged_attention_hot_slots` kernel
+    consumes directly (its residency mask folds the ``all_resident`` guard
+    into the softmax: a ``-1`` entry is masked, never silently read).
+    ``all_resident`` is True iff every valid page of ``page_rows`` is
+    hot-resident (a properly sized sweep guarantees it).
     """
     meta = state["pool_meta"]
     n_pages = meta["page_slot"].shape[-1]
@@ -461,6 +465,22 @@ def tiered_slot_table(state: dict, page_rows: jax.Array
     slots = jnp.take_along_axis(meta["page_slot"], safe, axis=1)
     valid = page_rows >= 0
     all_resident = jnp.all((slots >= 0) | ~valid)
+    return jnp.where(valid, slots, -1).astype(jnp.int32), all_resident
+
+
+def tiered_slot_table(state: dict, page_rows: jax.Array
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Remap physical page ids to stacked-hot-pool slot ids.
+
+    Returns ``(slot_table int32[S, npps], all_resident bool)``:
+    ``slot_table[s, j]`` indexes the flattened ``[S * n_slots]`` hot pool
+    (stream s's slots live at ``s * n_slots + slot``) — the unfused
+    stacked-pool form. ``all_resident`` is the equivalence guard — True
+    iff every valid page of ``page_rows`` is hot-resident (a properly
+    sized sweep guarantees it; attention output for non-resident pages
+    would read unrelated slot bytes).
+    """
+    slots, all_resident = tiered_slot_table_local(state, page_rows)
     n_slots = jax.tree.leaves(state["hot"])[0].shape[1]
     S = page_rows.shape[0]
     gslots = (jnp.arange(S, dtype=jnp.int32)[:, None] * n_slots
@@ -468,25 +488,68 @@ def tiered_slot_table(state: dict, page_rows: jax.Array
     return gslots.astype(jnp.int32), all_resident
 
 
+ATTN_KERNEL_MODES = ("ref", "kernel", "fused", "fused_async")
+
+
+def normalize_attn_kernel(mode) -> str:
+    """Normalize an ``attn_kernel`` selector to one of
+    :data:`ATTN_KERNEL_MODES`. Accepts the legacy bools (``False`` →
+    ``"ref"``, ``True`` → ``"kernel"``) and CLI spellings
+    (``"fused-async"`` → ``"fused_async"``)."""
+    if mode is True:
+        return "kernel"
+    if mode is False or mode is None:
+        return "ref"
+    m = str(mode).replace("-", "_")
+    if m not in ATTN_KERNEL_MODES:
+        raise ValueError(
+            f"attn_kernel={mode!r} not in {ATTN_KERNEL_MODES}")
+    return m
+
+
 def tiered_attention(q: jax.Array, state: dict, page_rows: jax.Array,
-                     lengths: jax.Array, *, use_kernel: bool = False
+                     lengths: jax.Array, *,
+                     attn_kernel: str | bool = "ref",
+                     use_kernel: bool | None = None
                      ) -> tuple[jax.Array, jax.Array]:
     """Decode attention served from the hot tier.
 
-    ``q [S, 1, Hq, dh]``, ``lengths int32[S]``; the per-stream hot pools are
-    stacked into one ``[S * n_slots, page, Hkv, dh]`` pool and attention
-    runs through the remapped table — identical shapes and identical bytes
-    as the flat-pool :func:`repro.paging.kv_cache.paged_decode_attention`,
-    hence bit-identical logits (the tentpole equivalence pin). Returns
+    ``q [S, 1, Hq, dh]``, ``lengths int32[S]``; ``attn_kernel`` selects the
+    consumer (``use_kernel`` is the legacy bool alias):
+
+    * ``"ref"`` / ``"kernel"`` — the **unfused** stacked path: the
+      per-stream hot pools are copied into one flattened
+      ``[S * n_slots, page, Hkv, dh]`` pool every call (a full hot-pool
+      materialization) and attention runs through the remapped global
+      table — identical shapes and identical bytes as the flat-pool
+      :func:`repro.paging.kv_cache.paged_decode_attention`.
+    * ``"fused"`` / ``"fused_async"`` — the **fused** path: attention
+      reads the stacked per-stream hot pools *in place* through the local
+      slot table (the ``[S, npps] → slot`` indirection composed inside the
+      kernel's BlockSpec index maps), so no ``[S * n_slots, ...]`` pool is
+      ever materialized; ``fused_async`` double-buffers K/V page tiles
+      with explicit ``make_async_copy`` issue/wait pairs. Non-resident
+      pages are masked in-kernel.
+
+    All kernel modes execute the same per-page online-softmax op sequence,
+    so on resident bytes their outputs are **bit-identical** to each other
+    and to the flat-pool kernel (the tentpole equivalence pin). Returns
     ``(out [S, 1, Hq, dh], all_resident)``.
     """
-    table, ok = tiered_slot_table(state, page_rows)
+    mode = normalize_attn_kernel(use_kernel if use_kernel is not None
+                                 else attn_kernel)
     hot = state["hot"]
+    if mode in ("fused", "fused_async"):
+        table, ok = tiered_slot_table_local(state, page_rows)
+        return paged_attention_hot_slots(
+            q, hot["k"], hot["v"], table, lengths,
+            async_copy=(mode == "fused_async")), ok
+    table, ok = tiered_slot_table(state, page_rows)
     S, n_slots = hot["k"].shape[:2]
     hk = hot["k"].reshape((S * n_slots,) + hot["k"].shape[2:])
     hv = hot["v"].reshape((S * n_slots,) + hot["v"].shape[2:])
     return paged_attention(q, hk, hv, table, lengths,
-                           use_kernel=use_kernel), ok
+                           use_kernel=(mode == "kernel")), ok
 
 
 def tiered_decode_step(state: dict, cold: dict, q: jax.Array,
@@ -494,10 +557,11 @@ def tiered_decode_step(state: dict, cold: dict, q: jax.Array,
                        geom: TieredKV, *, async_datapath: bool = False,
                        link_budget: int | None = None,
                        fabric: ShardedPoolCfg | None = None, mesh=None,
-                       attn_kernel: bool = False):
+                       attn_kernel: str | bool = False):
     """One tiered decode step: demand-sweep the context, attend over hot.
 
-    Returns ``(state, out, info, all_resident)`` — see
+    ``attn_kernel`` is any :data:`ATTN_KERNEL_MODES` selector (or the
+    legacy bool). Returns ``(state, out, info, all_resident)`` — see
     :func:`tiered_sweep` and :func:`tiered_attention`.
     """
     state, info = tiered_sweep(state, cold, page_rows, geom,
@@ -505,7 +569,7 @@ def tiered_decode_step(state: dict, cold: dict, q: jax.Array,
                                link_budget=link_budget, fabric=fabric,
                                mesh=mesh)
     out, ok = tiered_attention(q, state, page_rows, lengths,
-                               use_kernel=attn_kernel)
+                               attn_kernel=attn_kernel)
     return state, out, info, ok
 
 

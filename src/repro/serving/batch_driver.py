@@ -22,7 +22,8 @@ from repro.obs.trace import (Event, decode_sweep_events, events_to_counts,
 from repro.paging.kv_cache import (append_kv, init_paged_kv,
                                    linear_page_table, paged_decode_attention)
 from repro.paging.sharded_pool import ShardedPoolCfg
-from repro.paging.tiered_kv import (TieredKV, tiered_attention, tiered_init,
+from repro.paging.tiered_kv import (TieredKV, normalize_attn_kernel,
+                                    tiered_attention, tiered_init,
                                     tiered_invalidate, tiered_min_slots,
                                     tiered_stats, tiered_sweep)
 
@@ -130,6 +131,7 @@ def serve_batch_tiered(cfg, state, args, B: int, prompt_len: int,
         # permanently placed and route append_kv writes through place_perm
 
     reg = reg if reg is not None else Registry()
+    attn_mode = normalize_attn_kernel(getattr(args, "attn_kernel", "ref"))
     n_chunks = -(-npps // geom.chunk)      # global clock: chunk steps
     events = [] if trace_path else None
     link_hist, shard_hist = [], []
@@ -158,10 +160,12 @@ def serve_batch_tiered(cfg, state, args, B: int, prompt_len: int,
                                         fabric=fabric, mesh=mesh)
             sp.sync = info
         with reg.span("tiered_attention") as sp:
-            tiered, resident = tiered_attention(q, tstate, rows, lengths)
+            tiered, resident = tiered_attention(q, tstate, rows, lengths,
+                                                attn_kernel=attn_mode)
             sp.sync = tiered
         flat = paged_decode_attention(
-            q, pool, jnp.int32(0), rows, lengths)
+            q, pool, jnp.int32(0), rows, lengths,
+            use_kernel=(attn_mode != "ref"))
         step_ok = bool(resident) and bool(
             (np.asarray(tiered) == np.asarray(flat)).all())
         if not step_ok and first_bad_step is None:
@@ -185,6 +189,7 @@ def serve_batch_tiered(cfg, state, args, B: int, prompt_len: int,
                 + reg.histogram("tiered_attention").total)
     out = {
         "tiered_equiv_ok": equiv_ok,
+        "tiered_attn_kernel": attn_mode,
         "tiered_streams": n_streams,
         "tiered_n_slots": geom.n_slots,
         "tiered_hot_frac": round(n_streams * geom.n_slots / n_pages, 3),

@@ -46,7 +46,8 @@ from repro.obs.trace import (Event, RequestPhase, decode_sweep_events,
 from repro.paging.kv_cache import (PageAllocator, init_paged_kv,
                                    paged_decode_attention)
 from repro.paging.sharded_pool import ShardedPoolCfg
-from repro.paging.tiered_kv import (TieredKV, tiered_attention, tiered_init,
+from repro.paging.tiered_kv import (TieredKV, normalize_attn_kernel,
+                                    tiered_attention, tiered_init,
                                     tiered_invalidate, tiered_min_slots,
                                     tiered_reset_stream, tiered_stats,
                                     tiered_sweep)
@@ -81,6 +82,12 @@ class ServeConfig:
     placement: str = "interleave"
     far_delay: int = 2
     use_kernel: bool = True
+    #: decode-attention consumer: "ref" | "kernel" (unfused stacked hot
+    #: pool) | "fused" | "fused_async" (in-place hot-slot kernel — no
+    #: stacked-pool copy). The §6.4 flat pin runs against the matching
+    #: flat-pool implementation (ref vs ref, kernel vs kernel) so the
+    #: comparison stays bit-identical.
+    attn_kernel: str = "ref"
     # arrival process (request-level, quantized to the step clock)
     arrival: str = "bursty"       # constant | bursty | churn
     think_time: float = 1000.0    # µs between arrivals
@@ -214,12 +221,14 @@ class ServingEngine:
                 link_budget=self.cfg.link_budget,
                 fabric=self.fabric, mesh=self.mesh)
             sp.sync = info
+        mode = normalize_attn_kernel(self.cfg.attn_kernel)
         with self.reg.span("tiered_attention") as sp:
             tiered, resident = tiered_attention(q, self.tstate, rows_j,
-                                                lengths_j)
+                                                lengths_j, attn_kernel=mode)
             sp.sync = tiered
         flat = paged_decode_attention(q, self.pool, jnp.int32(0), rows_j,
-                                      lengths_j)
+                                      lengths_j,
+                                      use_kernel=(mode != "ref"))
         act = [r.slot for r in decoding]
         step_ok = bool(resident) and bool(
             (np.asarray(tiered)[act] == np.asarray(flat)[act]).all())

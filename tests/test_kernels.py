@@ -7,7 +7,8 @@ import pytest
 
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.gather_pages import gather_pages
-from repro.kernels.paged_attention import paged_attention
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_hot_slots)
 
 
 def _tol(dtype):
@@ -144,3 +145,111 @@ class TestPagedAttention:
         a = paged_attention(q, kp, vp, pt, ln, interpret=True)
         b = decode_attention(q, kd, vd, ln)
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+    @pytest.mark.parametrize("use_kernel", [True, False])
+    def test_poisoned_table_masks_not_page0(self, use_kernel):
+        """Regression: an invalid table entry *inside* lengths must be
+        masked out of the softmax, not silently read as page 0's bytes
+        (the old clip-into-range behavior)."""
+        B, Hq, Hkv, dh, ps, npps = 2, 4, 2, 16, 4, 4
+        npages = 8
+        ks = jax.random.split(jax.random.PRNGKey(3), 4)
+        q = jax.random.normal(ks[0], (B, 1, Hq, dh))
+        kp = jax.random.normal(ks[1], (npages, ps, Hkv, dh))
+        vp = jax.random.normal(ks[2], (npages, ps, Hkv, dh))
+        ln = jnp.full((B,), ps * npps, jnp.int32)   # poison inside lengths
+        pt = jnp.asarray([[0, 1, 2, 3], [4, 5, 6, 7]], jnp.int32)
+        pois = pt.at[0, 1].set(-1).at[1, 2].set(npages + 50)
+        out = paged_attention(q, kp, vp, pois, ln, interpret=True,
+                              use_kernel=use_kernel)
+        clean = paged_attention(q, kp, vp, pt, ln, interpret=True,
+                                use_kernel=use_kernel)
+        # the poisoned pages changed the output (they're gone, not read)
+        assert (np.asarray(out) != np.asarray(clean)).any()
+        # oracle: the same rows with the poisoned page excised by length
+        # masking on an explicitly re-packed table
+        pack = jnp.asarray([[0, 2, 3, 0], [4, 5, 7, 0]], jnp.int32)
+        ln2 = jnp.full((B,), ps * (npps - 1), jnp.int32)
+        expect = paged_attention(q, kp, vp, pack, ln2, interpret=True,
+                                 use_kernel=use_kernel)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                                   atol=2e-6)
+        # and definitely NOT equal to clip-to-page-0 / clip-to-last reads
+        sub0 = pt.at[0, 1].set(0).at[1, 2].set(npages - 1)
+        old = paged_attention(q, kp, vp, sub0, ln, interpret=True,
+                              use_kernel=use_kernel)
+        assert (np.asarray(out) != np.asarray(old)).any()
+
+
+class TestPagedAttentionHotSlots:
+    """Fused hot-slot kernel: in-place slot indirection == stacked flat pool.
+
+    The three kernel variants (pipelined fused, async fused, flat) share one
+    per-page online-softmax update, so on the same bytes their outputs are
+    *bitwise* equal — the property the tiered §6.4 pin leans on.
+    """
+
+    def _mk(self, S, n_slots, ps, Hkv, Hq, dh, npps, dtype, seed=0):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = jax.random.normal(ks[0], (S, 1, Hq, dh), dtype)
+        kh = jax.random.normal(ks[1], (S, n_slots, ps, Hkv, dh), dtype)
+        vh = jax.random.normal(ks[2], (S, n_slots, ps, Hkv, dh), dtype)
+        st = jax.random.randint(ks[3], (S, npps), 0, n_slots, jnp.int32)
+        ln = jnp.asarray(np.random.default_rng(seed).integers(
+            1, ps * npps + 1, S), jnp.int32)
+        return q, kh, vh, st, ln
+
+    @pytest.mark.parametrize("S,Hq,Hkv,dh,ps,npps", [
+        (2, 8, 2, 64, 16, 4),         # GQA 4:1
+        (1, 4, 4, 32, 8, 8),          # MHA
+        (3, 4, 1, 128, 32, 2),        # MQA, non-trivial page size
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("async_copy", [False, True])
+    def test_bitwise_flat_equivalence(self, S, Hq, Hkv, dh, ps, npps,
+                                      dtype, async_copy):
+        n_slots = npps + 3
+        q, kh, vh, st, ln = self._mk(S, n_slots, ps, Hkv, Hq, dh, npps,
+                                     dtype)
+        out = paged_attention_hot_slots(q, kh, vh, st, ln, interpret=True,
+                                        async_copy=async_copy)
+        # flat oracle: same bytes via the stacked pool + global table
+        fk = kh.reshape((S * n_slots,) + kh.shape[2:])
+        fv = vh.reshape((S * n_slots,) + vh.shape[2:])
+        gt = st + jnp.arange(S, dtype=jnp.int32)[:, None] * n_slots
+        flat = paged_attention(q, fk, fv, gt, ln, interpret=True)
+        assert (np.asarray(out) == np.asarray(flat)).all()
+
+    @pytest.mark.parametrize("async_copy", [False, True])
+    def test_vs_exact_softmax_ref(self, async_copy):
+        q, kh, vh, st, ln = self._mk(2, 6, 8, 2, 4, 32, 4, jnp.float32)
+        a = paged_attention_hot_slots(q, kh, vh, st, ln, interpret=True,
+                                      async_copy=async_copy)
+        b = paged_attention_hot_slots(q, kh, vh, st, ln, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+    @pytest.mark.parametrize("async_copy", [False, True])
+    def test_non_resident_masked_not_read(self, async_copy):
+        """A non-resident (-1 / out-of-range) slot entry is masked out of
+        the softmax — never silently read as slot 0's bytes — and only the
+        poisoned streams' outputs change."""
+        S, n_slots, ps, Hkv, Hq, dh, npps = 3, 8, 4, 2, 4, 16, 4
+        q, kh, vh, st, _ = self._mk(S, n_slots, ps, Hkv, Hq, dh, npps,
+                                    jnp.float32, seed=1)
+        ln = jnp.full((S,), ps * npps, jnp.int32)
+        clean = paged_attention_hot_slots(q, kh, vh, st, ln, interpret=True,
+                                          async_copy=async_copy)
+        pois = st.at[0, 2].set(-1).at[1, 3].set(n_slots + 9)
+        out = paged_attention_hot_slots(q, kh, vh, pois, ln, interpret=True,
+                                        async_copy=async_copy)
+        ref = paged_attention_hot_slots(q, kh, vh, pois, ln,
+                                        use_kernel=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+        assert (np.asarray(out)[:2] != np.asarray(clean)[:2]).any()
+        assert (np.asarray(out)[2] == np.asarray(clean)[2]).all()
+        # sync and async kernels agree bitwise on the poisoned table too
+        other = paged_attention_hot_slots(q, kh, vh, pois, ln,
+                                          interpret=True,
+                                          async_copy=not async_copy)
+        assert (np.asarray(out) == np.asarray(other)).all()

@@ -369,6 +369,19 @@ class TestEngineEndToEnd:
         assert cont["mean_ttft_steps"] <= gang["mean_ttft_steps"]
         assert gang["steps"] >= cont["steps"]
 
+    @pytest.mark.parametrize("mode", ["fused", "fused_async", "kernel"])
+    def test_fused_attn_kernel_pin_over_dynamic_batches(self, mode):
+        """The per-step §6.4 flat pin holds with the fused hot-slot kernel
+        across the engine's dynamic batch compositions — including steps
+        where some slots are idle (all -1 page rows, length 0) and the
+        fused kernel must mask, not read, their slots."""
+        eng, report = _run_engine(attn_kernel=mode)
+        assert report["tiered_equiv_ok"]
+        assert report["requests_finished"] == 5
+        assert report["alloc_in_use_end"] == 0
+        # requests (5) > slots (2): the run necessarily hit partial batches
+        assert report["steps"] > 0
+
 
 # --------------------------------------------------------------------------
 # request-lifecycle export: JSONL round trip + Perfetto track

@@ -17,10 +17,12 @@ import pytest
 from repro.core.pool import (pool_init, pool_invalidate, pool_issue,
                              pool_stats, pool_wait_batch, ring_init)
 from repro.paging.kv_cache import linear_page_table, paged_decode_attention
+from repro.kernels.paged_attention import paged_attention_hot_slots
 from repro.paging.tiered_kv import (TieredKV, tiered_attention,
                                     tiered_decode_step, tiered_init,
                                     tiered_invalidate, tiered_min_slots,
-                                    tiered_stats, tiered_sweep)
+                                    tiered_slot_table_local, tiered_stats,
+                                    tiered_sweep)
 
 B, NPPS, PS, HKV, HQ, DH = 4, 8, 4, 2, 4, 8
 N_PAGES = B * NPPS
@@ -107,6 +109,75 @@ class TestEquivalencePin:
         st = tiered_init(geom, B, jnp.float32)
         with pytest.raises(ValueError, match="tiered_min_slots"):
             tiered_sweep(st, _cold(), linear_page_table(B, NPPS), geom)
+
+
+class TestFusedEquivalencePin:
+    """Fused in-place hot-slot attention == unfused stacked path == flat
+    pool, bitwise, on the same swept state (§6.4 extended to the fused
+    consumer — all three run the identical per-page op sequence)."""
+
+    @pytest.mark.parametrize("async_dp", [False, True])
+    @pytest.mark.parametrize("hot", ["small", "full"])
+    @pytest.mark.parametrize("mode", ["fused", "fused_async"])
+    def test_fused_unfused_flat_bitwise(self, async_dp, hot, mode):
+        cold = _cold()
+        pt = linear_page_table(B, NPPS)
+        q, lengths = _qlen()
+        small = tiered_min_slots(NPPS, _geom(1))
+        geom = _geom(small if hot == "small" else N_PAGES)
+        st = tiered_init(geom, B, jnp.float32)
+        st, _ = tiered_sweep(st, cold, pt, geom, async_datapath=async_dp)
+        fused, ok_f = tiered_attention(q, st, pt, lengths, attn_kernel=mode)
+        unfused, ok_u = tiered_attention(q, st, pt, lengths,
+                                         attn_kernel="kernel")
+        assert bool(ok_f) and bool(ok_u)
+        pool = {"k": cold["k"][None], "v": cold["v"][None]}
+        flat = paged_decode_attention(q, pool, jnp.int32(0), pt, lengths,
+                                      use_kernel=True)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(unfused))
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(flat))
+
+    def test_fused_decode_step_modes(self):
+        """tiered_decode_step threads the attn_kernel mode through."""
+        cold = _cold()
+        pt = linear_page_table(B, NPPS)
+        q, lengths = _qlen()
+        geom = _geom(tiered_min_slots(NPPS, _geom(1)))
+        outs = []
+        for mode in ("kernel", "fused", "fused_async"):
+            st = tiered_init(geom, B, jnp.float32)
+            st, out, _, resident = tiered_decode_step(
+                st, cold, q, pt, lengths, geom, async_datapath=True,
+                attn_kernel=mode)
+            assert bool(resident)
+            outs.append(np.asarray(out))
+        assert all((o == outs[0]).all() for o in outs[1:])
+
+    @pytest.mark.parametrize("mode", ["fused", "fused_async"])
+    def test_non_resident_pages_masked(self, mode):
+        """A partially swept context (some pages never made hot) trips the
+        all_resident guard, and the fused kernel masks the missing pages —
+        matching the masked exact-softmax oracle, deterministically — rather
+        than silently reading whatever lives in an unrelated slot."""
+        cold = _cold()
+        pt = linear_page_table(B, NPPS)
+        q, lengths = _qlen()
+        geom = _geom(tiered_min_slots(NPPS, _geom(1)))
+        st = tiered_init(geom, B, jnp.float32)
+        # sweep only the first half of every context row
+        st, _ = tiered_sweep(st, cold, pt[:, :NPPS // 2], geom)
+        table, resident = tiered_slot_table_local(st, pt)
+        assert not bool(resident)
+        assert (np.asarray(table) < 0).any()         # genuinely missing
+        out, ok = tiered_attention(q, st, pt, lengths, attn_kernel=mode)
+        assert not bool(ok)
+        hot = st["hot"]
+        ref = paged_attention_hot_slots(q, hot["k"], hot["v"], table,
+                                        lengths, use_kernel=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5)
+        out2, _ = tiered_attention(q, st, pt, lengths, attn_kernel=mode)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
 
 
 class TestWriteCoherence:
