@@ -19,7 +19,8 @@ import time
 from . import (chaos, datapath_overlap, fabric_scale, fig2_microbenchmark,
                fig3_patterns, fig8_slow_storage, fig9_10_prefetchers,
                fig11_apps, fig12_cache_size, fig13_multiapp, jax_stream,
-               link_contention, roofline, serving, sharded_pool, tiered_kv)
+               link_contention, migration, roofline, serving, sharded_pool,
+               tiered_kv)
 from .common import bench_json_doc, fmt_table, validate_bench_json
 
 SUITES = {
@@ -36,6 +37,7 @@ SUITES = {
     "link_contention": link_contention.run,
     "sharded_pool": sharded_pool.run,
     "chaos": chaos.run,
+    "migration": migration.run,
     "tiered_kv": tiered_kv.run,
     "serving": serving.run,
     "roofline": roofline.run,

@@ -80,18 +80,34 @@ NO_SLOT = jnp.int32(-1)
 # ``page_home``/``page_local`` are the single source of the mapping — the
 # jitted sharded data path, the per-shard link arbiter and the lock-step
 # fabric mirror (``repro.fabric.shardstep``) all call them.
+#
+# The mapping is *time-varying* under the three-tier lifecycle
+# (DESIGN.md §12): online migration re-homes pages while a run is in
+# flight. Callers that carry a dynamic home table (:func:`tier_init`) pass
+# it as ``home_map`` and every scheduling decision reads the current
+# assignment; ``home_map=None`` is the static placement formula. The
+# *physical* byte layout never moves (``page_local`` + the home-major
+# placement permutation stay placement-formula-only), which is what keeps
+# the flat and shard_map data planes bit-equal across migration — re-homing
+# is scheduling metadata, exactly like chaos node-loss re-homing (§9).
 
 PLACEMENTS = ("block", "interleave")
 
 
 def page_home(pages: jax.Array, n_pages: int, n_shards: int,
-              placement: str) -> jax.Array:
+              placement: str, home_map: jax.Array | None = None) -> jax.Array:
     """Home shard of each page id (same shape; invalid ids map to shard of
-    their clipped value — callers mask with their own validity)."""
+    their clipped value — callers mask with their own validity).
+
+    ``home_map`` (``int32[n_pages]``) is the time-varying assignment under
+    the migration lifecycle; ``None`` evaluates the static placement
+    formula."""
     if placement not in PLACEMENTS:
         raise ValueError(f"placement must be one of {PLACEMENTS}, "
                          f"got {placement!r}")
     p = jnp.clip(pages, 0, n_pages - 1)
+    if home_map is not None:
+        return home_map[p].astype(jnp.int32)
     if placement == "interleave":
         return jnp.mod(p, n_shards).astype(jnp.int32)
     return (p // (n_pages // n_shards)).astype(jnp.int32)
@@ -107,6 +123,154 @@ def page_local(pages: jax.Array, n_pages: int, n_shards: int,
     if placement == "interleave":
         return (p // n_shards).astype(jnp.int32)
     return jnp.mod(p, n_pages // n_shards).astype(jnp.int32)
+
+
+# ---- three-tier residency lifecycle (DESIGN.md §12) -------------------------
+# Beyond hot-resident vs remote, every *cold* page now carries lifecycle
+# metadata: its current (time-varying) home shard and whether its bytes sit
+# in the uncompressed far tier or the compressed cold tier. The state is a
+# flat dict of fixed-shape arrays (jit/scan-safe) with the same ownership
+# rule as ``pool_init``: the pool layer owns the transactions, the stream /
+# migration layers own the policy (``repro.paging.lifecycle``).
+#
+# Transactions are scatter-based and order-independent: callers pass a
+# validity mask and invalid entries scatter out of range (``mode="drop"``),
+# so the jitted scan and the Python lock-step twins can apply them in any
+# equivalent order and land on bit-identical state.
+
+# ``last_mig`` init: far enough in the past that the cooldown gate is open
+# at t=0 but ``t - last_mig`` never overflows int32.
+_TIER_NEVER = -(1 << 30)
+
+
+def tier_init(n_pages: int, n_shards: int, placement: str) -> dict:
+    """Lifecycle metadata for the three-tier residency model (DESIGN.md §12).
+
+    * ``home int32[n_pages]`` — current home shard, seeded from the static
+      ``placement`` formula and re-written by granted migrations. This is
+      the table callers thread into :func:`page_home` as ``home_map``.
+    * ``comp bool[n_pages]`` — True = the page's cold bytes live in the
+      compressed tier (promote-from-compressed pays ``decompress_delay``).
+    * ``heat int32[n_pages]`` — decayed access heat driving the hot/cold
+      classifier (:func:`tier_touch` / :func:`tier_heat_decay`).
+    * ``last_mig int32[n_pages]`` — step clock of the page's last tier
+      transition; the hysteresis cooldown gates on ``now - last_mig``.
+    * scalar counters ``n_migrations`` / ``n_demotions`` / ``n_promotions``.
+    """
+    pages = jnp.arange(n_pages, dtype=jnp.int32)
+    return {
+        "home": page_home(pages, n_pages, n_shards, placement),
+        "comp": jnp.zeros((n_pages,), jnp.bool_),
+        "heat": jnp.zeros((n_pages,), jnp.int32),
+        "last_mig": jnp.full((n_pages,), _TIER_NEVER, jnp.int32),
+        "n_migrations": jnp.int32(0),
+        "n_demotions": jnp.int32(0),
+        "n_promotions": jnp.int32(0),
+    }
+
+
+def _tier_scatter_idx(tier: dict, pages: jax.Array, ok: jax.Array) -> jax.Array:
+    """Scatter index with invalid entries pushed out of range (dropped)."""
+    n_pages = tier["home"].shape[0]
+    return jnp.where(ok, jnp.clip(pages, 0, n_pages - 1), n_pages)
+
+
+def tier_migrate(tier: dict, pages: jax.Array, dests: jax.Array,
+                 ok: jax.Array, now: jax.Array) -> dict:
+    """Re-home granted migrations and stamp the cooldown clock.
+
+    ``pages``/``dests``/``ok`` are flat same-shape vectors; callers must
+    have deduplicated same-step proposals for the same page (the arbiter's
+    lowest-``seq``-wins rule) — duplicate granted pages in one call are a
+    contract violation (scatter order would pick the winner arbitrarily).
+    """
+    idx = _tier_scatter_idx(tier, pages, ok)
+    tier = dict(tier)
+    tier["home"] = tier["home"].at[idx].set(
+        dests.astype(jnp.int32), mode="drop")
+    tier["last_mig"] = tier["last_mig"].at[idx].set(
+        jnp.broadcast_to(jnp.asarray(now, jnp.int32), pages.shape),
+        mode="drop")
+    tier["n_migrations"] = tier["n_migrations"] + jnp.sum(ok.astype(jnp.int32))
+    return tier
+
+
+def tier_demote(tier: dict, pages: jax.Array, ok: jax.Array,
+                now: jax.Array) -> dict:
+    """Move cold pages into the compressed tier (metadata; the caller
+    applies :func:`repro.runtime.compression.page_roundtrip` to the bytes).
+    ``pages`` must be distinct where ``ok`` (selection emits distinct ids).
+    """
+    idx = _tier_scatter_idx(tier, pages, ok)
+    tier = dict(tier)
+    tier["comp"] = tier["comp"].at[idx].set(True, mode="drop")
+    tier["last_mig"] = tier["last_mig"].at[idx].set(
+        jnp.broadcast_to(jnp.asarray(now, jnp.int32), pages.shape),
+        mode="drop")
+    tier["n_demotions"] = tier["n_demotions"] + jnp.sum(ok.astype(jnp.int32))
+    return tier
+
+
+def tier_promote(tier: dict, pages: jax.Array, ok: jax.Array,
+                 comp_pre: jax.Array | None = None) -> tuple[dict, jax.Array]:
+    """Clear the compressed bit on pages whose bytes just moved hot-ward.
+
+    Promotion is *on bytes moved* (a demand fetch or a prefetch landing of
+    a compressed page), not a separate transfer. Counting reads
+    ``comp_pre`` — the **start-of-step** snapshot of ``tier["comp"]`` — so
+    two streams touching the same compressed page in one step each count a
+    promotion (per-stream attribution) regardless of processing order;
+    clearing the bit is idempotent. ``None`` snapshots the current table.
+    Returns ``(tier, n_promoted)`` where ``n_promoted`` counts this call's
+    promotions (``int32``).
+    """
+    if comp_pre is None:
+        comp_pre = tier["comp"]
+    n_pages = tier["home"].shape[0]
+    p_safe = jnp.clip(pages, 0, n_pages - 1)
+    promoted = ok & comp_pre[p_safe]
+    idx = _tier_scatter_idx(tier, pages, ok)
+    tier = dict(tier)
+    tier["comp"] = tier["comp"].at[idx].set(False, mode="drop")
+    n_new = jnp.sum(promoted.astype(jnp.int32))
+    tier["n_promotions"] = tier["n_promotions"] + n_new
+    return tier, n_new
+
+
+def tier_heat_decay(tier: dict) -> dict:
+    """One step of multiplicative heat decay: ``heat <- (heat*3) >> 2``.
+
+    The ``(h*3) >> 2`` form decays all the way to zero in integer
+    arithmetic (``3 -> 2 -> 1 -> 0``), unlike ``h - (h >> 2)`` which stalls
+    at 3 — and it is bit-identical between int32 and Python ints, which the
+    lock-step twins rely on.
+    """
+    tier = dict(tier)
+    tier["heat"] = (tier["heat"] * 3) >> 2
+    return tier
+
+
+def tier_touch(tier: dict, pages: jax.Array, ok: jax.Array,
+               amount: int) -> dict:
+    """Scatter-add demand heat onto touched pages (duplicates accumulate —
+    two streams touching one page heat it twice; order-independent)."""
+    idx = _tier_scatter_idx(tier, pages, ok)
+    tier = dict(tier)
+    tier["heat"] = tier["heat"].at[idx].add(jnp.int32(amount), mode="drop")
+    return tier
+
+
+def tier_stats(tier: dict) -> dict:
+    """Host-side residency summary of the lifecycle state. Not jittable."""
+    comp = jnp.asarray(tier["comp"])
+    return {
+        "n_pages": int(comp.shape[0]),
+        "uncompressed": int(jnp.sum(~comp)),
+        "compressed": int(jnp.sum(comp)),
+        "migrations": int(tier["n_migrations"]),
+        "demotions": int(tier["n_demotions"]),
+        "promotions": int(tier["n_promotions"]),
+    }
 
 
 def pool_init(n_pages: int, n_slots: int) -> dict:
@@ -864,7 +1028,10 @@ def link_grants(ring: dict, now: jax.Array, cap: jax.Array) -> jax.Array:
 
 
 def link_grants_sharded(ring: dict, now: jax.Array, caps: jax.Array,
-                        homes: jax.Array) -> jax.Array:
+                        homes: jax.Array,
+                        mig_src: jax.Array | None = None,
+                        mig_valid: jax.Array | None = None,
+                        mig_seq: jax.Array | None = None):
     """Per-shard landing grants: one §5 demand-first arbiter per NIC.
 
     The mesh-sharded cold pool (DESIGN.md §7) has one link *per shard*
@@ -883,6 +1050,19 @@ def link_grants_sharded(ring: dict, now: jax.Array, caps: jax.Array,
     ``n_shards == 1`` (all homes 0, ``caps = [cap]``) this reduces
     bit-exactly to :func:`link_grants` — the shards=1 equivalence pin
     rides on that reduction. Returns ``bool[S, capacity]``.
+
+    **Third priority class — background migration (DESIGN.md §12).** Pass
+    ``mig_src``/``mig_valid``/``mig_seq`` (same-shape vectors over migration
+    proposals; ``mig_src`` is each proposed page's *current* home — the NIC
+    the move would occupy) and the return value becomes
+    ``(grants, mig_ok)``. A migration is granted only out of the capacity
+    left on its source NIC **after** every prefetch grant this step:
+    ``leftover[g] = caps[g] - prefetch_grants_on[g]``, proposals ranked per
+    shard by ``mig_seq``. ``caps`` is already demand-first (budget minus
+    last step's demand), so the class order demand > prefetch > migration
+    is structural — migration can never displace either. Callers must
+    pre-deduplicate same-step proposals for one page (lowest seq wins)
+    before building ``mig_valid``; ungranted proposals simply expire.
     """
     due = (ring["page"] >= 0) & (ring["ready"] <= now[:, None])
     flat_due = due.reshape(-1)
@@ -892,7 +1072,22 @@ def link_grants_sharded(ring: dict, now: jax.Array, caps: jax.Array,
     rank = jnp.sum(flat_due[None, :] & same_shard
                    & (flat_seq[None, :] < flat_seq[:, None]), axis=1)
     cap_of = caps[jnp.clip(flat_home, 0, caps.shape[0] - 1)]
-    return (flat_due & (rank < cap_of)).reshape(due.shape)
+    grants = (flat_due & (rank < cap_of)).reshape(due.shape)
+    if mig_valid is None:
+        return grants
+    n_shards = caps.shape[0]
+    pf_on = jnp.zeros((n_shards,), caps.dtype).at[
+        jnp.clip(flat_home, 0, n_shards - 1)].add(
+            grants.reshape(-1).astype(caps.dtype))
+    leftover = jnp.maximum(caps - pf_on, 0)
+    mv = mig_valid.reshape(-1)
+    ms = mig_seq.reshape(-1)
+    mh = jnp.clip(mig_src.reshape(-1), 0, n_shards - 1)
+    mig_same = mh[None, :] == mh[:, None]
+    mig_rank = jnp.sum(mv[None, :] & mig_same
+                       & (ms[None, :] < ms[:, None]), axis=1)
+    mig_ok = (mv & (mig_rank < leftover[mh])).reshape(mig_valid.shape)
+    return grants, mig_ok
 
 
 def pool_stats(st: dict, ring: dict | None = None) -> dict:

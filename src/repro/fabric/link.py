@@ -33,7 +33,7 @@ class Request:
 
     tenant: str                 # tenant name (QP routing key)
     page: int
-    kind: str                   # "demand" | "prefetch"
+    kind: str                   # "demand" | "prefetch" | "migrate"
     t_xfer: float               # channel occupancy (µs)
     on_complete: object         # callback(t_done)
     t_submit: float = 0.0
@@ -46,22 +46,35 @@ class Request:
 
 
 class _QueuePair:
-    """Two sub-queues: demand fetches are served before prefetch fills."""
+    """Three sub-queues in strict priority: demand fetches first, then
+    prefetch fills, then background page migrations (DESIGN.md §12's third,
+    lowest §5 arbitration class — migration only ever rides capacity left
+    after both foreground kinds)."""
 
-    __slots__ = ("demand", "prefetch")
+    __slots__ = ("demand", "prefetch", "migrate")
 
     def __init__(self):
         self.demand: deque[Request] = deque()
         self.prefetch: deque[Request] = deque()
+        self.migrate: deque[Request] = deque()
 
     def push(self, req: Request) -> None:
-        (self.demand if req.kind == "demand" else self.prefetch).append(req)
+        if req.kind == "demand":
+            self.demand.append(req)
+        elif req.kind == "migrate":
+            self.migrate.append(req)
+        else:
+            self.prefetch.append(req)
 
     def pop(self) -> Request:
-        return self.demand.popleft() if self.demand else self.prefetch.popleft()
+        if self.demand:
+            return self.demand.popleft()
+        if self.prefetch:
+            return self.prefetch.popleft()
+        return self.migrate.popleft()
 
     def __len__(self) -> int:
-        return len(self.demand) + len(self.prefetch)
+        return len(self.demand) + len(self.prefetch) + len(self.migrate)
 
 
 class FabricLink:
@@ -163,8 +176,10 @@ class FabricLink:
         for qp in self._qps:
             drained.extend(qp.demand)
             drained.extend(qp.prefetch)
+            drained.extend(qp.migrate)
             qp.demand.clear()
             qp.prefetch.clear()
+            qp.migrate.clear()
         return drained
 
     # -- reporting -----------------------------------------------------------

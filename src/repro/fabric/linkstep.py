@@ -85,11 +85,16 @@ class LinkStepReport:
     demand_fetches: list           # list[int] per step (all streams)
     landed: list                   # list[int] per step
     issued: list                   # list[int] per step
+    # Tier-lifecycle totals (DESIGN.md §12); None unless the run had
+    # ``migration`` enabled, so two-tier summaries keep their exact shape.
+    migrations: list | None = None   # list[int] per stream (granted moves)
+    promotions: list | None = None   # list[int] per stream
+    demotions: int | None = None     # run total (pool-wide, not per stream)
 
     def stream_summary(self, i: int) -> dict:
         """Counter dict shaped like ``repro.core.pool.pool_stats``."""
         s = self.per_stream[i]
-        return {
+        out = {
             "faults": s.faults,
             "hits": s.cache_hits,
             "misses": s.misses,
@@ -102,6 +107,10 @@ class LinkStepReport:
             "inflight_at_end": self.inflight_at_end[i],
             "ring_drops": self.drops[i],
         }
+        if self.migrations is not None:
+            out["migrations"] = self.migrations[i]
+            out["promotions"] = self.promotions[i]
+        return out
 
 
 def run_linkstep(schedules, n_pages: int, budget=None,
@@ -109,11 +118,21 @@ def run_linkstep(schedules, n_pages: int, budget=None,
                  pw_max: int = DEFAULT_PW_MAX, h_size: int = DEFAULT_H_SIZE,
                  n_split: int = DEFAULT_N_SPLIT,
                  recorder=None, nominal_delay: int | None = None,
-                 ) -> LinkStepReport:
+                 migration=None) -> LinkStepReport:
     """Run ``schedules`` (``[S][T]`` page ids) through the lock-step link.
 
     ``budget=None`` models private infinite links (every eligible prefetch
     lands at its nominal arrival — the unbudgeted jitted path).
+
+    ``migration`` (:class:`repro.paging.lifecycle.MigrationCfg`) turns on
+    the three-tier lifecycle (DESIGN.md §12). At one link there is one
+    shard, so no page is ever cross-shard and migration proper never fires;
+    what remains is the compressed cold tier — demotion, promotion, and the
+    decompress surcharge on cold candidates. The single-link run is the
+    ``n_shards == 1`` case of :func:`repro.fabric.shardstep.run_shardstep`
+    (already pinned equal), so this delegates to it; per-step ``budget`` /
+    ``arrival_delay`` sequences are not supported together with
+    ``migration`` (use the shardstep chaos path for that).
 
     ``budget`` and ``arrival_delay`` also accept per-step sequences
     (length >= T) — the chaos fabric's transient link degradation and
@@ -128,6 +147,18 @@ def run_linkstep(schedules, n_pages: int, budget=None,
     at issue time — the ground-truth side of the §8 trace diff against
     the jitted path's decoded info arrays.
     """
+    if migration is not None:
+        from ..paging.lifecycle import resolve
+        if resolve(migration) is not None:
+            if not isinstance(arrival_delay, int) or \
+                    (budget is not None and not isinstance(budget, int)):
+                raise ValueError("migration needs scalar budget/arrival_delay")
+            from .shardstep import run_shardstep
+            return run_shardstep(schedules, n_pages, 1, "interleave", budget,
+                                 ring_size, near_delay=arrival_delay,
+                                 far_delay=arrival_delay, pw_max=pw_max,
+                                 h_size=h_size, n_split=n_split,
+                                 recorder=recorder, migration=migration)
     schedules = [[int(p) for p in row] for row in schedules]
     S = len(schedules)
     T = len(schedules[0]) if S else 0

@@ -90,6 +90,9 @@ class FabricReport:
     makespan: float                 # max tenant completion time (µs)
     link_stats: dict                # tier -> {busy_time, utilization, completed}
     seed: int
+    # DESIGN.md §12: {"migrations", "dropped", "rehomed_pages"} when the
+    # scenario ran with a MigrationCfg; None keeps two-tier reports exact.
+    migration: dict | None = None
 
     def tenant(self, name: str) -> TenantReport:
         for t in self.tenants:

@@ -52,7 +52,7 @@ def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
                   near_delay: int = 1, far_delay: int = 2,
                   pw_max: int = DEFAULT_PW_MAX, h_size: int = DEFAULT_H_SIZE,
                   n_split: int = DEFAULT_N_SPLIT,
-                  recorder=None, chaos=None) -> LinkStepReport:
+                  recorder=None, chaos=None, migration=None) -> LinkStepReport:
     """Run ``schedules`` (``[S][T]`` page ids) through the sharded fabric.
 
     ``budget`` is *per NIC* (``None`` = infinite NICs: every eligible
@@ -73,12 +73,32 @@ def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
     shard) delay — Python ints here, an int32 scan carry there, identical
     bit patterns. Event shard stamps always use the *physical* placement
     home (matching ``decode_stream_events``).
+
+    ``migration`` (:class:`repro.paging.lifecycle.MigrationCfg`) mirrors
+    the jitted three-tier lifecycle (DESIGN.md §12) with the same phase
+    order and Python-int formulas: heat decay, migration grants out of the
+    leftover per-NIC capacity after prefetch grants (lowest-``seq``-wins
+    dedupe, cooldown re-check), promote-on-bytes-moved against the
+    start-of-step compressed snapshot, demand heat touch, the decompress
+    surcharge on cold issue candidates, capacity-driven coldest-first
+    demotion, and trend-driven proposals carried one step. Composes with
+    ``chaos``: node death re-homes the *dynamic* table and carried
+    proposals into the dead shard are dropped and pollution-counted.
     """
     if placement not in ("block", "interleave"):
         raise ValueError(f"unknown placement {placement!r}")
     if n_pages % n_shards:
         raise ValueError(f"n_pages={n_pages} not divisible by "
                          f"n_shards={n_shards}")
+    if migration is not None:
+        from ..paging.lifecycle import resolve
+        mig = resolve(migration)
+        if mig is not None:
+            near = max(near_delay, 1)
+            return _run_shardstep_mig(
+                schedules, n_pages, n_shards, placement, budget, ring_size,
+                near, max(far_delay, near), pw_max, h_size, n_split,
+                recorder, chaos, mig)
     schedules = [[int(p) for p in row] for row in schedules]
     S = len(schedules)
     T = len(schedules[0]) if S else 0
@@ -247,3 +267,282 @@ def run_shardstep(schedules, n_pages: int, n_shards: int, placement: str,
         resident_unused=[len(st.resident) for st in streams],
         inflight_at_end=[len(st.queue) for st in streams],
         demand_fetches=demand_hist, landed=landed_hist, issued=issued_hist)
+
+
+def _run_shardstep_mig(schedules, n_pages, n_shards, placement, budget,
+                       ring_size, near_delay, far_delay, pw_max, h_size,
+                       n_split, recorder, chaos, mig) -> LinkStepReport:
+    """The three-tier lifecycle twin loop (DESIGN.md §12).
+
+    Kept as a separate body so the pinned two-tier path above stays
+    byte-for-byte untouched. Phase order per step mirrors the jitted scan
+    exactly: node death → heat decay (+ compressed snapshot) → prefetch
+    landing grants ranked on *pre-grant* homes → migration grants out of
+    the leftover capacity (everything downstream sees post-grant homes) →
+    EWMA fold → serve every stream → promote on bytes moved + demand heat
+    touch → controller + issue (decompress surcharge) → coldest-first
+    demotion → next step's proposals from the updated trend.
+    """
+    schedules = [[int(p) for p in row] for row in schedules]
+    S = len(schedules)
+    T = len(schedules[0]) if S else 0
+    cap_inf = budget is None
+    rec = recorder.emit if recorder is not None else (lambda *a, **k: None)
+    home = lambda p: home_of(p, n_pages, n_shards, placement)
+    streams = [_Stream(LeapPrefetcher(h_size=h_size, n_split=n_split,
+                                      pw_max=pw_max),
+                       PrefetchStats(), set(), []) for _ in range(S)]
+    demand_hist, landed_hist, issued_hist = [], [], []
+    d_prev = [0] * n_shards
+
+    # Lifecycle tables — Python ints, the same formulas as the jitted
+    # ``tier_*`` transactions (``core.pool``) and ``paging.lifecycle``.
+    homeT = [home(p) for p in range(n_pages)]
+    compT = [False] * n_pages
+    heatT = [0] * n_pages
+    last_migT = [-(1 << 30)] * n_pages
+    pend: list = []                  # [(seq, stream, page, dest)] proposals
+    mig_counts = [0] * S
+    prom_counts = [0] * S
+    demoted_total = 0
+    M = mig.mig_per_stream
+
+    cz = est = None
+    dead_g = rehome_vec = None
+    if chaos is not None:
+        from .chaos import (EST_ONE, compile_chaos, est_init, est_step,
+                            rehome_shard)
+        cz = compile_chaos(chaos, n_steps=T, n_streams=S, n_shards=n_shards,
+                           n_pages=n_pages, placement=placement,
+                           base_budget=budget)
+        est = [[int(v) for v in row]
+               for row in est_init(S, n_shards, near_delay, far_delay)]
+        if cz["t_fail"] is not None:
+            dead_g = int(chaos.node_loss[0])
+            rehome_vec = [rehome_shard(p, dead_g, dead_g, n_shards)
+                          for p in range(n_pages)]
+
+    for t in range(T):
+        if cz is not None and cz["t_fail"] == t:
+            # Node death against the *dynamic* table: everything currently
+            # homed on the dying shard (migrated-in pages included) is
+            # invalidated as pollution and re-homed by the §9 rule.
+            dead_set = {p for p in range(n_pages) if homeT[p] == dead_g}
+            for s, st in enumerate(streams):
+                lost = st.resident & dead_set
+                st.stats.pollution += len(lost)
+                st.resident -= lost
+                kept = [e for e in st.queue if e.page not in dead_set]
+                dropped = [e for e in st.queue if e.page in dead_set]
+                st.stats.pollution += len(dropped)
+                st.queue[:] = kept
+                for p in sorted(lost) + [e.page for e in dropped]:
+                    rec("evict", t, s, page=p, shard=home(p))
+            for p in dead_set:
+                homeT[p] = rehome_vec[p]
+
+        heatT = [(h * 3) >> 2 for h in heatT]
+        comp_pre = list(compT)
+
+        # -- 1. prefetch landing grants: pre-grant homes rank the queue -----
+        if cz is None:
+            caps = [math.inf if cap_inf else max(0, budget - d)
+                    for d in d_prev]
+        else:
+            caps = [max(0, int(cz["budget"][t][g]) - d_prev[g])
+                    for g in range(n_shards)]
+        eligible = sorted((e.seq, s, e) for s, st in enumerate(streams)
+                          for e in st.queue if e.ready <= t)
+        landed = 0
+        landed_entries = []
+        for _, s, e in eligible:
+            g = homeT[e.page]
+            if caps[g] <= 0:
+                continue
+            caps[g] -= 1
+            st = streams[s]
+            st.queue.remove(e)
+            st.resident.add(e.page)
+            rec("land", t, s, page=e.page, shard=home(e.page), seq=e.seq)
+            if e.deadline < t:
+                st.stats.deferred += 1
+                rec("defer", t, s, page=e.page, shard=home(e.page), seq=e.seq)
+            landed_entries.append((s, e))
+            landed += 1
+        landed_hist.append(landed)
+
+        # -- 2. migration grants: leftover capacity, global seq order -------
+        seen: set = set()
+        for seq, s, page, dest in sorted(pend):
+            src = homeT[page]
+            if src == dest or t - last_migT[page] < mig.cooldown:
+                continue                     # revalidation against current
+            if page in seen:                 # lifecycle state, then lowest-
+                continue                     # seq-wins same-page dedupe
+            seen.add(page)
+            if dead_g is not None and dest == dead_g and t >= cz["t_fail"]:
+                # Carried proposal into a dead shard: wasted transfer.
+                streams[s].stats.pollution += 1
+                rec("evict", t, s, page=page, shard=home(page))
+                continue
+            if caps[src] <= 0:
+                continue
+            caps[src] -= 1
+            homeT[page] = dest
+            last_migT[page] = t
+            mig_counts[s] += 1
+            rec("migrate", t, s, page=page, shard=dest, seq=seq)
+        pend = []
+
+        if cz is not None:
+            # EWMA fold buckets by the *post-grant* home, like the jitted
+            # ``_home(landed_pages)`` read after the tier rebind.
+            obs_sum = [[0] * n_shards for _ in range(S)]
+            obs_cnt = [[0] * n_shards for _ in range(S)]
+            for s, e in landed_entries:
+                g = homeT[e.page]
+                obs_sum[s][g] += t - e.issued_at
+                obs_cnt[s][g] += 1
+            for s in range(S):
+                for g in range(n_shards):
+                    if obs_cnt[s][g]:
+                        est[s][g] = est_step(est[s][g], obs_sum[s][g],
+                                             obs_cnt[s][g])
+
+        # -- 3. serve every stream (post-grant homes account demand) --------
+        d_t = [0] * n_shards
+        served = []
+        for s, st in enumerate(streams):
+            page = schedules[s][t]
+            st.stats.faults += 1
+            inflight = next((e for e in st.queue if e.page == page), None)
+            if page in st.resident:
+                st.stats.cache_hits += 1
+                st.stats.prefetch_hits += 1
+                st.resident.discard(page)
+                pf_hit, fetched = True, False
+                rec("hit", t, s, page=page, shard=home(page), pref=True)
+            elif inflight is not None:
+                st.queue.remove(inflight)
+                st.stats.cache_hits += 1
+                st.stats.prefetch_hits += 1
+                st.stats.partial_hits += 1
+                rec("partial", t, s, page=page, shard=home(page),
+                    seq=inflight.seq, pref=True)
+                if inflight.deadline < t:
+                    st.stats.deferred += 1
+                    rec("defer", t, s, page=page, shard=home(page),
+                        seq=inflight.seq)
+                d_t[homeT[page]] += 1
+                pf_hit, fetched = True, True
+            else:
+                st.stats.misses += 1
+                d_t[homeT[page]] += 1
+                pf_hit, fetched = False, True
+                rec("miss", t, s, page=page, shard=home(page))
+            served.append((page, pf_hit, fetched))
+
+        # -- 4. promote on bytes moved (vs start-of-step snapshot) + heat ---
+        if mig.compressed:
+            for s, e in landed_entries:
+                if comp_pre[e.page]:
+                    prom_counts[s] += 1
+                    rec("promote", t, s, page=e.page, shard=home(e.page))
+                compT[e.page] = False
+            for s, (page, _, fetched) in enumerate(served):
+                if fetched and 0 <= page < n_pages:
+                    if comp_pre[page]:
+                        prom_counts[s] += 1
+                        rec("promote", t, s, page=page, shard=home(page))
+                    compT[page] = False
+        for s, (page, _, _) in enumerate(served):
+            if 0 <= page < n_pages:
+                heatT[page] += mig.heat_access
+
+        # -- 5. controller + issue (decompress surcharge on cold pages) -----
+        issued_t = 0
+        for s, st in enumerate(streams):
+            page, pf_hit, _ = served[s]
+            my_shard = s % n_shards
+            grant_cap = None if cz is None else int(cz["grant"][t][s])
+            for k, cand in enumerate(st.prefetcher.on_fault(page, pf_hit)):
+                if cand < 0 or cand >= n_pages:
+                    continue
+                if cand in st.resident or any(e.page == cand
+                                              for e in st.queue):
+                    continue
+                full = len(st.queue) >= ring_size
+                over_grant = (grant_cap is not None and
+                              len(st.resident) + len(st.queue) >= grant_cap)
+                if full or over_grant:
+                    st.drops += 1
+                    rec("drop", t, s, page=cand, shard=home(cand))
+                    continue
+                g_c = homeT[cand]
+                base = near_delay if g_c == my_shard else far_delay
+                sur = (mig.decompress_delay
+                       if mig.compressed and compT[cand] else 0)
+                seq = (t * S + s) * pw_max + k
+                if cz is None:
+                    e = _Inflight(cand, t + base + sur, seq)
+                else:
+                    true_d = max(1, base * int(cz["dilation"][t][g_c])) + sur
+                    if chaos.adaptive_deadline:
+                        expect_d = max(1, (est[s][g_c] + EST_ONE // 2)
+                                       // EST_ONE)
+                    else:
+                        expect_d = base + sur
+                    e = _Inflight(cand, t + true_d, seq,
+                                  expect=t + expect_d, issued_at=t)
+                st.queue.append(e)
+                st.stats.prefetch_issued += 1
+                rec("issue", t, s, page=cand, shard=home(cand), seq=seq)
+                issued_t += 1
+        demand_hist.append(sum(d_t))
+        issued_hist.append(issued_t)
+
+        # -- 6. demote the coldest while over uncompressed capacity ---------
+        if mig.compressed:
+            n_uncomp = compT.count(False)
+            need = min(mig.demote_per_step,
+                       max(0, n_uncomp - mig.far_capacity))
+            if need > 0:
+                elig = [p for p in range(n_pages)
+                        if not compT[p] and heatT[p] <= mig.heat_cold
+                        and t - last_migT[p] >= mig.cooldown]
+                elig.sort(key=lambda p: heatT[p] * n_pages + p)
+                for p in elig[:need]:
+                    compT[p] = True
+                    last_migT[p] = t
+                    demoted_total += 1
+                    rec("demote", t, 0, page=p, shard=home(p))
+
+        # -- 7. propose next step's migrations from the updated trend -------
+        for s, st in enumerate(streams):
+            trend = st.prefetcher.current_trend
+            if trend is None or trend == 0:
+                continue
+            my_shard = s % n_shards
+            if dead_g is not None and my_shard == dead_g \
+                    and t >= cz["t_fail"]:
+                continue
+            page = schedules[s][t]
+            for j in range(M):
+                cand = page + trend * (pw_max + mig.lead + j)
+                if not 0 <= cand < n_pages:
+                    continue
+                if homeT[cand] == my_shard:
+                    continue
+                if t - last_migT[cand] < mig.cooldown:
+                    continue
+                pend.append(((t * S + s) * M + j, s, cand, my_shard))
+        d_prev = d_t
+
+    return LinkStepReport(
+        per_stream=[st.stats for st in streams],
+        drops=[st.drops for st in streams],
+        resident_unused=[len(st.resident) for st in streams],
+        inflight_at_end=[len(st.queue) for st in streams],
+        demand_fetches=demand_hist, landed=landed_hist, issued=issued_hist,
+        migrations=mig_counts, promotions=prom_counts,
+        demotions=demoted_total)

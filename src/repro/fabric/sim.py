@@ -91,6 +91,16 @@ class FabricScenario:
     # node loss drains the dead node's queued requests and resubmits them to
     # the surviving re-homed links, grants resize tenant cache capacity.
     chaos: object = None
+    # -- three-tier lifecycle (DESIGN.md §12) --------------------------------
+    # A repro.paging.lifecycle.MigrationCfg (or None / enabled=False: off,
+    # bit-exact two-tier behavior). On a multi-node fabric each tenant's
+    # trend proposes moving upcoming pages to its own home node; the move
+    # rides the page's *current* home NIC as a kind="migrate" request — the
+    # third, lowest arbitration class under per_tenant_qp — and re-homes the
+    # page only when the transfer completes. Continuous-clock analogue of
+    # the lock-step mirrors: sanity-checked, not bit-pinned (same stance as
+    # chaos above).
+    migration: object = None
 
 
 def _resolve_model(model):
@@ -103,7 +113,7 @@ class _FabricSim:
 
     def __init__(self, engine: EventEngine, n_nodes: int = 1,
                  n_pages: int = 0, placement: str = "block",
-                 far_factor: float = 1.0, recorder=None):
+                 far_factor: float = 1.0, recorder=None, migration=None):
         self.engine = engine
         self.links: dict[str, FabricLink] = {}
         # (cache id, page) -> _Transfer for every *tracked* in-flight fill
@@ -122,13 +132,24 @@ class _FabricSim:
         # is the partial hit (one fault, one demand event)
         self._waited: set = set()
         self.dead_node: int | None = None     # chaos node loss (DESIGN.md §9)
+        # §12 online migration: home_override is the event-engine analogue
+        # of the jitted pool's time-varying tier table — it rebinds a page's
+        # scheduling home when (and only when) a migrate transfer completes.
+        from ..paging.lifecycle import resolve
+        self.migration = resolve(migration)
+        self.home_override: dict[int, int] = {}
+        self.last_mig: dict[int, float] = {}    # hysteresis (submit-time claim)
+        self.migrations = 0                     # completed re-homes
+        self.dropped_migrations = 0             # dest died before completion
 
     def _sid(self, ten: Tenant) -> int:
         return self.stream_ids.get(id(ten), ten.rank)
 
     # -- multi-node routing (no-ops at n_nodes == 1) -------------------------
     def _node_of(self, page: int) -> int:
-        home = home_of(page, self.n_pages, self.n_nodes, self.placement)
+        home = self.home_override.get(int(page))
+        if home is None:
+            home = home_of(page, self.n_pages, self.n_nodes, self.placement)
         if self.dead_node is not None and home == self.dead_node:
             from .chaos import rehome_shard
             home = rehome_shard(
@@ -149,6 +170,13 @@ class _FabricSim:
                 continue
             tier = name.rsplit("@n", 1)[0]
             for req in self.links[name].drain():
+                if req.kind == "migrate":
+                    # §12: a queued move whose source NIC just died is moot
+                    # (the death rule already re-homed the page) — dropped
+                    # and counted, the engine analogue of the lock-step
+                    # twins' dead-shard migration drop
+                    self.dropped_migrations += 1
+                    continue
                 target = self.links[f"{tier}@n{self._node_of(req.page)}"]
                 target.submit(req)
 
@@ -269,6 +297,50 @@ class _FabricSim:
                 ten.name, cand, "prefetch", self._xfer_time(ten, cand),
                 lambda t_done, ten=ten, cand=cand, key=key, rec=rec:
                     self._prefetch_done(ten, cand, key, rec, t_done)))
+        self._maybe_migrate(ten, page, t_fault)
+
+    # -- §12 online migration (event-engine mirror) --------------------------
+    def _maybe_migrate(self, ten: Tenant, page: int, t_fault: float) -> None:
+        """Propose hot-ward moves from the tenant's trend (lock-step rule:
+        ``page + trend * (pw_max + lead + j)`` toward the tenant's home
+        node). A granted proposal becomes a kind="migrate" request on the
+        page's *current* home NIC — it only ever occupies capacity behind
+        demand and prefetch — and re-homes the page at completion."""
+        cfg = self.migration
+        if cfg is None or self.n_nodes <= 1:
+            return
+        trend = getattr(ten.prefetcher, "current_trend", None)
+        if not trend:
+            return
+        dest = int(ten.spec.home_node)
+        if self.dead_node is not None and dest == self.dead_node:
+            return                       # moving toward a dead node is moot
+        pw = int(getattr(ten.prefetcher, "pw_max", 0))
+        for j in range(cfg.mig_per_stream):
+            cand = int(page) + int(trend) * (pw + cfg.lead + j)
+            if not 0 <= cand < self.n_pages:
+                continue
+            if self._node_of(cand) == dest:
+                continue
+            if t_fault - self.last_mig.get(cand, -math.inf) < cfg.cooldown:
+                continue
+            # hysteresis claim at submit time: the cooldown stamp also
+            # dedupes concurrent proposals for the same page
+            self.last_mig[cand] = t_fault
+            self._link_for(ten, cand).submit(Request(
+                ten.name, cand, "migrate", self._xfer_time(ten, cand),
+                lambda t_done, ten=ten, cand=cand, dest=dest:
+                    self._migration_done(ten, cand, dest, t_done)))
+
+    def _migration_done(self, ten: Tenant, page: int, dest: int,
+                        t_done: float) -> None:
+        if self.dead_node is not None and dest == self.dead_node:
+            self.dropped_migrations += 1  # dest died while the move queued
+            return
+        self.home_override[page] = dest
+        self.migrations += 1
+        self._rec("migrate", int(t_done), self._sid(ten), page=page,
+                  shard=dest)
 
     def _finish_access(self, ten: Tenant, t_start: float,
                        latency: float) -> None:
@@ -374,7 +446,10 @@ def run_fabric(scenario: FabricScenario, recorder=None) -> FabricReport:
     sim = _FabricSim(engine, n_nodes=scenario.n_nodes,
                      n_pages=scenario.n_pages,
                      placement=scenario.placement,
-                     far_factor=scenario.far_factor, recorder=recorder)
+                     far_factor=scenario.far_factor, recorder=recorder,
+                     migration=scenario.migration)
+    if sim.migration is not None and scenario.n_nodes <= 1:
+        raise ValueError("migration needs a multi-node fabric (n_nodes > 1)")
     arb = scenario.arbitration or (
         "per_tenant_qp" if scenario.data_path == "isolated" else "fifo")
 
@@ -442,7 +517,13 @@ def run_fabric(scenario: FabricScenario, recorder=None) -> FabricReport:
                              link.queue_waits, 99))
                          if link.queue_waits else 0.0}
                   for tier, link in sim.links.items()}
-    return FabricReport(reports, makespan, link_stats, scenario.seed)
+    mig_summary = None
+    if sim.migration is not None:
+        mig_summary = {"migrations": sim.migrations,
+                       "dropped": sim.dropped_migrations,
+                       "rehomed_pages": len(sim.home_override)}
+    return FabricReport(reports, makespan, link_stats, scenario.seed,
+                        migration=mig_summary)
 
 
 def run_single_stream(trace, prefetcher, cache, model="rdma_lean",

@@ -154,6 +154,26 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--synthetic", action="store_true",
                     help="continuous engine: synthetic executor (PRNG K/V, "
                          "no model) — real scheduling + data path + pins")
+    # -- three-tier page lifecycle (DESIGN.md §12) ---------------------------
+    ap.add_argument("--migration", action="store_true",
+                    help="continuous engine: online hot/cold page migration "
+                         "(DESIGN.md §12). The Leap trend re-homes each "
+                         "stream's upcoming pages toward its shard between "
+                         "steps; re-homing steers budgets/deadlines/NIC "
+                         "accounting only (the data plane is unchanged, so "
+                         "all bit-identity pins keep holding). The report "
+                         "gains a per-tier residency section")
+    ap.add_argument("--compressed-tier", type=int, default=None,
+                    metavar="PAGES",
+                    help="continuous engine: cap the *uncompressed* far "
+                         "tier at PAGES; the coldest pages beyond it are "
+                         "demoted through the lossy int8 page codec (one "
+                         "roundtrip at demote time) and pay a decompress "
+                         "surcharge on promote. Implies --migration")
+    ap.add_argument("--mig-cooldown", type=int, default=16,
+                    help="with --migration: hysteresis window in steps — a "
+                         "page neither re-homes nor demotes again within "
+                         "this many steps of its last tier transition")
     ap.add_argument("--seed", type=int, default=0)
     return ap
 
@@ -167,6 +187,11 @@ def main(argv=None) -> dict:
     if args.chaos and not args.paged:
         ap.error("--chaos requires --paged (faults are injected into the "
                  "paged-KV sweep's fabric model)")
+    if (args.migration or args.compressed_tier is not None) \
+            and args.arrival == "batch":
+        ap.error("--migration/--compressed-tier need the continuous engine "
+                 "(--arrival constant|bursty|churn): the page lifecycle is "
+                 "driven between engine steps")
     if args.arrival != "batch":
         return _main_continuous(args)
     return _main_batch(args)
@@ -249,6 +274,13 @@ def _main_batch(args) -> dict:
 
 def _main_continuous(args) -> dict:
     """Continuous-batching path: request lifecycle over the serving engine."""
+    migration = None
+    if args.migration or args.compressed_tier is not None:
+        from repro.paging.lifecycle import MigrationCfg
+        migration = MigrationCfg(
+            cooldown=args.mig_cooldown,
+            compressed=args.compressed_tier is not None,
+            far_capacity=args.compressed_tier)
     scfg = ServeConfig(
         requests=args.requests,
         slots=args.slots if args.slots is not None else args.batch,
@@ -262,7 +294,8 @@ def _main_continuous(args) -> dict:
         attn_kernel=args.attn_kernel.replace("-", "_"),
         arrival=args.arrival,
         think_time=args.think_time, seed=args.seed, gang=args.gang,
-        pool_pages=args.pool_pages, trace=bool(args.trace))
+        pool_pages=args.pool_pages, trace=bool(args.trace),
+        migration=migration)
     executor = build_executor(None if args.synthetic else args.arch,
                               smoke=args.smoke, seed=args.seed)
     engine = ServingEngine(scfg, executor)

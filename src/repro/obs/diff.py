@@ -32,9 +32,11 @@ from collections import Counter
 
 from .trace import AGGREGATE_KINDS, DEMAND_KINDS, SUMMARY_KINDS
 
-#: Within-step comparison order = execution order of one lock step.
-_STEP_KIND_ORDER = ("land", "defer", "hit", "partial", "miss",
-                    "invalidate", "issue")
+#: Within-step comparison order = execution order of one lock step
+#: (migration grants happen in the wait phase, promote/demote between
+#: demand service and the next issue — DESIGN.md §12).
+_STEP_KIND_ORDER = ("land", "defer", "migrate", "hit", "partial", "miss",
+                    "invalidate", "promote", "demote", "issue")
 
 
 @dataclasses.dataclass(frozen=True)

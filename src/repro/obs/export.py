@@ -25,12 +25,12 @@ from .trace import Event, RequestPhase
 
 #: Track-time layout of one lock step: wait/land phase, then demand
 #: service, then issue. Fractions of ``step_us``.
-_PHASE = {"land": 0.0, "defer": 0.05, "hit": 0.3, "partial": 0.3,
-          "miss": 0.3, "invalidate": 0.55, "issue": 0.7,
-          "drop": 0.7, "evict": 0.9}
-_DUR = {"land": 0.25, "defer": 0.2, "hit": 0.2, "partial": 0.25,
-        "miss": 0.35, "invalidate": 0.1, "issue": 0.25,
-        "drop": 0.1, "evict": 0.1}
+_PHASE = {"land": 0.0, "defer": 0.05, "migrate": 0.15, "hit": 0.3,
+          "partial": 0.3, "miss": 0.3, "invalidate": 0.55, "promote": 0.6,
+          "demote": 0.65, "issue": 0.7, "drop": 0.7, "evict": 0.9}
+_DUR = {"land": 0.25, "defer": 0.2, "migrate": 0.1, "hit": 0.2,
+        "partial": 0.25, "miss": 0.35, "invalidate": 0.1, "promote": 0.05,
+        "demote": 0.05, "issue": 0.25, "drop": 0.1, "evict": 0.1}
 
 _STREAM_PID = 0
 _LINK_PID = 1

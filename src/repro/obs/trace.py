@@ -55,15 +55,19 @@ import dataclasses
 
 import numpy as np
 
-#: Every page-lifecycle transition, in rough lifecycle order.
+#: Every page-lifecycle transition, in rough lifecycle order. The tier
+#: lifecycle (DESIGN.md §12) adds ``migrate`` (home re-assignment granted
+#: on leftover link capacity), ``demote`` (page compressed into the cold
+#: tier) and ``promote`` (compressed page restored to the uncompressed far
+#: tier by bytes moving for it).
 KINDS = ("issue", "land", "defer", "drop", "hit", "partial", "miss",
-         "invalidate", "evict")
+         "invalidate", "evict", "migrate", "demote", "promote")
 
 #: Kinds that carry a demand page and are compared page-by-page.
 DEMAND_KINDS = ("hit", "partial", "miss", "invalidate")
 
 #: Kinds the jitted decoders can only count per (step, stream).
-AGGREGATE_KINDS = ("issue", "land", "defer")
+AGGREGATE_KINDS = ("issue", "land", "defer", "migrate", "demote", "promote")
 
 #: Kinds that cannot be placed in time host-side: per-stream run totals.
 SUMMARY_KINDS = ("drop", "evict")
@@ -185,8 +189,11 @@ def decode_stream_events(schedules, info, *, n_pages: int,
         decode calls into one global clock).
 
     Returns events in execution order: per step — ``land``/``defer``
-    aggregates first (the wait phase), then each stream's demand event
-    (``hit``/``partial``/``miss``, page-level), then ``issue`` aggregates.
+    aggregates first (the wait phase), then ``migrate`` grants, then each
+    stream's demand event (``hit``/``partial``/``miss``, page-level), then
+    ``promote``/``demote`` tier transitions, then ``issue`` aggregates.
+    The tier-lifecycle kinds are emitted only when the run carried
+    migration info (``info["migrated"]`` et al., DESIGN.md §12).
     """
     sched = np.asarray(schedules)
     if sched.ndim == 1:
@@ -198,6 +205,11 @@ def decode_stream_events(schedules, info, *, n_pages: int,
     issued = np.asarray(info["issued"]).reshape(S, T)
     landed = np.asarray(info["landed"]).reshape(S, T)
     deferred = np.asarray(info["deferred"]).reshape(S, T)
+    migrated = promoted = demoted = None
+    if "migrated" in info:
+        migrated = np.asarray(info["migrated"]).reshape(S, T)
+        promoted = np.asarray(info["promoted"]).reshape(S, T)
+        demoted = np.asarray(info["demoted"]).reshape(T)
     home = lambda p: home_of_host(p, n_pages, n_shards, placement)
 
     events = []
@@ -210,6 +222,11 @@ def decode_stream_events(schedules, info, *, n_pages: int,
             if deferred[s, t]:
                 events.append(Event("defer", step, s,
                                     count=int(deferred[s, t])))
+        if migrated is not None:
+            for s in range(S):
+                if migrated[s, t]:
+                    events.append(Event("migrate", step, s,
+                                        count=int(migrated[s, t])))
         for s in range(S):
             p = int(sched[s, t])
             if part[s, t]:
@@ -220,6 +237,16 @@ def decode_stream_events(schedules, info, *, n_pages: int,
                                     pref=bool(pref[s, t])))
             else:
                 events.append(Event("miss", step, s, page=p, shard=home(p)))
+        if migrated is not None:
+            for s in range(S):
+                if promoted[s, t]:
+                    events.append(Event("promote", step, s,
+                                        count=int(promoted[s, t])))
+            if demoted[t]:
+                # Demotion is a pool-wide capacity decision, not owned by
+                # any stream; both decoders attribute it to stream 0.
+                events.append(Event("demote", step, 0,
+                                    count=int(demoted[t])))
         for s in range(S):
             if issued[s, t]:
                 events.append(Event("issue", step, s,
@@ -339,7 +366,8 @@ def events_to_counts(events, n_streams: int) -> list[dict]:
     """
     out = [dict(hits=0, misses=0, partial_hits=0, prefetch_hits=0,
                 prefetch_issued=0, landed=0, deferred=0, ring_drops=0,
-                pollution=0, invalidated=0) for _ in range(n_streams)]
+                pollution=0, invalidated=0, migrations=0, demotions=0,
+                promotions=0) for _ in range(n_streams)]
     for e in events:
         c = out[e.stream]
         n = e.count
@@ -365,4 +393,10 @@ def events_to_counts(events, n_streams: int) -> list[dict]:
             c["pollution"] += n
         elif e.kind == "invalidate":
             c["invalidated"] += n
+        elif e.kind == "migrate":
+            c["migrations"] += n
+        elif e.kind == "demote":
+            c["demotions"] += n
+        elif e.kind == "promote":
+            c["promotions"] += n
     return out

@@ -1,0 +1,311 @@
+"""Three-tier page lifecycle policy: hot/cold classification + migration.
+
+DESIGN.md §12. The pool layer (:mod:`repro.core.pool`) owns the lifecycle
+*state* and transactions (``tier_init`` / ``tier_migrate`` / ``tier_demote``
+/ ``tier_promote``); this module owns the *policy* that drives them:
+
+* **Classification** rides the Leap trend detector (DESIGN.md §2): a page is
+  *hot-ward* when a stream's detected trend will reach it just beyond the
+  prefetch window (``page + trend * (pw_max + lead + j)``) — those are the
+  migration proposals. A page is *cold* when its decayed access heat
+  (``tier_touch`` / ``tier_heat_decay``) has drained to ``heat_cold`` —
+  those are the demotion victims when the uncompressed tier is over
+  capacity.
+* **Hysteresis** is a per-page cooldown: any tier transition stamps
+  ``last_mig``, and a page is neither proposed nor demoted again until
+  ``cooldown`` steps later — a page oscillating at the hot/cold boundary
+  migrates at most once per cooldown window (pinned in
+  ``tests/test_migration.py``).
+* **Arbitration** is the third, lowest class of the §5 demand-first per-NIC
+  budget (:func:`repro.core.pool.link_grants_sharded`): a granted proposal
+  re-homes the page toward its consumer out of capacity left after demand
+  and prefetch. Like chaos re-homing (§9), migration is *scheduling
+  metadata only* — the physical byte layout never moves, which is what
+  keeps the flat and shard_map data planes bit-equal across migration.
+
+Everything here is fixed-shape and order-independent so the jitted scan
+(:mod:`repro.paging.sharded_pool`) and the Python lock-step twins
+(:mod:`repro.fabric.shardstep` / ``linkstep``) can evaluate the same policy
+and land on bit-identical decisions. :class:`PageLifecycle` is the
+host-side NumPy mirror the continuous-batching serving engine drives
+between decode steps.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pool import page_home, tier_init
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationCfg:
+    """Static policy knobs of the three-tier lifecycle (jit-static).
+
+    Attributes:
+      enabled:         master switch; ``False`` (or passing ``None`` for the
+                       whole config) compiles the exact two-tier path.
+      mig_per_stream:  migration proposals per stream per step (``M``).
+      lead:            proposals target ``page + trend * (pw_max + lead + j)``
+                       for ``j < M`` — just beyond the prefetch window, so a
+                       migration granted next step re-homes the page before
+                       the window reaches it.
+      cooldown:        hysteresis window (steps): a page is neither proposed
+                       nor demoted until ``cooldown`` steps after its last
+                       tier transition.
+      compressed:      enable the compressed cold tier (demotions).
+      far_capacity:    max pages the *uncompressed* far tier holds; demotion
+                       triggers while the uncompressed population exceeds
+                       it. Required when ``compressed``.
+      demote_per_step: max demotions per step (``D``).
+      decompress_delay: extra arrival-delay steps charged on a prefetch of a
+                       compressed page (the promote-from-compressed cost,
+                       threaded into :func:`repro.core.pool.pool_issue`
+                       deadlines).
+      heat_access:     heat added per demand access of a page.
+      heat_cold:       demotion eligibility threshold (``heat <= heat_cold``).
+    """
+    enabled: bool = True
+    mig_per_stream: int = 2
+    lead: int = 1
+    cooldown: int = 16
+    compressed: bool = False
+    far_capacity: int | None = None
+    demote_per_step: int = 4
+    decompress_delay: int = 2
+    heat_access: int = 8
+    heat_cold: int = 0
+
+    def __post_init__(self):
+        if self.mig_per_stream < 1:
+            raise ValueError("mig_per_stream must be >= 1")
+        if self.lead < 1:
+            raise ValueError("lead must be >= 1")
+        if self.cooldown < 1:
+            raise ValueError("cooldown must be >= 1")
+        if self.compressed and self.far_capacity is None:
+            raise ValueError("compressed tier needs far_capacity")
+        if self.demote_per_step < 1:
+            raise ValueError("demote_per_step must be >= 1")
+        if self.decompress_delay < 0:
+            raise ValueError("decompress_delay must be >= 0")
+
+
+def resolve(migration: MigrationCfg | None) -> MigrationCfg | None:
+    """Normalize the config: a disabled config is the same as ``None`` —
+    both must compile the exact two-tier path (the off-flag reduction pin)."""
+    if migration is not None and not migration.enabled:
+        return None
+    return migration
+
+
+def propose_migrations(leap: dict, pages: jax.Array, homes_s: jax.Array,
+                       tier: dict, t: jax.Array, n_pages: int, pw_max: int,
+                       cfg: MigrationCfg):
+    """Per-stream migration proposals from the post-step Leap trend.
+
+    Proposals made at step ``t`` are granted at step ``t+1``'s grant phase
+    (they ride the scan carry), and within a step grants precede issues —
+    so ``lead >= 1`` guarantees the re-homed page is still outside the
+    prefetch window when the stream first issues for it near.
+
+    Args:
+      leap:    the *updated* batched controller state of this step
+               (``trend`` / ``has_trend`` per stream).
+      pages:   ``int32[S]`` this step's demand pages.
+      homes_s: ``int32[S]`` each stream's own shard (the migration dest).
+      tier:    lifecycle state (:func:`repro.core.pool.tier_init`).
+      t:       step clock.
+
+    Returns ``(mpages, mdest, mvalid, mseq)``, each ``[S, M]``. Validity:
+    the stream has a nonzero trend, the target is in range, not already
+    homed on the stream's shard, and outside its cooldown window. ``mseq``
+    is the global proposal order ``(t*S + s)*M + j`` (all distinct).
+    """
+    S = pages.shape[0]
+    M = cfg.mig_per_stream
+    js = jnp.arange(M, dtype=jnp.int32)
+    step = leap["trend"]
+    cand = (pages.astype(jnp.int32)[:, None]
+            + step[:, None] * (jnp.int32(pw_max + cfg.lead) + js)[None, :])
+    in_range = (cand >= 0) & (cand < n_pages)
+    p_safe = jnp.clip(cand, 0, n_pages - 1)
+    cool = (t - tier["last_mig"][p_safe]) >= cfg.cooldown
+    valid = (leap["has_trend"][:, None] & (step[:, None] != 0) & in_range
+             & (tier["home"][p_safe] != homes_s[:, None]) & cool)
+    sid = jnp.arange(S, dtype=jnp.int32)
+    seq = ((t * S + sid)[:, None] * M + js[None, :]).astype(jnp.int32)
+    dest = jnp.broadcast_to(homes_s[:, None], (S, M))
+    return p_safe, dest, valid, seq
+
+
+def revalidate_proposals(mpages: jax.Array, mdest: jax.Array,
+                         mvalid: jax.Array, mseq: jax.Array, tier: dict,
+                         t: jax.Array, cfg: MigrationCfg):
+    """Grant-phase re-validation + same-page dedupe of carried proposals.
+
+    Re-reads the *current* lifecycle state (a demotion or another grant may
+    have touched the page since propose time): still cross-shard, still
+    outside cooldown. Then the arbiter's lowest-``seq``-wins rule: of
+    several valid proposals for one page this step, only the lowest ``mseq``
+    survives (order-independent — the twins apply the same rule by sorted
+    order). Returns ``(mvalid', msrc)`` where ``msrc`` is each page's
+    current home (the NIC its move occupies).
+    """
+    msrc = tier["home"][mpages]
+    cool = (t - tier["last_mig"][mpages]) >= cfg.cooldown
+    valid = mvalid & (msrc != mdest) & cool
+    p = mpages.reshape(-1)
+    v = valid.reshape(-1)
+    s = mseq.reshape(-1)
+    loses = jnp.any((p[None, :] == p[:, None]) & v[None, :]
+                    & (s[None, :] < s[:, None]), axis=1)
+    return (v & ~loses).reshape(valid.shape), msrc
+
+
+def select_demotions(tier: dict, t: jax.Array, cfg: MigrationCfg):
+    """Capacity-driven demotion victims: the coldest eligible pages.
+
+    While the uncompressed population exceeds ``far_capacity``, up to
+    ``demote_per_step`` pages are demoted per step, coldest first —
+    eligible = uncompressed, ``heat <= heat_cold``, outside cooldown;
+    ordered by ``(heat asc, page asc)`` (the composite key
+    ``heat * n_pages + page`` is unique per page, so any argsort
+    tie-breaking yields the same order — the twins sort the same key).
+    Returns ``(pages int32[D], ok bool[D])`` with distinct pages where
+    ``ok``.
+    """
+    n_pages = tier["home"].shape[0]
+    D = cfg.demote_per_step
+    comp, heat = tier["comp"], tier["heat"]
+    n_uncomp = jnp.sum((~comp).astype(jnp.int32))
+    cool = (t - tier["last_mig"]) >= cfg.cooldown
+    eligible = ~comp & (heat <= cfg.heat_cold) & cool
+    key = jnp.where(eligible,
+                    heat * n_pages + jnp.arange(n_pages, dtype=jnp.int32),
+                    jnp.int32(_INT32_MAX))
+    order = jnp.argsort(key)[:D].astype(jnp.int32)
+    need = jnp.clip(n_uncomp - jnp.int32(cfg.far_capacity), 0, D)
+    ok = (jnp.arange(D, dtype=jnp.int32) < need) & eligible[order]
+    return order, ok
+
+
+# --------------------------------------------------------------------------
+# host-side mirror for the serving engine
+# --------------------------------------------------------------------------
+class PageLifecycle:
+    """NumPy mirror of the lifecycle the serving engine drives per step.
+
+    The continuous-batching engine runs decode steps on device but makes
+    admission/eviction decisions on host between steps; this class keeps the
+    lifecycle tables host-side with the *same* formulas as the jitted scan
+    (decay ``(h*3) >> 2``, cooldown hysteresis, coldest-first demotion) so
+    the residency report and the device-threaded ``home_map``/``comp_map``
+    stay one source of truth.
+
+    The serving path only demotes pages the caller reports as safe
+    (not hot-resident, not in flight), so no invalidation traffic is
+    needed: the lossy :func:`repro.runtime.compression.page_roundtrip` is
+    applied by the caller to the cold bytes of each returned victim, once,
+    at demote time.
+    """
+
+    def __init__(self, n_pages: int, n_shards: int, placement: str,
+                 cfg: MigrationCfg):
+        self.n_pages, self.n_shards, self.cfg = n_pages, n_shards, cfg
+        t0 = tier_init(n_pages, n_shards, placement)
+        self.home = np.asarray(t0["home"]).copy()
+        self.comp = np.zeros(n_pages, bool)
+        self.heat = np.zeros(n_pages, np.int64)
+        self.last_mig = np.full(n_pages, -(1 << 30), np.int64)
+        self.migrations = self.demotions = self.promotions = 0
+        self.t = 0
+
+    def begin_step(self) -> None:
+        self.heat = (self.heat * 3) >> 2
+        self.t += 1
+
+    def touch(self, pages) -> None:
+        for p in np.asarray(pages, np.int64).ravel():
+            if 0 <= p < self.n_pages:
+                self.heat[p] += self.cfg.heat_access
+
+    def migrate_toward(self, pages, dest: int) -> int:
+        """Re-home ``pages`` to shard ``dest`` (cooldown-gated). Returns the
+        number actually moved."""
+        n = 0
+        for p in np.asarray(pages, np.int64).ravel():
+            if not 0 <= p < self.n_pages or self.home[p] == dest:
+                continue
+            if self.t - self.last_mig[p] < self.cfg.cooldown:
+                continue
+            self.home[p] = dest
+            self.last_mig[p] = self.t
+            n += 1
+        self.migrations += n
+        return n
+
+    def promote(self, pages) -> int:
+        """Clear the compressed bit on pages whose bytes just moved
+        hot-ward. Returns the number that were compressed."""
+        n = 0
+        for p in np.asarray(pages, np.int64).ravel():
+            if 0 <= p < self.n_pages and self.comp[p]:
+                self.comp[p] = False
+                n += 1
+        self.promotions += n
+        return n
+
+    def demote_victims(self, safe_mask: np.ndarray | None = None) -> list[int]:
+        """Pick + demote this step's victims; returns their page ids so the
+        caller can round-trip the cold bytes. ``safe_mask`` (bool[n_pages])
+        additionally restricts eligibility (e.g. not hot-resident)."""
+        cfg = self.cfg
+        if not cfg.compressed:
+            return []
+        n_uncomp = int(np.sum(~self.comp))
+        need = min(cfg.demote_per_step, max(0, n_uncomp - cfg.far_capacity))
+        if need <= 0:
+            return []
+        eligible = (~self.comp & (self.heat <= cfg.heat_cold)
+                    & (self.t - self.last_mig >= cfg.cooldown))
+        if safe_mask is not None:
+            eligible &= safe_mask
+        cand = np.nonzero(eligible)[0]
+        cand = cand[np.argsort(self.heat[cand] * self.n_pages + cand)][:need]
+        for p in cand:
+            self.comp[p] = True
+            self.last_mig[p] = self.t
+        self.demotions += len(cand)
+        return [int(p) for p in cand]
+
+    def home_map(self) -> jax.Array:
+        return jnp.asarray(self.home, jnp.int32)
+
+    def comp_map(self) -> jax.Array:
+        return jnp.asarray(self.comp)
+
+    def report(self) -> dict:
+        """Per-tier residency + lifecycle counters (the serve.py report)."""
+        per_shard = [int(np.sum(self.home == g)) for g in range(self.n_shards)]
+        return {
+            "n_pages": self.n_pages,
+            "uncompressed": int(np.sum(~self.comp)),
+            "compressed": int(np.sum(self.comp)),
+            "per_shard": per_shard,
+            "migrations": self.migrations,
+            "demotions": self.demotions,
+            "promotions": self.promotions,
+        }
+
+
+def static_home_map(n_pages: int, n_shards: int, placement: str) -> jax.Array:
+    """The t=0 home table (the static placement formula, materialized)."""
+    return page_home(jnp.arange(n_pages, dtype=jnp.int32), n_pages, n_shards,
+                     placement)

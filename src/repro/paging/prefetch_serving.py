@@ -385,6 +385,9 @@ def stream_stats_at(state: dict, i: int) -> dict:
 
     ``state`` is the leading-``[n_streams]``-axis pytree returned by
     :func:`multi_stream_consume`; this slices out one stream's counters
-    without callers having to know the stacked layout.
+    without callers having to know the stacked layout. The pool-wide
+    ``tier`` table a migration-enabled run returns (DESIGN.md §12) has no
+    stream axis and is excluded from the slice.
     """
+    state = {k: v for k, v in state.items() if k != "tier"}
     return stream_stats(jax.tree.map(lambda x: x[i], state))

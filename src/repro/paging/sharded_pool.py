@@ -57,7 +57,12 @@ import numpy as np
 from repro.core.leap_jax import leap_step_batched
 from repro.core.pool import (NO_PAGE, PLACEMENTS, link_grants_sharded,
                              page_home, page_local, pool_invalidate,
-                             pool_issue, pool_wait)
+                             pool_issue, pool_wait, tier_demote,
+                             tier_heat_decay, tier_init, tier_migrate,
+                             tier_promote, tier_touch)
+from repro.paging.lifecycle import (MigrationCfg, propose_migrations,
+                                    resolve, revalidate_proposals,
+                                    select_demotions)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -221,7 +226,7 @@ def scatter_hot(hot, data, dst: jax.Array, mask: jax.Array):
 # the sharded consume scan
 # --------------------------------------------------------------------------
 def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
-                  sharded: bool, chaos=None):
+                  sharded: bool, chaos=None, migration=None):
     """Lock-step multi-stream consume over the (possibly sharded) cold pool.
 
     Generalizes the §5 budgeted scan (DESIGN.md §5 -> §7): per-step,
@@ -252,6 +257,36 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
     or estimator-driven, and issues capped by the elastic grant table. The
     estimator state ``est_q int32[S, G]`` rides the scan carry and is
     returned as ``info["est_q"]``.
+
+    ``migration`` (a static :class:`repro.paging.lifecycle.MigrationCfg`,
+    DESIGN.md §12) turns on the three-tier lifecycle: the page->home map
+    becomes the time-varying ``tier["home"]`` table riding the scan carry,
+    and each step grows the phases
+
+    * **heat decay** then, at the grant phase, **migration grants**: last
+      step's trend-driven proposals are re-validated (cooldown, still
+      cross-shard, lowest-seq-wins dedupe) and granted out of each source
+      NIC's capacity *left after every prefetch grant* — the third, lowest
+      §5 class (:func:`repro.core.pool.link_grants_sharded`). A grant
+      re-homes the page immediately, so this step's issues already see it
+      near. Like chaos re-homing, migration moves *scheduling metadata
+      only* — the data plane keeps gathering from the static physical
+      placement.
+    * **promote** after the wait: any landing or demand fetch of a
+      compressed page clears its compressed bit (counted against the
+      start-of-step snapshot, per stream); **heat touch** on the demand
+      pages.
+    * **issue** charges ``decompress_delay`` extra steps on candidates
+      whose cold bytes are compressed; after the issue, capacity-driven
+      **demotion** compresses the coldest eligible pages while the
+      uncompressed population exceeds ``far_capacity``, and the updated
+      trend proposes next step's migrations.
+
+    With chaos node loss, death re-homes the *dynamic* table (every page
+    currently homed on the dead shard, migrated-in pages included, is
+    invalidated and re-homed by the §9 rule) and carried proposals
+    targeting the dead shard are dropped and pollution-counted.
+    ``migration=None`` compiles the exact two-tier scan above.
     """
     from repro.paging.prefetch_serving import stream_init
 
@@ -264,6 +299,8 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
     stream_ids = jnp.arange(S, dtype=jnp.int32)
     gather = (functools.partial(_gather_fabric, n_pages=n_pages,
                                 fabric=fabric) if sharded else _gather_flat)
+
+    mig = resolve(migration)
 
     cz = None
     if chaos is not None:
@@ -280,6 +317,19 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
         dead = (jnp.asarray(cz["dead_pages"]) if t_fail is not None else None)
         est0 = jnp.asarray(est_init(S, G, fabric.near_delay,
                                     fabric.far_delay))
+
+    if mig is not None:
+        tier0 = tier_init(n_pages, G, fabric.placement)
+        M = mig.mig_per_stream
+        pend0 = (jnp.zeros((S, M), jnp.int32), jnp.zeros((S, M), jnp.int32),
+                 jnp.zeros((S, M), jnp.bool_), jnp.zeros((S, M), jnp.int32))
+        dead_g = rehome_vec = None
+        if cz is not None and cz["t_fail"] is not None:
+            from repro.fabric.chaos import rehome_shard
+            dead_g = int(chaos.node_loss[0])
+            rehome_vec = jnp.asarray(np.array(
+                [rehome_shard(p, dead_g, dead_g, G) for p in range(n_pages)],
+                np.int32))
 
     # payload_like trailing shapes are per-page, hence shard-invariant —
     # the local [pps, ...] slice seeds the same hot-buffer layout the full
@@ -301,6 +351,8 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
                           true_delay=true_delay, quota=quota)
 
     def body(carry, xs):
+        if mig is not None:
+            carry, tier, pend = carry[:-2], carry[-2], carry[-1]
         if cz is None:
             state, d_prev = carry                  # d_prev: int32[G]
         else:
@@ -309,7 +361,31 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
         meta, ring, hot = state["pool_meta"], state["ring"], state["hot"]
         now = ring["now"]                          # int32[S], == t
 
-        if cz is None:
+        if mig is not None:
+            # Dynamic scheduling home map. Chaos node death re-homes the
+            # *current* table (migrated-in pages included) by the §9 rule
+            # and invalidates everything homed on the dying shard; the data
+            # plane still gathers from the static physical placement.
+            if cz is not None and cz["t_fail"] is not None:
+                on_dead = tier["home"] == dead_g
+                kill = jnp.broadcast_to(t == cz["t_fail"],
+                                        (n_pages,)) & on_dead
+                all_pages = jnp.arange(n_pages, dtype=jnp.int32)
+                meta, ring = jax.vmap(
+                    lambda m, r: pool_invalidate(m, r, all_pages, kill))(
+                        meta, ring)
+                tier = dict(tier)
+                tier["home"] = jnp.where(kill, rehome_vec, tier["home"])
+            tier = tier_heat_decay(tier)
+            comp_pre = tier["comp"]                # start-of-step snapshot
+
+            def _home(x):
+                # Reads the *current* binding of ``tier``: the grant phase
+                # below rebinds it, so homes seen after the migration grant
+                # (demand accounting, issue delays) already reflect this
+                # step's grants — the twin mirrors this order.
+                return tier["home"][jnp.clip(x, 0, n_pages - 1)]
+        elif cz is None:
             def _home(x):
                 return page_home(x, n_pages, G, fabric.placement)
         else:
@@ -333,7 +409,45 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
                     lambda m, r: pool_invalidate(m, r, dead, kill))(meta, ring)
 
         # --- per-shard landing grants (leftover NIC budget, global seq) -----
-        if cz is not None:
+        if mig is not None:
+            # Prefetch grants rank against the pre-grant home map; granted
+            # migrations re-home immediately, so everything downstream
+            # (demand accounting, issue delays) sees the post-grant map.
+            mp, md, mv0, msq = pend
+            mv, msrc = revalidate_proposals(mp, md, mv0, msq, tier, t, mig)
+            if cz is not None and cz["t_fail"] is not None:
+                # Carried proposals that crossed the death step targeting
+                # the dead shard: dropped and pollution-counted (per
+                # proposing stream), like any other wasted transfer.
+                dead_hit = mv & (md == dead_g) & (t >= cz["t_fail"])
+                meta = dict(meta)
+                meta["n_pollution"] = meta["n_pollution"] + jnp.sum(
+                    dead_hit.astype(jnp.int32), axis=1)
+                mv = mv & ~dead_hit
+            if cz is not None:
+                caps = jnp.maximum(bud_t[t] - d_prev, 0)
+            elif budget is not None:
+                caps = jnp.maximum(jnp.int32(budget) - d_prev, 0)
+            else:
+                caps = None
+            homes_ring = _home(ring["page"])
+            if caps is None:
+                allowed = jnp.ones(ring["page"].shape, bool)
+                mig_ok = mv
+                pf_on_g = jnp.zeros((G,), jnp.int32)
+            else:
+                allowed, mig_ok = link_grants_sharded(
+                    ring, now, caps, homes_ring, msrc, mv, msq)
+                pf_on_g = jnp.zeros((G,), jnp.int32).at[
+                    jnp.clip(homes_ring.reshape(-1), 0, G - 1)].add(
+                        allowed.reshape(-1).astype(jnp.int32))
+            tier = tier_migrate(tier, mp.reshape(-1), md.reshape(-1),
+                                mig_ok.reshape(-1), t)
+            migrated_s = jnp.sum(mig_ok.astype(jnp.int32), axis=1)
+            mig_on_g = jnp.zeros((G,), jnp.int32).at[
+                jnp.clip(msrc.reshape(-1), 0, G - 1)].add(
+                    mig_ok.reshape(-1).astype(jnp.int32))
+        elif cz is not None:
             caps = jnp.maximum(bud_t[t] - d_prev, 0)
             allowed = link_grants_sharded(ring, now, caps, _home(ring["page"]))
         elif budget is None:
@@ -365,6 +479,28 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
         homes_d = _home(pages)
         d_t = jnp.zeros((G,), jnp.int32).at[homes_d].add(
             winfo["fetched"].astype(jnp.int32), mode="drop")
+        # --- promote on bytes moved + demand heat (DESIGN.md §12) -----------
+        if mig is not None:
+            if mig.compressed:
+                # Any landing or demand fetch of a compressed page promotes
+                # it; counted against the start-of-step snapshot so the
+                # per-stream attribution is order-independent (clearing the
+                # bit is idempotent).
+                lp = winfo["landed_pages"]
+                prom_land = (winfo["landed"]
+                             & comp_pre[jnp.clip(lp, 0, n_pages - 1)])
+                prom_dem = (winfo["fetched"]
+                            & comp_pre[jnp.clip(pages, 0, n_pages - 1)])
+                promoted_s = (jnp.sum(prom_land.astype(jnp.int32), axis=1)
+                              + prom_dem.astype(jnp.int32))
+                moved = jnp.concatenate([lp.reshape(-1), pages])
+                moved_ok = jnp.concatenate(
+                    [winfo["landed"].reshape(-1), winfo["fetched"]])
+                tier, _ = tier_promote(tier, moved, moved_ok, comp_pre)
+            else:
+                promoted_s = jnp.zeros((S,), jnp.int32)
+            tier = tier_touch(tier, pages, (pages >= 0) & (pages < n_pages),
+                              mig.heat_access)
         # --- controllers + globally ordered, distance-delayed issue ---------
         pref_feedback = winfo["prefetched_hit"] | winfo["partial_hit"]
         new_leap, cands, valid = leap_step_batched(
@@ -377,18 +513,28 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
         base = jnp.where(homes_c == homes_s[:, None],
                          jnp.int32(fabric.near_delay),
                          jnp.int32(fabric.far_delay))
+        if mig is not None and mig.compressed:
+            # Promote-from-compressed pays the codec: extra steps on top of
+            # the wire delay (dilation multiplies the wire only).
+            sur = (tier["comp"][jnp.clip(cands, 0, n_pages - 1)]
+                   .astype(jnp.int32) * jnp.int32(mig.decompress_delay))
+        else:
+            sur = None
         issued0 = meta["n_prefetch_issued"]
         if cz is None:
+            delay_v = base if sur is None else base + sur
             meta, ring = jax.vmap(_issue)(meta, ring, cands, val, now, seq,
-                                          base)
+                                          delay_v)
         else:
             true_delay = base * dil_t[t][homes_c]
+            if sur is not None:
+                true_delay = true_delay + sur
             if chaos.adaptive_deadline:
                 rows_c = jnp.broadcast_to(stream_ids[:, None], homes_c.shape)
                 eg = est_q[rows_c, homes_c]
                 deadline = jnp.maximum(1, (eg + EST_ONE // 2) // EST_ONE)
             else:
-                deadline = base
+                deadline = base if sur is None else base + sur
             # Elastic grant: cap the stream's unconsumed-resident +
             # in-flight footprint; issues beyond the cap are drops.
             res_unused = jnp.sum((meta["slot_page"] >= 0)
@@ -402,6 +548,19 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
         ring["now"] = now + 1
         issued_s = meta["n_prefetch_issued"] - issued0
         deferred_s = meta["n_deferred"] - deferred0
+        # --- demote the coldest + propose next step's migrations ------------
+        if mig is not None:
+            if mig.compressed:
+                dpages, dok = select_demotions(tier, t, mig)
+                tier = tier_demote(tier, dpages, dok, t)
+                demoted_t = jnp.sum(dok.astype(jnp.int32))
+            else:
+                demoted_t = jnp.int32(0)
+            mp2, md2, mv2, msq2 = propose_migrations(
+                new_leap, pages, homes_s, tier, t, n_pages, K, mig)
+            if cz is not None and cz["t_fail"] is not None:
+                mv2 = mv2 & ~((md2 == dead_g) & (t >= cz["t_fail"]))
+            pend = (mp2, md2, mv2, msq2)
         landed_s = jnp.sum(winfo["landed"].astype(jnp.int32), axis=1)
         # --- data plane: replay the copy plan (landings, then demand) -------
         src = jnp.concatenate(
@@ -422,13 +581,20 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
                 winfo["partial_hit"], winfo["fetched"], issued_s, landed_s,
                 deferred_s, d_t, jnp.sum(issued_s), jnp.sum(deferred_s))
         carry = ((state, d_t) if cz is None else (state, d_t, est_q))
+        if mig is not None:
+            carry = carry + (tier, pend)
+            outs = outs + (migrated_s, promoted_s, demoted_t, mig_on_g,
+                           pf_on_g)
         return carry, outs
 
     xs = (jnp.arange(T, dtype=jnp.int32), schedules.T)
     carry0 = ((state0, jnp.zeros((G,), jnp.int32)) if cz is None
               else (state0, jnp.zeros((G,), jnp.int32), est0))
-    final, (sums, hit, pref, part, fetched, issued, landed, deferred,
-            shard_d, link_i, link_def) = jax.lax.scan(body, carry0, xs)
+    if mig is not None:
+        carry0 = carry0 + (tier0, pend0)
+    final, outs = jax.lax.scan(body, carry0, xs)
+    (sums, hit, pref, part, fetched, issued, landed, deferred,
+     shard_d, link_i, link_def) = outs[:11]
     state = final[0]
     info = {"hit": hit.T, "pref_hit": pref.T, "partial_hit": part.T,
             "fetched": fetched.T, "issued": issued.T, "landed": landed.T,
@@ -438,13 +604,22 @@ def _consume_impl(cold, schedules: jax.Array, geom, fabric: ShardedPoolCfg,
             "link_prefetch_issued": link_i, "link_deferred": link_def}
     if cz is not None:
         info["est_q"] = final[2]                       # int32[S, G]
+    if mig is not None:
+        migd, promd, demd, mig_g, pf_g = outs[11:]
+        info["migrated"] = migd.T                      # [S, T]
+        info["promoted"] = promd.T                     # [S, T]
+        info["demoted"] = demd                         # [T]
+        info["mig_on_shard"] = mig_g                   # [T, G]
+        info["pf_on_shard"] = pf_g                     # [T, G]
+        state = dict(state, tier=final[len(final) - 2])
     return state, sums.T, info
 
 
-@functools.partial(jax.jit, static_argnames=("geom", "fabric", "chaos"))
-def _consume_flat(cold, schedules, geom, fabric, chaos=None):
+@functools.partial(jax.jit,
+                   static_argnames=("geom", "fabric", "chaos", "migration"))
+def _consume_flat(cold, schedules, geom, fabric, chaos=None, migration=None):
     return _consume_impl(cold, schedules, geom, fabric, sharded=False,
-                         chaos=chaos)
+                         chaos=chaos, migration=migration)
 
 
 _SHARD_MAP_CACHE: dict = {}
@@ -472,20 +647,22 @@ def cached_shard_map(key: tuple, make_fn, in_specs):
     return _SHARD_MAP_CACHE[key]
 
 
-def _consume_sharded_fn(mesh, geom, fabric: ShardedPoolCfg, chaos=None):
+def _consume_sharded_fn(mesh, geom, fabric: ShardedPoolCfg, chaos=None,
+                        migration=None):
     """The jitted shard_map consume for one topology (memoized)."""
     from jax.sharding import PartitionSpec as P
 
     return cached_shard_map(
-        (mesh, "consume", geom, fabric, chaos),
+        (mesh, "consume", geom, fabric, chaos, migration),
         lambda: functools.partial(_consume_impl, geom=geom, fabric=fabric,
-                                  sharded=True, chaos=chaos),
+                                  sharded=True, chaos=chaos,
+                                  migration=migration),
         (P("fabric"), P()))
 
 
 def sharded_multi_stream_consume(cold, schedules: jax.Array, geom,
                                  fabric: ShardedPoolCfg, mesh=None,
-                                 chaos=None):
+                                 chaos=None, migration=None):
     """Concurrent streams over a mesh-sharded cold pool.
 
     Args:
@@ -506,6 +683,16 @@ def sharded_multi_stream_consume(cold, schedules: jax.Array, geom,
       chaos: optional static :class:`repro.fabric.chaos.ChaosSpec` fault
         schedule (DESIGN.md §9). Adds ``info["est_q"] int32[S, n_shards]``
         (final Q8 deadline estimates). ``None`` = the clean fabric.
+      migration: optional static
+        :class:`repro.paging.lifecycle.MigrationCfg` (DESIGN.md §12) —
+        turns on the three-tier lifecycle (online migration under the
+        third §5 grant class, optionally a compressed cold tier). Adds
+        ``info`` keys ``migrated``/``promoted`` ``int32[S, T]``,
+        ``demoted int32[T]``, ``mig_on_shard``/``pf_on_shard``
+        ``int32[T, n_shards]`` (per-NIC migration / prefetch grants — the
+        demand-never-displaced witness), and the final lifecycle tables as
+        ``state["tier"]``. ``None`` (or ``enabled=False``) compiles the
+        exact two-tier path.
 
     Returns ``(state, data_sums, info)`` exactly like the §5 budgeted
     ``multi_stream_consume`` with additionally ``info["shard_demand_fetches"]
@@ -516,8 +703,9 @@ def sharded_multi_stream_consume(cold, schedules: jax.Array, geom,
         raise ValueError("sharded consume needs the async issue/wait ring "
                          "(geom.ring_size > 0)")
     check_fabric_topology(geom.n_pages, fabric, mesh)
+    migration = resolve(migration)
     if mesh is not None and fabric.n_shards > 1:
         placed = place_cold(cold, geom.n_pages, fabric)
-        return _consume_sharded_fn(mesh, geom, fabric,
-                                   chaos)(placed, schedules)
-    return _consume_flat(cold, schedules, geom, fabric, chaos)
+        return _consume_sharded_fn(mesh, geom, fabric, chaos,
+                                   migration)(placed, schedules)
+    return _consume_flat(cold, schedules, geom, fabric, chaos, migration)

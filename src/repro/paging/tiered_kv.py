@@ -242,12 +242,20 @@ def _chunk_sync(leap: dict, meta: dict, pages: jax.Array, geom: TieredKV):
 
 def _chunk_async(leap: dict, meta: dict, ring: dict, pages: jax.Array,
                  land_ok: jax.Array, seq: jax.Array, home_s: jax.Array,
-                 geom: TieredKV, fabric: ShardedPoolCfg):
+                 geom: TieredKV, fabric: ShardedPoolCfg, home_tab=None,
+                 comp_tab=None, mig_delay: int = 0):
     """One async chunk step for one stream: wait (land + serve the chunk's
     demands), controller, issue (mirrors :func:`stream_step_async`,
     metadata-only). ``home_s`` is the stream's home shard — candidates
     homed there get ``fabric.near_delay`` deadlines, cross-shard ones
-    ``fabric.far_delay`` (DESIGN.md §7; degenerate at one shard)."""
+    ``fabric.far_delay`` (DESIGN.md §7; degenerate at one shard).
+
+    ``home_tab`` (``int32[n_pages]``, the §12 lifecycle's time-varying home
+    map) replaces the static placement formula for deadline routing;
+    ``comp_tab`` (``bool[n_pages]``) adds the ``mig_delay`` decompress
+    surcharge to candidates sitting in the compressed cold tier (the
+    promote-from-compressed cost). Both ``None`` is the exact two-tier
+    path."""
     now = ring["now"]
     valid_d = pages >= 0
     deferred0 = meta["n_deferred"]
@@ -258,10 +266,17 @@ def _chunk_async(leap: dict, meta: dict, ring: dict, pages: jax.Array,
     fb = winfo["prefetched_hit"] | winfo["partial_hit"]
     leap, cands, cvalid = _leap_chunk(leap, pages, fb, valid_d, geom)
     cval = cvalid & (cands >= 0) & (cands < geom.n_pages)
-    homes_c = page_home(cands, geom.n_pages, fabric.n_shards,
-                        fabric.placement)
+    if home_tab is None:
+        homes_c = page_home(cands, geom.n_pages, fabric.n_shards,
+                            fabric.placement)
+    else:
+        homes_c = home_tab[jnp.clip(cands, 0, geom.n_pages - 1)]
     delay = jnp.where(homes_c == home_s, jnp.int32(fabric.near_delay),
                       jnp.int32(fabric.far_delay))
+    if comp_tab is not None:
+        delay = delay + jnp.where(
+            comp_tab[jnp.clip(cands, 0, geom.n_pages - 1)],
+            jnp.int32(mig_delay), jnp.int32(0))
     meta, ring = pool_issue(meta, ring, cands, cval, now, delay, seq=seq)
     ring = dict(ring)
     ring["now"] = now + 1
@@ -271,7 +286,8 @@ def _chunk_async(leap: dict, meta: dict, ring: dict, pages: jax.Array,
 
 
 def _sweep_fn(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
-              async_datapath: bool, fabric: ShardedPoolCfg, sharded: bool):
+              async_datapath: bool, fabric: ShardedPoolCfg, sharded: bool,
+              lifecycle: dict | None = None, mig_delay: int = 0):
     """Lock-step sweep over ``sched [n_chunks, S, chunk]``.
 
     ``fabric`` is always present: the single-link path is the degenerate
@@ -279,11 +295,24 @@ def _sweep_fn(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
     bit-exactly to the pre-§7 behavior). ``sharded=True`` means the
     function runs inside ``shard_map`` with ``cold`` leaves holding the
     local ``[pps, ...]`` home slice.
+
+    ``lifecycle`` (``{"home": int32[n_pages], "comp": bool[n_pages]}``, the
+    §12 tier maps the serving engine's :class:`PageLifecycle` maintains
+    between steps) reroutes *scheduling* — budget arbitration, near/far
+    deadlines (+``mig_delay`` on compressed pages), per-NIC demand
+    accounting — while the data plane keeps gathering from the static
+    placement (migration is scheduling metadata only, which is what keeps
+    the flat and shard_map planes bit-equal).
     """
     n_chunks, S, C = sched.shape
     G = fabric.n_shards
     stream_ids = jnp.arange(S, dtype=jnp.int32)
     homes_s = stream_homes(S, G)
+    home_tab = None if lifecycle is None else lifecycle["home"]
+    comp_tab = None if lifecycle is None else lifecycle.get("comp")
+    _homes = (lambda p: page_home(p, geom.n_pages, G, fabric.placement)) \
+        if home_tab is None else \
+        (lambda p: home_tab[jnp.clip(p, 0, geom.n_pages - 1)])
 
     def body(carry, pages):
         state, d_prev = carry                # pages: [S, C]; d_prev int32[G]
@@ -295,8 +324,7 @@ def _sweep_fn(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
                 # per-NIC leftover budget: shard g's demand traffic last
                 # chunk step comes off shard g's landing capacity
                 caps = jnp.maximum(jnp.int32(fabric.link_budget) - d_prev, 0)
-                homes_ring = page_home(ring["page"], geom.n_pages, G,
-                                       fabric.placement)
+                homes_ring = _homes(ring["page"])
                 ok = link_grants_sharded(ring, now, caps, homes_ring)
             else:
                 ok = jnp.ones(ring["page"].shape, bool)
@@ -307,7 +335,9 @@ def _sweep_fn(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
             seq = ((now * S + stream_ids)[:, None] * geom.pw_max
                    + jnp.arange(geom.pw_max, dtype=jnp.int32)[None, :])
             leap, meta, ring, slots, info, issued, deferred = jax.vmap(
-                functools.partial(_chunk_async, geom=geom, fabric=fabric))(
+                functools.partial(_chunk_async, geom=geom, fabric=fabric,
+                                  home_tab=home_tab, comp_tab=comp_tab,
+                                  mig_delay=mig_delay))(
                 leap, meta, ring, pages, ok, seq, homes_s)
             # copy plan: landings first, then demand fetches (internal order)
             src = jnp.concatenate(
@@ -334,7 +364,7 @@ def _sweep_fn(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
         state = {"leap": leap, "pool_meta": meta, "ring": ring, "hot": hot}
         cnt = lambda m: jnp.sum(m.astype(jnp.int32), axis=1)  # [S]
         d_t = cnt(info["fetched"])
-        homes_d = page_home(pages, geom.n_pages, G, fabric.placement)
+        homes_d = _homes(pages)
         d_t_shard = jnp.zeros((G,), jnp.int32).at[homes_d.reshape(-1)].add(
             info["fetched"].reshape(-1).astype(jnp.int32), mode="drop")
         outs = (cnt(info["hit"]), cnt(info["prefetched_hit"]),
@@ -354,15 +384,26 @@ def _sweep_fn(state: dict, cold: dict, sched: jax.Array, geom: TieredKV,
 
 
 _sweep_impl = jax.jit(_sweep_fn, static_argnames=("geom", "async_datapath",
-                                                  "fabric", "sharded"))
+                                                  "fabric", "sharded",
+                                                  "mig_delay"))
 
 def _sweep_sharded(mesh, geom: TieredKV, async_datapath: bool,
-                   fabric: ShardedPoolCfg):
+                   fabric: ShardedPoolCfg, with_lifecycle: bool = False,
+                   mig_delay: int = 0):
     """The jitted shard_map sweep for one topology (memoized through
     :func:`repro.paging.sharded_pool.cached_shard_map`: cold sharded over
-    the mesh's ``fabric`` axis, everything else replicated)."""
+    the mesh's ``fabric`` axis, everything else replicated — including the
+    §12 lifecycle maps, which only steer scheduling)."""
     from jax.sharding import PartitionSpec as P
 
+    if with_lifecycle:
+        return cached_shard_map(
+            (mesh, "tiered_sweep_mig", geom, async_datapath, fabric,
+             mig_delay),
+            lambda: lambda state, cold, sched, lifecycle: _sweep_fn(
+                state, cold, sched, geom, async_datapath, fabric, True,
+                lifecycle, mig_delay),
+            (P(), P("fabric"), P(), P()))
     return cached_shard_map(
         (mesh, "tiered_sweep", geom, async_datapath, fabric),
         lambda: functools.partial(_sweep_fn, geom=geom,
@@ -375,7 +416,9 @@ def tiered_sweep(state: dict, cold: dict, page_rows: jax.Array,
                  geom: TieredKV, *, async_datapath: bool = False,
                  link_budget: int | None = None,
                  fabric: ShardedPoolCfg | None = None,
-                 mesh=None) -> tuple[dict, dict]:
+                 mesh=None, home_map: jax.Array | None = None,
+                 comp_map: jax.Array | None = None,
+                 decompress_delay: int = 0) -> tuple[dict, dict]:
     """Sweep every stream's context pages through its hot pool, chunked.
 
     Args:
@@ -402,6 +445,17 @@ def tiered_sweep(state: dict, cold: dict, page_rows: jax.Array,
              ``cold`` and cross-shard chunk copies riding ``lax.ppermute``
              ring rotations. Without a mesh the same fabric scheduling
              model runs against the local cold pool (bit-identical).
+      home_map: optional ``int32[n_pages]`` time-varying page→shard map
+             (DESIGN.md §12, e.g. :meth:`PageLifecycle.home_map`): budget
+             arbitration, near/far prefetch deadlines and per-NIC demand
+             accounting read it instead of the static placement formula.
+             The data plane still gathers from the static placement —
+             migration is scheduling metadata only. ``None`` (default) is
+             the exact pre-§12 path.
+      comp_map: optional ``bool[n_pages]`` compressed-tier membership;
+             prefetch candidates sitting compressed pay ``decompress_delay``
+             extra chunk steps on their arrival deadline (the
+             promote-from-compressed cost).
 
     Returns ``(state, info)`` with per-stream ``int32[S, n_chunks]`` counts
     ``hit`` / ``pref_hit`` / ``partial_hit`` / ``fetched`` / ``issued`` /
@@ -437,12 +491,26 @@ def tiered_sweep(state: dict, cold: dict, page_rows: jax.Array,
         [page_rows.astype(jnp.int32),
          jnp.full((S, pad), NO_PAGE, jnp.int32)], axis=1)
     sched = sched.reshape(S, n_chunks, C).transpose(1, 0, 2)
+    lifecycle = None
+    if home_map is not None or comp_map is not None:
+        if home_map is None:
+            home_map = page_home(jnp.arange(geom.n_pages, dtype=jnp.int32),
+                                 geom.n_pages, fabric.n_shards,
+                                 fabric.placement)
+        lifecycle = {"home": jnp.asarray(home_map, jnp.int32)}
+        if comp_map is not None:
+            lifecycle["comp"] = jnp.asarray(comp_map, bool)
     if mesh is not None and fabric.n_shards > 1:
         placed = place_cold(cold, geom.n_pages, fabric)
+        if lifecycle is not None:
+            return _sweep_sharded(mesh, geom, async_datapath, fabric,
+                                  with_lifecycle=True,
+                                  mig_delay=int(decompress_delay))(
+                state, placed, sched, lifecycle)
         return _sweep_sharded(mesh, geom, async_datapath, fabric)(
             state, placed, sched)
     return _sweep_impl(state, cold, sched, geom, async_datapath, fabric,
-                       False)
+                       False, lifecycle, int(decompress_delay))
 
 
 def tiered_slot_table_local(state: dict, page_rows: jax.Array
@@ -557,7 +625,10 @@ def tiered_decode_step(state: dict, cold: dict, q: jax.Array,
                        geom: TieredKV, *, async_datapath: bool = False,
                        link_budget: int | None = None,
                        fabric: ShardedPoolCfg | None = None, mesh=None,
-                       attn_kernel: str | bool = False):
+                       attn_kernel: str | bool = False,
+                       home_map: jax.Array | None = None,
+                       comp_map: jax.Array | None = None,
+                       decompress_delay: int = 0):
     """One tiered decode step: demand-sweep the context, attend over hot.
 
     ``attn_kernel`` is any :data:`ATTN_KERNEL_MODES` selector (or the
@@ -567,7 +638,9 @@ def tiered_decode_step(state: dict, cold: dict, q: jax.Array,
     state, info = tiered_sweep(state, cold, page_rows, geom,
                                async_datapath=async_datapath,
                                link_budget=link_budget, fabric=fabric,
-                               mesh=mesh)
+                               mesh=mesh, home_map=home_map,
+                               comp_map=comp_map,
+                               decompress_delay=decompress_delay)
     out, ok = tiered_attention(q, state, page_rows, lengths,
                                attn_kernel=attn_kernel)
     return state, out, info, ok

@@ -1,12 +1,27 @@
-"""Int8 gradient compression with error feedback (for DCN-bound all-reduce).
+"""Int8 codecs: error-feedback gradient compression + the stateless page codec.
 
-Multi-pod training pays the pod-axis all-reduce over DCN (~25 GB/s/host vs
-~50 GB/s/link ICI). Quantizing grads to int8 with per-leaf scales cuts that
-term 4x (fp32) / 2x (bf16); the quantization residual is carried into the
-next step (error feedback), which keeps SGD-style convergence — validated in
-tests on a quadratic + the tiny-LM integration run. Off by default; the
-launcher enables it with ``--grad-compression int8`` when the roofline says
-the collective term dominates (see EXPERIMENTS.md §Perf).
+Two codecs share the int8-with-scale quantization scheme but serve different
+subsystems, and the split matters (DESIGN.md §12.3):
+
+* **Gradient path** (:func:`compress_int8` / :func:`compressed_psum`) —
+  multi-pod training pays the pod-axis all-reduce over DCN (~25 GB/s/host vs
+  ~50 GB/s/link ICI). Quantizing grads to int8 with per-leaf scales cuts that
+  term 4x (fp32) / 2x (bf16); the quantization residual is carried into the
+  next step (**error feedback**), which keeps SGD-style convergence —
+  validated in tests on a quadratic + the tiny-LM integration run. Off by
+  default; the launcher enables it with ``--grad-compression int8`` when the
+  roofline says the collective term dominates (see DESIGN.md §12.3 and the
+  README benchmark table).
+* **Page codec** (:func:`compress_page` / :func:`decompress_page`) — the
+  *stateless* backing store of the compressed cold tier (DESIGN.md §12): one
+  int8 payload + one f32 scale per page, **no error feedback**. Pages are
+  read back many times and out of order, so there is no "next step" to carry
+  a residual into — the codec must be a pure function of the page bytes.
+  Reconstruction error is bounded by ``scale/2`` per element and a
+  compress→decompress→compress round trip is idempotent (pinned in
+  ``tests/test_page_codec.py``); what the lifecycle pays instead of accuracy
+  is *latency* — promoting a compressed page charges ``decompress_delay``
+  extra steps on its ``pool_issue`` deadline.
 """
 
 from __future__ import annotations
@@ -30,6 +45,42 @@ def compress_int8(g: jax.Array, err: jax.Array):
 
 def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
     return q.astype(jnp.float32) * scale
+
+
+# ---- stateless page codec (compressed cold tier, DESIGN.md §12) -------------
+def compress_page(page: jax.Array):
+    """Quantize one page's payload to ``(q int8, scale f32 scalar)``.
+
+    Stateless by design (no error feedback — see module docstring): the
+    same page bytes always produce the same ``(q, scale)``, whatever was
+    compressed before. ``scale = max|page|/127 + 1e-12``, so no element
+    clips and every element reconstructs within ``scale/2``. Works on any
+    float or integer payload dtype (bf16/f32 pinned in
+    ``tests/test_page_codec.py``).
+    """
+    pf = page.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(pf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(pf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_page(q: jax.Array, scale: jax.Array, dtype=jnp.float32
+                    ) -> jax.Array:
+    """Inverse of :func:`compress_page` up to the ``scale/2`` bound."""
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def page_roundtrip(page: jax.Array) -> jax.Array:
+    """Compress + decompress one page in place (same shape and dtype).
+
+    This is what demotion to the compressed tier does to the cold bytes
+    (DESIGN.md §12.3): the lossy round trip is applied *once, at demote
+    time*, so every later reader — flat reference and tiered path alike —
+    sees the same post-roundtrip bytes and the §6.4 bit-identity pin keeps
+    holding with the compressed tier enabled.
+    """
+    q, scale = compress_page(page)
+    return decompress_page(q, scale, dtype=page.dtype)
 
 
 def compressed_psum(grads, err_state, axis_name: str):

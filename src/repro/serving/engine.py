@@ -102,6 +102,16 @@ class ServeConfig:
     gang: bool = False
     pool_pages: int | None = None
     trace: bool = False
+    #: three-tier page lifecycle (DESIGN.md §12): a
+    #: repro.paging.lifecycle.MigrationCfg, or None / enabled=False for the
+    #: exact two-tier engine. The host-side PageLifecycle mirror runs
+    #: between steps: trend-driven hot-ward migration re-homes pages toward
+    #: their consumer's shard (scheduling only — budgets, deadlines, NIC
+    #: accounting), and with cfg.compressed the coldest pages round-trip
+    #: through the int8 page codec at demote time (stale hot copies
+    #: invalidated, so the §6.4 flat/tiered bit-identity pin keeps holding
+    #: — both sides read the same post-roundtrip cold bytes).
+    migration: object = None
 
     def arrival_process(self) -> ArrivalProcess:
         return ArrivalProcess(kind=self.arrival, think_time=self.think_time,
@@ -181,6 +191,10 @@ class ServingEngine:
         # each stream reset, so the §8 totals pin spans slot reuse
         self.counter_base = [dict.fromkeys(PINNED_COUNTERS, 0)
                              for _ in range(c.slots)]
+        from repro.paging.lifecycle import PageLifecycle, resolve
+        mig = resolve(c.migration)
+        self.lifecycle = None if mig is None else PageLifecycle(
+            n_pages, max(c.shards, 1), c.placement, mig)
         self.equiv_ok = True
         self.first_bad_step: int | None = None
         self.occupancy_peak = 0.0
@@ -211,6 +225,45 @@ class ServingEngine:
             lengths[req.slot] = req.prefilled + req.decoded - 1
         rows_j = jnp.asarray(rows)
         lengths_j = jnp.asarray(lengths)
+        sweep_kw = {}
+        lc = self.lifecycle
+        if lc is not None:
+            # drive the §12 lifecycle mirror between steps: decay + heat,
+            # trend-driven hot-ward migration, capacity demotion. All of it
+            # is scheduling metadata except demotion, which round-trips the
+            # victim's cold bytes once (both the flat reference and the
+            # tiered path then read the same post-roundtrip bytes, so the
+            # §6.4 pin holds) and drops any stale hot copy.
+            lc.begin_step()
+            lc.touch(rows[rows >= 0])
+            trend = np.asarray(self.tstate["leap"]["trend"])
+            has = np.asarray(self.tstate["leap"]["has_trend"])
+            G = max(self.cfg.shards, 1)
+            for req in decoding:
+                s = req.slot
+                if G <= 1 or not has[s] or not trend[s]:
+                    continue
+                frontier = int(req.pages[-1])
+                cands = [frontier + int(trend[s])
+                         * (self.geom.pw_max + lc.cfg.lead + j)
+                         for j in range(lc.cfg.mig_per_stream)]
+                moved = lc.migrate_toward(cands, s % G)
+                if moved and self.events is not None:
+                    self.events.append(Event("migrate", self._chunk_clock,
+                                             s, count=moved))
+            victims = lc.demote_victims()
+            if victims:
+                vict = jnp.asarray(victims, jnp.int32)
+                self.pool = _roundtrip_pages(self.pool, vict)
+                inv = jnp.broadcast_to(vict[None], (S, len(victims)))
+                self.tstate = tiered_invalidate(self.tstate, inv)
+                if self.events is not None:
+                    self.events.append(Event("demote", self._chunk_clock,
+                                             0, count=len(victims)))
+            sweep_kw["home_map"] = lc.home_map()
+            if lc.cfg.compressed:
+                sweep_kw["comp_map"] = lc.comp_map()
+                sweep_kw["decompress_delay"] = lc.cfg.decompress_delay
         cold = {"k": self.pool["k"][0], "v": self.pool["v"][0]}
         q = jax.random.normal(jax.random.PRNGKey(1000 + t),
                               (S, 1, self.hq, self.ex.head_dim), self.dtype)
@@ -219,7 +272,7 @@ class ServingEngine:
                 self.tstate, cold, rows_j, self.geom,
                 async_datapath=self.cfg.async_datapath,
                 link_budget=self.cfg.link_budget,
-                fabric=self.fabric, mesh=self.mesh)
+                fabric=self.fabric, mesh=self.mesh, **sweep_kw)
             sp.sync = info
         mode = normalize_attn_kernel(self.cfg.attn_kernel)
         with self.reg.span("tiered_attention") as sp:
@@ -277,6 +330,14 @@ class ServingEngine:
                 decoding.append(req)
                 if done:
                     finishers.append(req)
+        if written and self.lifecycle is not None:
+            # freshly written bytes are uncompressed by construction: clear
+            # the comp bit (else a recycled page would charge a decompress
+            # surcharge — and dodge its roundtrip — on stale state)
+            n_prom = self.lifecycle.promote([p for _, p in written])
+            if n_prom and self.events is not None:
+                self.events.append(Event("promote", self._chunk_clock, 0,
+                                         count=n_prom))
         if written:
             inv = np.full((self._inv_width,), -1, np.int32)
             inv[:len(written)] = [p for _, p in written]
@@ -377,7 +438,21 @@ class ServingEngine:
         if c.shards > 1:
             out["shards"] = c.shards
             out["placement"] = c.placement
+        if self.lifecycle is not None:
+            out["residency"] = self.lifecycle.report()
         return out
+
+
+@jax.jit
+def _roundtrip_pages(pool: dict, pages) -> dict:
+    """Apply the lossy int8 page round trip to layer 0's ``pages`` in
+    place — one scale per page (demotion to the compressed tier)."""
+    from repro.runtime.compression import page_roundtrip
+
+    def rt(buf):
+        return buf.at[0, pages].set(jax.vmap(page_roundtrip)(buf[0, pages]))
+
+    return {"k": rt(pool["k"]), "v": rt(pool["v"])}
 
 
 @jax.jit

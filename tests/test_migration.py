@@ -1,0 +1,350 @@
+"""Three-tier page lifecycle (DESIGN.md §12): mirrors, hysteresis, reductions.
+
+The §12 refactor threads one lifecycle — HBM hot pool -> far shard
+(uncompressed) -> compressed cold tier — through the jitted scan, both
+lock-step twins, the event engine, and the serving engine. These tests pin
+the contracts the layers share:
+
+* **Cross-validation** — per-stream ``hit/partial/deferred/drop`` counts
+  *plus* ``migrations``/``promotions`` (and pool-wide demotions) from the
+  jitted scan match the shardstep twin exactly, over budgets x placements,
+  and the §8 trace differ reports zero divergent events. The single-link
+  linkstep twin mirrors what survives at one shard: the compressed tier.
+* **Hysteresis** — an oscillating page (two streams pulling the same pages
+  toward different homes, offset in time) ping-pongs without a cooldown and
+  migrates exactly once per window with one; bounded migrations per window
+  in all cases; pinned identically in scan and twin.
+* **Off-flag reduction** — ``migration=None`` and
+  ``MigrationCfg(enabled=False)`` are the same compiled two-tier path:
+  bit-equal scan info, identical twin reports, identical engine and
+  serving reports (modulo wall-clock fields).
+* **Chaos composition** (``-m chaos``) — a migration targeting a dead
+  shard is dropped and pollution-counted; no migration grant ever occupies
+  a dead NIC; the twin stays divergence-free under node loss; the event
+  engine counts its dropped migrations.
+* **Event engine** — trend-driven migration on the continuous clock is
+  sanity-checked (not bit-pinned, same stance as chaos): it re-homes hot
+  working sets and cuts makespan where static placement pays far transfers
+  forever.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.fabric import FabricScenario, TenantSpec, run_fabric
+from repro.fabric.chaos import ChaosSpec
+from repro.fabric.linkstep import run_linkstep
+from repro.fabric.shardstep import run_shardstep
+from repro.obs.diff import assert_traces_equal
+from repro.obs.trace import TraceRecorder, decode_stream_events
+from repro.paging.lifecycle import MigrationCfg
+from repro.paging.prefetch_serving import PrefetchedStream, stream_stats_at
+from repro.paging.sharded_pool import (ShardedPoolCfg,
+                                       sharded_multi_stream_consume)
+from repro.serving import ServeConfig, ServingEngine, SyntheticExecutor
+
+N_PAGES, T = 64, 48
+POOL = jnp.arange(N_PAGES * 4, dtype=jnp.float32).reshape(N_PAGES, 4)
+GEOM = PrefetchedStream(n_pages=N_PAGES, n_slots=N_PAGES, page_elems=4,
+                        ring_size=8, pw_max=4)
+MIG = MigrationCfg(mig_per_stream=2, lead=1, cooldown=8)
+MIG_COMP = MigrationCfg(mig_per_stream=2, lead=1, cooldown=8,
+                        compressed=True, far_capacity=N_PAGES // 2,
+                        demote_per_step=2, decompress_delay=2)
+
+
+def _scheds() -> np.ndarray:
+    """Two strided walks that spend most steps off their home shard."""
+    t = np.arange(T)
+    return np.stack([(16 + 2 * t) % N_PAGES,
+                     (40 + 3 * t) % N_PAGES]).astype(np.int32)
+
+
+def _jitted_summary(st, info, i: int) -> dict:
+    """Jitted per-stream counts in the twin's stream_summary vocabulary."""
+    return dict(stream_stats_at(st, i),
+                migrations=int(np.asarray(info["migrated"])[i].sum()),
+                promotions=int(np.asarray(info["promoted"])[i].sum()))
+
+
+# --------------------------------------------------------------------------
+# jitted scan == lock-step twins, counts exact + zero divergent events
+# --------------------------------------------------------------------------
+class TestMigrationCrossValidation:
+    @pytest.mark.parametrize("placement", ["block", "interleave"])
+    @pytest.mark.parametrize("budget", [None, 2])
+    @pytest.mark.parametrize("cfg", [MIG, MIG_COMP],
+                             ids=["uncompressed", "compressed"])
+    def test_scan_matches_shardstep_twin(self, placement, budget, cfg):
+        scheds = _scheds()
+        fab = ShardedPoolCfg(n_shards=4, placement=placement,
+                             link_budget=budget, near_delay=1, far_delay=3)
+        st, sums, info = sharded_multi_stream_consume(
+            POOL, jnp.asarray(scheds), GEOM, fab, migration=cfg)
+        # the data plane is untouched by migration (scheduling metadata
+        # only): served bytes stay exact
+        np.testing.assert_allclose(np.asarray(sums),
+                                   np.asarray(POOL[scheds].sum(-1)))
+        rec = TraceRecorder()
+        rep = run_shardstep(scheds, N_PAGES, 4, placement, budget,
+                            ring_size=GEOM.ring_size, near_delay=1,
+                            far_delay=3, pw_max=GEOM.pw_max,
+                            h_size=GEOM.h_size, n_split=GEOM.n_split,
+                            recorder=rec, migration=cfg)
+        for i in range(scheds.shape[0]):
+            j = _jitted_summary(st, info, i)
+            r = rep.stream_summary(i)
+            assert {k: j[k] for k in r} == r, \
+                f"stream {i}, {placement}, budget {budget}"
+        assert int(np.asarray(info["demoted"]).sum()) == (rep.demotions or 0)
+        # §8: the trace differ spans migration — zero divergent events
+        assert_traces_equal(
+            decode_stream_events(scheds, info, n_pages=N_PAGES, n_shards=4,
+                                 placement=placement),
+            rec.events,
+            context=f"{placement}, budget {budget}")
+        # migration actually fired (the pins above are non-vacuous)
+        assert int(np.asarray(info["migrated"]).sum()) > 0
+
+    def test_single_link_twin_mirrors_compressed_tier(self):
+        """At one shard nothing is ever cross-shard, so migration proper
+        never fires; the linkstep twin mirrors what remains — demotion,
+        promotion, and the decompress surcharge."""
+        scheds = _scheds()
+        fab = ShardedPoolCfg(n_shards=1, placement="block", link_budget=3,
+                             near_delay=1, far_delay=1)
+        st, _, info = sharded_multi_stream_consume(
+            POOL, jnp.asarray(scheds), GEOM, fab, migration=MIG_COMP)
+        rep = run_linkstep(scheds, N_PAGES, budget=3,
+                           ring_size=GEOM.ring_size, arrival_delay=1,
+                           pw_max=GEOM.pw_max, h_size=GEOM.h_size,
+                           n_split=GEOM.n_split, migration=MIG_COMP)
+        for i in range(scheds.shape[0]):
+            j = _jitted_summary(st, info, i)
+            r = rep.stream_summary(i)
+            assert {k: j[k] for k in r} == r, f"stream {i}"
+        assert int(np.asarray(info["migrated"]).sum()) == 0
+        assert int(np.asarray(info["demoted"]).sum()) == rep.demotions > 0
+        assert int(np.asarray(info["promoted"]).sum()) > 0
+
+
+# --------------------------------------------------------------------------
+# classifier hysteresis: no ping-pong at the hot/cold boundary
+# --------------------------------------------------------------------------
+class TestHysteresis:
+    """Two streams walk the same pages toward different homes, offset by
+    ``LAG`` steps — each page is pulled one way, then the other, ``LAG``
+    steps later. Without hysteresis every page migrates twice; with
+    ``cooldown > LAG`` the second pull lands inside the cooldown window
+    and is refused."""
+
+    LAG = 12
+
+    def _run(self, cooldown: int):
+        t = np.arange(T)
+        scheds = np.stack([(8 + t) % N_PAGES,
+                           (8 + t - self.LAG) % N_PAGES]).astype(np.int32)
+        fab = ShardedPoolCfg(n_shards=4, placement="block", link_budget=6,
+                             near_delay=1, far_delay=3)
+        cfg = MigrationCfg(mig_per_stream=2, lead=1, cooldown=cooldown)
+        st, _, info = sharded_multi_stream_consume(
+            POOL, jnp.asarray(scheds), GEOM, fab, migration=cfg)
+        tier = st["tier"]
+        migs = int(np.asarray(info["migrated"]).sum())
+        stamped = int((np.asarray(tier["last_mig"]) > -(1 << 20)).sum())
+        rep = run_shardstep(scheds, N_PAGES, 4, "block", 6,
+                            ring_size=GEOM.ring_size, near_delay=1,
+                            far_delay=3, pw_max=GEOM.pw_max,
+                            h_size=GEOM.h_size, n_split=GEOM.n_split,
+                            migration=cfg)
+        twin_migs = sum(rep.stream_summary(i)["migrations"]
+                        for i in range(2))
+        return migs, stamped, twin_migs
+
+    def test_no_ping_pong_with_cooldown_beyond_lag(self):
+        migs, stamped, twin = self._run(cooldown=16)
+        assert migs == twin                      # pinned in scan AND twin
+        assert migs == stamped > 0               # each page at most once
+
+    def test_ping_pong_without_hysteresis(self):
+        """cooldown=2 < LAG: the opposing pull is granted — the oscillation
+        the cooldown exists to stop (and the bound still holds)."""
+        migs, stamped, twin = self._run(cooldown=2)
+        assert migs == twin
+        assert migs > stamped                    # some pages moved twice
+        assert migs <= stamped * (1 + (T - 1) // 2)   # bounded per window
+
+    def test_bounded_migrations_per_window(self):
+        for cd in (2, 8, 16):
+            migs, stamped, _ = self._run(cooldown=cd)
+            assert migs <= stamped * (1 + (T - 1) // cd), f"cooldown {cd}"
+
+
+# --------------------------------------------------------------------------
+# off-flag reduction: enabled=False IS the two-tier path
+# --------------------------------------------------------------------------
+class TestOffFlagReduction:
+    def test_scan_bit_exact(self):
+        scheds = jnp.asarray(_scheds())
+        fab = ShardedPoolCfg(n_shards=4, placement="interleave",
+                             link_budget=2, near_delay=1, far_delay=3)
+        st_off, sums_off, info_off = sharded_multi_stream_consume(
+            POOL, scheds, GEOM, fab, migration=None)
+        st_dis, sums_dis, info_dis = sharded_multi_stream_consume(
+            POOL, scheds, GEOM, fab, migration=MigrationCfg(enabled=False))
+        np.testing.assert_array_equal(np.asarray(sums_off),
+                                      np.asarray(sums_dis))
+        assert set(info_off) == set(info_dis)    # no lifecycle keys leak
+        for k in info_off:
+            np.testing.assert_array_equal(np.asarray(info_off[k]),
+                                          np.asarray(info_dis[k]),
+                                          err_msg=k)
+        assert "tier" not in st_off and "tier" not in st_dis
+
+    def test_twin_reports_identical(self):
+        scheds = _scheds()
+        for disabled in (None, MigrationCfg(enabled=False)):
+            rep = run_shardstep(scheds, N_PAGES, 4, "block", 2,
+                                ring_size=GEOM.ring_size, near_delay=1,
+                                far_delay=3, pw_max=GEOM.pw_max,
+                                h_size=GEOM.h_size, n_split=GEOM.n_split,
+                                migration=disabled)
+            summaries = [rep.stream_summary(i) for i in range(2)]
+            for s in summaries:
+                assert "migrations" not in s     # two-tier vocabulary
+            if disabled is None:
+                base = summaries
+            else:
+                assert summaries == base
+
+    def test_event_engine_reports_identical(self):
+        reps = [run_fabric(_engine_scenario(mig))
+                for mig in (None, MigrationCfg(enabled=False))]
+        assert all(r.migration is None for r in reps)
+        assert reps[0].makespan == reps[1].makespan
+        for a, b in zip(reps[0].tenants, reps[1].tenants):
+            assert a.__dict__ == b.__dict__
+
+    def test_serving_reports_identical(self):
+        off = _run_serving(None)
+        dis = _run_serving(MigrationCfg(enabled=False))
+        assert "residency" not in off
+        for k in off:
+            if k in ("wall_s", "token_latency"):  # wall-clock, not modeled
+                continue
+            same = (np.array_equal(off[k], dis[k])
+                    if isinstance(off[k], np.ndarray) else off[k] == dis[k])
+            assert same, k
+
+
+# --------------------------------------------------------------------------
+# event engine: continuous-clock mirror (sanity-checked, not bit-pinned)
+# --------------------------------------------------------------------------
+def _engine_scenario(mig, chaos=None) -> FabricScenario:
+    """Two tenants each camped on the *other* node's pages, under cache
+    pressure (capacity 16 << 64-page working set) — static placement pays
+    far_factor on every transfer, forever; migration re-homes the sets."""
+    def walk(lo, hi, n=600):
+        return (lo + (np.arange(n) % (hi - lo))).astype(np.int64)
+    tenants = [TenantSpec("a", walk(0, 64), policy="leap",
+                          cache_capacity=16, eviction="lru", home_node=1),
+               TenantSpec("b", walk(64, 128), policy="leap",
+                          cache_capacity=16, eviction="lru", home_node=0)]
+    return FabricScenario(tenants, n_nodes=2, n_pages=128,
+                          placement="block", far_factor=4.0,
+                          migration=mig, chaos=chaos, seed=1)
+
+
+class TestEventEngineMigration:
+    def test_migration_rehomes_and_cuts_makespan(self):
+        off = run_fabric(_engine_scenario(None))
+        on = run_fabric(_engine_scenario(MigrationCfg()))
+        assert off.migration is None
+        assert on.migration["migrations"] > 0
+        assert on.migration["rehomed_pages"] > 0
+        assert on.migration["dropped"] == 0
+        assert on.makespan < off.makespan
+
+    def test_single_node_fabric_rejected(self):
+        spec = TenantSpec("solo", np.arange(64), policy="leap",
+                          eviction="lru")
+        with pytest.raises(ValueError, match="multi-node"):
+            run_fabric(FabricScenario([spec], migration=MigrationCfg()))
+
+
+# --------------------------------------------------------------------------
+# chaos composition (DESIGN.md §9 x §12)
+# --------------------------------------------------------------------------
+@pytest.mark.chaos
+class TestChaosComposition:
+    SPEC = ChaosSpec(node_loss=(0, 20))
+
+    def test_migrations_to_dead_shard_dropped_and_pollution_counted(self):
+        scheds = _scheds()
+        fab = ShardedPoolCfg(n_shards=4, placement="block", link_budget=2,
+                             near_delay=1, far_delay=3)
+        st, _, info = sharded_multi_stream_consume(
+            POOL, jnp.asarray(scheds), GEOM, fab, chaos=self.SPEC,
+            migration=MIG)
+        mg = np.asarray(info["mig_on_shard"])
+        assert int(mg[:20, 0].sum()) > 0         # the NIC did carry moves
+        assert int(mg[20:, 0].sum()) == 0        # none after it died
+        st2 = sharded_multi_stream_consume(
+            POOL, jnp.asarray(scheds), GEOM, fab, chaos=self.SPEC)[0]
+        pol_mig = sum(stream_stats_at(st, i)["pollution"] for i in range(2))
+        pol_two = sum(stream_stats_at(st2, i)["pollution"] for i in range(2))
+        assert pol_mig > pol_two                 # dropped moves -> pollution
+
+    def test_twin_stays_divergence_free_under_node_loss(self):
+        scheds = _scheds()
+        fab = ShardedPoolCfg(n_shards=4, placement="block", link_budget=2,
+                             near_delay=1, far_delay=3)
+        st, _, info = sharded_multi_stream_consume(
+            POOL, jnp.asarray(scheds), GEOM, fab, chaos=self.SPEC,
+            migration=MIG)
+        rep = run_shardstep(scheds, N_PAGES, 4, "block", 2,
+                            ring_size=GEOM.ring_size, near_delay=1,
+                            far_delay=3, pw_max=GEOM.pw_max,
+                            h_size=GEOM.h_size, n_split=GEOM.n_split,
+                            chaos=self.SPEC, migration=MIG)
+        for i in range(scheds.shape[0]):
+            j = _jitted_summary(st, info, i)
+            r = rep.stream_summary(i)
+            assert {k: j[k] for k in r} == r, f"stream {i}"
+
+    def test_event_engine_counts_dropped_migrations(self):
+        rep = run_fabric(_engine_scenario(MigrationCfg(),
+                                          chaos=ChaosSpec(
+                                              node_loss=(1, 200))))
+        assert rep.migration["dropped"] > 0
+
+
+# --------------------------------------------------------------------------
+# serving engine: host lifecycle + compressed demotion under the §6.4 pin
+# --------------------------------------------------------------------------
+def _run_serving(mig) -> dict:
+    cfg = ServeConfig(requests=5, slots=2, prompt_len=8, gen=4, page_size=4,
+                      prefill_chunk=4, arrival="bursty", burst_len=2,
+                      think_time=1000.0, idle_time=3000.0, seed=3,
+                      trace=True, migration=mig)
+    return ServingEngine(cfg, SyntheticExecutor(n_kv_heads=2, head_dim=8,
+                                                seed=0)).run()
+
+
+class TestServingMigration:
+    def test_compressed_lifecycle_keeps_equivalence_pins(self):
+        """Lossy demotion mutates the cold bytes *before* the sweep, so the
+        flat reference and the tiered path read identical post-roundtrip
+        pages — §6.4 holds with the compressed tier on."""
+        rep = _run_serving(MigrationCfg(compressed=True, far_capacity=8,
+                                        demote_per_step=2,
+                                        decompress_delay=2, cooldown=8))
+        assert rep["tiered_equiv_ok"]
+        assert rep["trace_totals_ok"]
+        assert rep["requests_finished"] == 5
+        res = rep["residency"]
+        assert res["compressed"] > 0 and res["demotions"] > 0
+        assert (res["uncompressed"] + res["compressed"]) == res["n_pages"]

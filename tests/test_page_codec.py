@@ -1,0 +1,142 @@
+"""Stateless int8 page codec: the backing store of the compressed cold tier.
+
+DESIGN.md §12.3 splits the int8 codecs: the gradient path carries an
+error-feedback residual across steps, the page codec must be a *pure
+function* of the page bytes (pages are read back many times, out of
+order — there is no "next step" to carry a residual into). These tests
+pin the purity contract:
+
+* **Reconstruction bound** — every element reconstructs within
+  ``scale/2`` (round-to-nearest over ``scale = max|page|/127 + 1e-12``,
+  no element clips).
+* **Edge pages** — all-zero pages reconstruct exactly; a single outlier
+  sets the scale and still reconstructs within the bound (the flat
+  remainder pays the outlier's resolution — that is the lossy trade).
+* **Payload dtypes** — bf16 and f32 payloads both honor the bound
+  against their f32 view; the round trip preserves shape and dtype.
+* **Idempotence** — ``page_roundtrip`` is a projection: applying it
+  twice is bit-identical to applying it once (demotion re-compressing an
+  already-compressed page must not drift). Holds whenever the page
+  magnitude is not degenerate (``max|page| >= 1e-4`` keeps the ``1e-12``
+  scale epsilon below f32 resolution); the all-zero page is idempotent
+  trivially.
+
+The property-based section needs ``hypothesis`` (skipped when absent);
+the deterministic slice above it always runs.
+"""
+
+from __future__ import annotations
+
+import importlib.util
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime.compression import (compress_page, decompress_page,
+                                       page_roundtrip)
+
+RNG = np.random.default_rng(0)
+
+
+def _check_bound(page) -> None:
+    """|decompress(compress(page)) - page| <= scale/2, elementwise."""
+    q, scale = compress_page(jnp.asarray(page))
+    assert q.dtype == jnp.int8
+    out = np.asarray(decompress_page(q, scale))
+    ref = np.asarray(page, np.float32)
+    bound = float(scale) / 2 * (1 + 1e-5)       # f32 rounding headroom
+    np.testing.assert_array_less(np.abs(out - ref), bound + 1e-30)
+
+
+# --------------------------------------------------------------------------
+# deterministic slice (always runs)
+# --------------------------------------------------------------------------
+class TestPageCodecDeterministic:
+    def test_error_bound_gaussian_page(self):
+        _check_bound(RNG.normal(size=(128,)).astype(np.float32))
+
+    def test_all_zero_page_reconstructs_exactly(self):
+        q, scale = compress_page(jnp.zeros((64,), jnp.float32))
+        assert int(np.abs(np.asarray(q)).sum()) == 0
+        np.testing.assert_array_equal(np.asarray(decompress_page(q, scale)),
+                                      np.zeros(64, np.float32))
+
+    def test_single_outlier_sets_scale_and_stays_in_bound(self):
+        page = np.full(64, 1e-3, np.float32)
+        page[17] = 100.0
+        q, scale = compress_page(jnp.asarray(page))
+        # the outlier owns the top quantization level; no clipping
+        assert int(np.asarray(q)[17]) == 127
+        assert abs(float(scale) - 100.0 / 127.0) < 1e-6
+        _check_bound(page)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_payload_dtypes(self, dtype):
+        page = jnp.asarray(RNG.normal(size=(64,)), dtype)
+        _check_bound(page)
+        rt = page_roundtrip(page)
+        assert rt.shape == page.shape and rt.dtype == page.dtype
+
+    def test_double_compress_idempotent(self):
+        page = jnp.asarray(RNG.normal(size=(96,)), jnp.float32)
+        once = np.asarray(page_roundtrip(page))
+        twice = np.asarray(page_roundtrip(jnp.asarray(once)))
+        np.testing.assert_array_equal(once, twice)
+
+    def test_stateless_no_history_dependence(self):
+        """Same bytes -> same (q, scale), whatever was compressed before
+        (the gradient codec would fail this: its residual carries over)."""
+        a = jnp.asarray(RNG.normal(size=(32,)), jnp.float32)
+        b = jnp.asarray(RNG.normal(size=(32,)), jnp.float32)
+        q1, s1 = compress_page(a)
+        compress_page(b)                          # interleaved other page
+        q2, s2 = compress_page(a)
+        np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+        assert float(s1) == float(s2)
+
+    def test_batched_roundtrip_matches_per_page(self):
+        """vmap(page_roundtrip) over a victim batch == page-at-a-time —
+        the serving engine demotes victims as one batched roundtrip."""
+        pages = jnp.asarray(RNG.normal(size=(8, 16)), jnp.float32)
+        batched = np.asarray(jax.vmap(page_roundtrip)(pages))
+        single = np.stack([np.asarray(page_roundtrip(pages[i]))
+                           for i in range(8)])
+        np.testing.assert_array_equal(batched, single)
+
+
+# --------------------------------------------------------------------------
+# property-based slice (needs hypothesis)
+# --------------------------------------------------------------------------
+if importlib.util.find_spec("hypothesis") is not None:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    from hypothesis.extra import numpy as hnp
+
+    _payload = hnp.arrays(
+        np.float32, st.integers(min_value=1, max_value=64),
+        elements=st.floats(min_value=-1e4, max_value=1e4, width=32))
+
+    class TestPageCodecProperties:
+        @settings(deadline=None, max_examples=50)
+        @given(_payload)
+        def test_reconstruction_bound(self, page):
+            _check_bound(page)
+
+        @settings(deadline=None, max_examples=50)
+        @given(_payload)
+        def test_roundtrip_idempotent(self, page):
+            if 0.0 < np.max(np.abs(page)) < 1e-4:
+                page = page * (1e-4 / np.max(np.abs(page)))  # off-degenerate
+            once = np.asarray(page_roundtrip(jnp.asarray(page)))
+            twice = np.asarray(page_roundtrip(jnp.asarray(once)))
+            np.testing.assert_array_equal(once, twice)
+
+        @settings(deadline=None, max_examples=25)
+        @given(_payload)
+        def test_bf16_payload_bound(self, page):
+            _check_bound(jnp.asarray(page, jnp.bfloat16))
+else:                                             # pragma: no cover
+    def test_property_slice_needs_hypothesis():
+        pytest.importorskip("hypothesis")
